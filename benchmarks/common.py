@@ -1,0 +1,92 @@
+"""Shared benchmark plumbing: datasets, method registry, measurement."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+from repro.baselines import ExactMIPS, H2ALSH, PQBased, RangeLSH  # noqa: E402
+from repro.core import ProMIPS, overall_ratio, recall_at_k  # noqa: E402
+from repro.data.synthetic import DATASETS, paper_dataset, paper_queries  # noqa: E402
+
+# CPU-budget sizes for the harness (full proxy sizes live in data/synthetic.py;
+# EXPERIMENTS.md records the scaling). Paper m per dataset: §VIII-A4.
+BENCH_SETS = {
+    "netflix": dict(n=17770, m=6, page_bytes=4096),
+    "yahoo": dict(n=20000, m=8, page_bytes=4096),
+    "p53": dict(n=4000, m=6, page_bytes=65536),
+    "sift": dict(n=30000, m=10, page_bytes=4096),
+}
+N_QUERIES = 20
+SEEK_US = 50.0  # modeled 4 KB random-read latency for 'total time' (Fig 9)
+
+_cache = {}
+
+
+def load(name):
+    if name not in _cache:
+        spec = BENCH_SETS[name]
+        x = paper_dataset(name)[: spec["n"]]
+        q = paper_queries(name, N_QUERIES)
+        _cache[name] = (np.ascontiguousarray(x), q)
+    return _cache[name]
+
+
+def build_promips(name, c=0.9, p=0.5, progressive=True, **kw):
+    x, _ = load(name)
+    spec = BENCH_SETS[name]
+    t0 = time.time()
+    pm = ProMIPS.build(x, m=spec["m"], c=c, p=p, page_bytes=spec["page_bytes"],
+                       norm_strata=4 if progressive else 1, **kw)
+    pm.build_seconds = time.time() - t0
+    return pm
+
+
+def build_baseline(name, cls, **kw):
+    x, _ = load(name)
+    spec = BENCH_SETS[name]
+    m = cls(page_bytes=spec["page_bytes"], **kw)
+    m.build(x)
+    return m
+
+
+def promips_searcher(pm, progressive, k):
+    if progressive:
+        return lambda q: pm.search_host_progressive(q, k=k)
+    return lambda q: pm.search_host(q, k=k)
+
+
+def evaluate(search_fn, name, k):
+    """Run all queries; returns metrics dict (ratio, recall, pages, cpu_us)."""
+    x, queries = load(name)
+    from repro.baselines.exact import exact_topk
+    eids, escores = exact_topk(x, queries, k)
+    ratios, recalls, pages, times = [], [], [], []
+    for i in range(len(queries)):
+        t0 = time.perf_counter()
+        out = search_fn(queries[i])
+        dt = time.perf_counter() - t0
+        ids, scores, st = out
+        pg = st.pages if hasattr(st, "pages") else st["pages"]
+        ratios.append(overall_ratio(np.asarray(scores), escores[i]))
+        recalls.append(recall_at_k(np.asarray(ids), eids[i]))
+        pages.append(pg)
+        times.append(dt * 1e6)
+    return dict(ratio=float(np.mean(ratios)), recall=float(np.mean(recalls)),
+                pages=float(np.mean(pages)), cpu_us=float(np.mean(times)),
+                total_us=float(np.mean(times) + np.mean(pages) * SEEK_US),
+                guarantee_frac=float(np.mean([r >= 0.9 for r in ratios])))
+
+
+def emit(rows, out_list=None):
+    """Print the required ``name,us_per_call,derived`` CSV rows."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+        if out_list is not None:
+            out_list.append({"name": name, "us_per_call": us, "derived": derived})

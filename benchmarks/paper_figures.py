@@ -1,0 +1,185 @@
+"""One benchmark per paper table/figure (§VIII). Each function returns CSV
+rows (name, us_per_call, derived). Methods: ProMIPS (paper-faithful),
+ProMIPS+ (beyond-paper progressive/norm-adaptive), H2-ALSH, Range-LSH,
+PQ-based, exact scan."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import (BENCH_SETS, SEEK_US, build_baseline, build_promips,
+                     evaluate, load, promips_searcher)
+from repro.baselines import ExactMIPS, H2ALSH, PQBased, RangeLSH
+
+
+def _methods(name):
+    """(label, build_fn) — built lazily per dataset."""
+    return [
+        ("promips", lambda: ("pm", build_promips(name, progressive=False))),
+        ("promips+", lambda: ("pm+", build_promips(name, progressive=True))),
+        ("h2-alsh", lambda: ("bl", build_baseline(name, H2ALSH))),
+        ("range-lsh", lambda: ("bl", build_baseline(name, RangeLSH))),
+        ("pq-based", lambda: ("bl", build_baseline(name, PQBased, n_cells=32))),
+    ]
+
+
+_built = {}
+
+
+def _get(name, label):
+    key = (name, label)
+    if key not in _built:
+        for lbl, b in _methods(name):
+            if lbl == label:
+                _built[key] = b()
+                break
+    return _built[key]
+
+
+def _search_fn(name, label, k):
+    kind, obj = _get(name, label)
+    if kind == "pm":
+        return promips_searcher(obj, progressive=False, k=k)
+    if kind == "pm+":
+        return lambda q: obj.search_host_progressive(q, k=k)
+    return lambda q: obj.search(q, k=k)
+
+
+def fig4a_index_size():
+    """Fig. 4(a): index size per method per dataset (MB)."""
+    rows = []
+    for name in BENCH_SETS:
+        for label in ("promips", "promips+", "h2-alsh", "range-lsh", "pq-based"):
+            kind, obj = _get(name, label)
+            size = obj.meta.index_bytes if kind.startswith("pm") else obj.index_bytes
+            rows.append((f"fig4a/{name}/{label}", 0.0, f"index_mb={size/1e6:.2f}"))
+    return rows
+
+
+def fig4b_preprocessing_time():
+    """Fig. 4(b): pre-processing (build) time per method (s)."""
+    rows = []
+    for name in BENCH_SETS:
+        for label in ("promips", "promips+", "h2-alsh", "range-lsh", "pq-based"):
+            kind, obj = _get(name, label)
+            secs = obj.build_seconds
+            rows.append((f"fig4b/{name}/{label}", secs * 1e6,
+                         f"build_s={secs:.2f}"))
+    return rows
+
+
+def _accuracy_fig(metric):
+    rows = []
+    for name in BENCH_SETS:
+        for label in ("promips", "promips+", "h2-alsh", "range-lsh", "pq-based"):
+            for k in (10, 50, 100):
+                m = evaluate(_search_fn(name, label, k), name, k)
+                rows.append((f"{metric}/{name}/{label}/k{k}", m["cpu_us"],
+                             f"ratio={m['ratio']:.4f};recall={m['recall']:.3f};"
+                             f"pages={m['pages']:.0f};total_us={m['total_us']:.0f}"))
+    return rows
+
+
+def fig5_6_overall_ratio_recall():
+    """Figs. 5-6: overall ratio + recall vs k (plus pages/time, reused by 7-9)."""
+    return _accuracy_fig("fig5-9")
+
+
+def fig10_impact_of_c():
+    """Fig. 10: ProMIPS accuracy/efficiency vs approximation ratio c."""
+    rows = []
+    for name in ("netflix", "sift"):
+        x, queries = load(name)
+        for c in (0.7, 0.8, 0.9):
+            pm = build_promips(name, c=c, progressive=False)
+            m = evaluate(lambda q: pm.search_host(q, k=10), name, 10)
+            rows.append((f"fig10/{name}/c{c}", m["cpu_us"],
+                         f"ratio={m['ratio']:.4f};pages={m['pages']:.0f};"
+                         f"guarantee_frac={m['guarantee_frac']:.2f}"))
+    return rows
+
+
+def fig11_impact_of_p():
+    """Fig. 11: ProMIPS accuracy/efficiency vs guarantee probability p."""
+    rows = []
+    for name in ("netflix", "sift"):
+        for p in (0.3, 0.5, 0.7, 0.9):
+            pm = build_promips(name, p=p, progressive=False)
+            m = evaluate(lambda q: pm.search_host(q, k=10), name, 10)
+            rows.append((f"fig11/{name}/p{p}", m["cpu_us"],
+                         f"ratio={m['ratio']:.4f};pages={m['pages']:.0f};"
+                         f"guarantee_frac={m['guarantee_frac']:.2f}"))
+    return rows
+
+
+def table2_complexity_scaling():
+    """Table II: search cost scaling in n (ProMIPS O(d + n log n))."""
+    from repro.data.synthetic import mf_factors
+    rows = []
+    prev = None
+    for n in (2000, 8000, 32000):
+        x = mf_factors(n, 128, 24, decay=0.2, seed=0, norm_tail=0.3)
+        q = mf_factors(8, 128, 24, decay=0.2, seed=1)
+        from repro.core import ProMIPS
+        t0 = time.time()
+        pm = ProMIPS.build(x, m=8, norm_strata=4)
+        build_s = time.time() - t0
+        t0 = time.perf_counter()
+        for i in range(8):
+            pm.search_host_progressive(q[i], k=10)
+        us = (time.perf_counter() - t0) / 8 * 1e6
+        growth = "" if prev is None else f";time_growth={us/prev:.2f}x_for_4x_n"
+        prev = us
+        rows.append((f"table2/n{n}", us, f"build_s={build_s:.2f}{growth}"))
+    return rows
+
+
+def ablation_beyond_paper():
+    """Beyond-paper ladder: paper-faithful -> +norm-adaptive -> +CS-prune ->
+    +progressive (+norm-strata layout). The §Perf algorithmic story."""
+    rows = []
+    for name in ("netflix", "sift"):
+        pm1 = build_promips(name, progressive=False)   # paper layout
+        pm4 = build_promips(name, progressive=True)    # stratified layout
+        variants = [
+            ("paper", lambda q: pm1.search_host(q, k=10)),
+            ("+norm-adaptive", lambda q: pm1.search_host(q, k=10, norm_adaptive=True)),
+            ("+cs-prune", lambda q: pm1.search_host(q, k=10, norm_adaptive=True,
+                                                    cs_prune=True)),
+            ("+progressive+strata", lambda q: pm4.search_host_progressive(q, k=10)),
+        ]
+        for label, fn in variants:
+            m = evaluate(fn, name, 10)
+            rows.append((f"ablation/{name}/{label}", m["cpu_us"],
+                         f"ratio={m['ratio']:.4f};pages={m['pages']:.0f};"
+                         f"guarantee_frac={m['guarantee_frac']:.2f}"))
+    return rows
+
+
+def bench_device_throughput():
+    """Batched device-mode (jit) search throughput + Pallas kernel check."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    rows = []
+    name = "netflix"
+    pm = build_promips(name, progressive=True)
+    x, queries = load(name)
+    q = jnp.asarray(queries, jnp.float32)
+    ids, scores, stats = pm.search_progressive(q, k=10)   # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        ids, scores, stats = pm.search_progressive(q, k=10)
+        ids.block_until_ready()
+    us = (time.perf_counter() - t0) / (3 * len(queries)) * 1e6
+    rows.append((f"device/{name}/progressive", us,
+                 f"pages={float(np.mean(np.asarray(stats.pages))):.0f}"))
+    # kernel-level verification scan (interpret mode, CPU)
+    xr = jnp.asarray(x[:2048], jnp.float32)
+    valid = jnp.ones(2048, bool)
+    t0 = time.perf_counter()
+    top, idx = ops.mips_topk(xr, q[:4], valid, k=10)
+    top.block_until_ready()
+    us_k = (time.perf_counter() - t0) * 1e6 / 4
+    rows.append(("device/kernel/mips_topk_interp", us_k, "mode=interpret"))
+    return rows

@@ -1,0 +1,55 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: reproduces every evaluation axis of paper §VIII on
+shape-matched synthetic proxies (see benchmarks/common.py for sizes).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src")))
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+from benchmarks import common  # noqa: E402
+from benchmarks import paper_figures as F  # noqa: E402
+
+BENCHES = [
+    ("fig4a_index_size", F.fig4a_index_size),
+    ("fig4b_preprocessing_time", F.fig4b_preprocessing_time),
+    ("fig5-9_ratio_recall_pages_time", F.fig5_6_overall_ratio_recall),
+    ("fig10_impact_of_c", F.fig10_impact_of_c),
+    ("fig11_impact_of_p", F.fig11_impact_of_p),
+    ("table2_complexity_scaling", F.table2_complexity_scaling),
+    ("ablation_beyond_paper", F.ablation_beyond_paper),
+    ("device_throughput", F.bench_device_throughput),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument("--out", default="results/bench")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        rows = fn()
+        common.emit(rows)
+        sys.stdout.flush()
+        with open(os.path.join(args.out, f"{name}.json"), "w") as f:
+            json.dump([{"name": n, "us_per_call": u, "derived": d}
+                       for n, u, d in rows], f, indent=1)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

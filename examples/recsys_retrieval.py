@@ -1,0 +1,56 @@
+"""Matrix-factorization recommendation retrieval (paper §I use case):
+user vectors query a sharded item-factor corpus; ProMIPS returns
+probability-guaranteed top-10 items. Demonstrates the multi-shard search
+(shard_map) when more than one device is available.
+
+  PYTHONPATH=src python examples/recsys_retrieval.py
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python examples/recsys_retrieval.py   # sharded path
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.baselines.exact import exact_topk
+from repro.core import ProMIPS, overall_ratio, recall_at_k
+from repro.data.synthetic import mf_factors
+
+
+def main():
+    n_items, n_users, rank, d = 50_000, 32, 32, 128
+    items = mf_factors(n_items, d, rank, decay=0.15, seed=0, norm_tail=0.3)
+    users = mf_factors(n_users, d, rank, decay=0.15, seed=1)
+    eids, escores = exact_topk(items, users, 10)
+
+    n_dev = len(jax.devices())
+    if n_dev >= 2:
+        from repro.core.sharded import (build_sharded, device_put_sharded_index,
+                                        sharded_search)
+        mesh = jax.make_mesh((1, n_dev), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        sh = build_sharded(items, n_dev, m=8, c=0.9, p=0.7, norm_strata=4)
+        shd = device_put_sharded_index(sh, mesh)
+        ids, scores, pages = sharded_search(shd, users, 10, mesh,
+                                            budget=sh.meta.n_blocks)
+        label = f"sharded over {n_dev} devices"
+    else:
+        pm = ProMIPS.build(items, m=8, c=0.9, p=0.7, norm_strata=4)
+        ids, scores, stats = pm.search_progressive(users, k=10)
+        pages = np.sum(np.asarray(stats.pages))
+        label = "single device"
+
+    ids, scores = np.asarray(ids), np.asarray(scores)
+    ratios = [overall_ratio(scores[i], escores[i]) for i in range(n_users)]
+    recalls = [recall_at_k(ids[i], eids[i]) for i in range(n_users)]
+    print(f"recsys retrieval ({label}): {n_items} items, {n_users} users")
+    print(f"  ratio={np.mean(ratios):.4f} recall={np.mean(recalls):.3f} "
+          f"total_pages={int(pages)}")
+    print(f"  sample user 0 recommended items: {ids[0][:5].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Train a reduced LM for a few hundred steps with checkpoint/resume —
+exercises the trainer, AdamW, microbatching, and the fault-tolerance path.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    args = ap.parse_args()
+    ckpt = "/tmp/repro_train_lm_ckpt"
+    train_main([
+        "--arch", args.arch, "--reduced",
+        "--steps", str(args.steps), "--batch", "8", "--seq", "256",
+        "--microbatches", "2",
+        "--ckpt-dir", ckpt, "--ckpt-every", "50", "--log-every", "20",
+    ])
+    print(f"checkpoints in {ckpt}; rerun to resume from the latest step")
+
+
+if __name__ == "__main__":
+    main()

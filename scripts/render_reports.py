@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""Render §Dry-run and §Roofline tables in EXPERIMENTS.md from results/."""
+import glob
+import json
+import os
+import re
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def dryrun_table():
+    rows = ["| arch | shape | mesh | status | mem/chip (arg+temp) GB | HLO flops | collectives (top) | compile s |",
+            "|---|---|---|---|---|---|---|---|"]
+    recs = []
+    for f in glob.glob(f"{ROOT}/results/dryrun/*/*/*.json"):
+        recs.append(json.load(open(f)))
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]),
+                             r.get("multi_pod", False)))
+    for r in recs:
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {mesh} | {r['status']} | — | — | — | — |")
+            continue
+        mem = (r.get("argument_size_in_bytes", 0) + r.get("temp_size_in_bytes", 0)) / 1e9
+        coll = r.get("collective_bytes", {})
+        top = max(coll.items(), key=lambda kv: kv[1])[0] if coll else "-"
+        topv = coll.get(top, 0) / 1e9
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | ok | "
+            f"{r.get('argument_size_in_bytes',0)/1e9:.1f}+{r.get('temp_size_in_bytes',0)/1e9:.1f}"
+            f"={mem:.1f} | {r.get('hlo_flops',0):.2e} | {top} {topv:.1f}GB | "
+            f"{r.get('compile_s','-')} |")
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    skip = sum(1 for r in recs if r["status"].startswith("skipped"))
+    head = (f"\n**{len(recs)} cells: {ok} ok, {skip} annotated skips, "
+            f"{len(recs)-ok-skip} failures.**\n\n")
+    return head + "\n".join(rows) + "\n"
+
+
+def roofline_table():
+    rows = ["| arch | shape | t_comp s | t_mem s | t_coll s | dominant | useful-FLOP frac | bound_mfu | one-line fix for the dominant term |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    fixes = {
+        "compute": "raise arithmetic intensity (larger per-chip tiles, bf16 everywhere)",
+        "memory": "fuse attention/gating into the Pallas kernels; fewer microbatches",
+        "collective": "sequence-parallel TP (reduce-scatter), FSDP weight gather, EP all-to-all",
+    }
+    recs = []
+    for f in sorted(glob.glob(f"{ROOT}/results/roofline/*.json")):
+        recs.append(json.load(open(f)))
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    for r in recs:
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | {r['status']} | — | — | — |")
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"{r['dominant']} | {r['useful_flops_frac']:.2f} | "
+            f"{r['bound_mfu']:.3f} | {fixes[r['dominant']]} |")
+    return "\n" + "\n".join(rows) + "\n"
+
+
+def splice(text, start, end, payload):
+    pat = re.compile(re.escape(start) + r".*?" + re.escape(end), re.S)
+    return pat.sub(start + "\n" + payload + end, text)
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+    if os.path.isdir(f"{ROOT}/results/dryrun"):
+        text = splice(text, "<!-- DRYRUN_TABLE_START -->",
+                      "<!-- DRYRUN_TABLE_END -->", dryrun_table())
+    if os.path.isdir(f"{ROOT}/results/roofline"):
+        text = splice(text, "<!-- ROOFLINE_TABLE_START -->",
+                      "<!-- ROOFLINE_TABLE_END -->", roofline_table())
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md tables refreshed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from .exact import ExactMIPS, exact_topk
+from .h2_alsh import H2ALSH
+from .pq import PQBased
+from .range_lsh import RangeLSH
+
+__all__ = ["ExactMIPS", "exact_topk", "H2ALSH", "RangeLSH", "PQBased"]

@@ -1,0 +1,37 @@
+# The paper's primary contribution: probability-guaranteed c-AMIP search
+# with a lightweight (iDistance) index — ProMIPS, in JAX.
+from .chi2 import chi2_cdf, chi2_ppf, chi2_ppf_host
+from .conditions import (
+    compensation_radius,
+    condition_a,
+    condition_b,
+    condition_b_threshold,
+)
+from .dim_opt import optimized_projected_dimension, quick_probe_cost
+from .index import IndexArrays, IndexMeta, ProMIPSIndex, build_index
+from .metrics import overall_ratio, recall_at_k
+from .projections import make_projection, project
+from .promips import ProMIPS
+from .quick_probe import (
+    GroupTable,
+    build_group_table,
+    group_lower_bounds,
+    pack_codes,
+    pack_codes_np,
+    quick_probe,
+    unpack_bits,
+)
+from .search_device import SearchStats, search_batch
+from .search_host import HostSearcher, HostStats
+
+__all__ = [
+    "ProMIPS", "ProMIPSIndex", "IndexArrays", "IndexMeta", "build_index",
+    "chi2_cdf", "chi2_ppf", "chi2_ppf_host",
+    "condition_a", "condition_b", "condition_b_threshold", "compensation_radius",
+    "optimized_projected_dimension", "quick_probe_cost",
+    "make_projection", "project",
+    "GroupTable", "build_group_table", "group_lower_bounds",
+    "pack_codes", "pack_codes_np", "quick_probe", "unpack_bits",
+    "SearchStats", "search_batch", "HostSearcher", "HostStats",
+    "overall_ratio", "recall_at_k",
+]

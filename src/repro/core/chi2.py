@@ -1,0 +1,56 @@
+"""Chi-square CDF / inverse-CDF used by ProMIPS Conditions B and Test A.
+
+The paper's probability machinery (Lemma 2, Theorem 2, Formula 2/3) needs
+``Psi_m(x)`` — the CDF of the chi-square distribution with ``m`` degrees of
+freedom — and its inverse ``Psi_m^{-1}(p)``.
+
+``Psi_m(x) = P(m/2, x/2)`` where ``P`` is the regularized lower incomplete
+gamma function, available in-graph as ``jax.scipy.special.gammainc``.
+
+The inverse is only ever needed for *static* (config-time) pairs ``(p, m)``
+— the search threshold ``x_p = Psi_m^{-1}(p)`` is a compile-time constant —
+so we provide a SciPy host helper plus a jit-able bisection fallback used by
+tests and any in-graph consumer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import gammainc
+
+
+def chi2_cdf(x: jax.Array, m: float) -> jax.Array:
+    """Psi_m(x): CDF of chi-square with ``m`` dof. Elementwise in ``x``."""
+    x = jnp.asarray(x)
+    return jnp.where(x > 0, gammainc(m / 2.0, jnp.maximum(x, 0.0) / 2.0), 0.0)
+
+
+def chi2_ppf_host(p: float, m: float) -> float:
+    """Psi_m^{-1}(p) on host (SciPy). Use for static thresholds."""
+    from scipy.stats import chi2 as _chi2
+
+    return float(_chi2.ppf(p, m))
+
+
+@functools.partial(jax.jit, static_argnames=("m", "iters"))
+def chi2_ppf(p: jax.Array, m: int, iters: int = 96) -> jax.Array:
+    """Psi_m^{-1}(p) via bisection on ``chi2_cdf`` — jit-able, elementwise.
+
+    The bracket ``[0, m + 24*sqrt(2m) + 64]`` covers p < 1 - 1e-12 for the
+    small m (<= 32) ProMIPS uses.
+    """
+    p = jnp.asarray(p, jnp.float32)
+    hi0 = jnp.float32(m + 24.0 * (2.0 * m) ** 0.5 + 64.0)
+    lo = jnp.zeros_like(p)
+    hi = jnp.full_like(p, hi0)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        below = chi2_cdf(mid, m) < p
+        return jnp.where(below, mid, lo), jnp.where(below, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (lo + hi)

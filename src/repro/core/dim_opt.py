@@ -1,0 +1,22 @@
+"""Optimized projected dimension (paper Section V-B).
+
+Quick-Probe cost model: m bits split the dataset into up to 2^m groups;
+computing the group lower bounds costs 2^m (m+1) and scanning one group
+costs n / 2^m, so  f(m) = 2^m (m+1) + n / 2^m  is convex in m and the
+optimum is  m* = argmin f(m).
+"""
+from __future__ import annotations
+
+
+def quick_probe_cost(m: int, n: int) -> float:
+    return float(2**m) * (m + 1) + n / float(2**m)
+
+
+def optimized_projected_dimension(n: int, m_min: int = 2, m_max: int = 24) -> int:
+    """m* = argmin_m 2^m (m+1) + n / 2^m over the practical range."""
+    best_m, best_cost = m_min, float("inf")
+    for m in range(m_min, m_max + 1):
+        cost = quick_probe_cost(m, n)
+        if cost < best_cost:
+            best_m, best_cost = m, cost
+    return best_m

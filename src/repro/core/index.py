@@ -1,0 +1,234 @@
+"""ProMIPS index: build product tying together projections, Quick-Probe
+groups and the iDistance layout (paper Fig. 2 "pre-process" box).
+
+The index is a NamedTuple of dense arrays (a valid JAX pytree — it moves to
+device / shards with ``jax.device_put``) plus a static ``IndexMeta``. All
+row-indexed arrays are PADDED to a multiple of ``page_rows`` so device-mode
+block fetches are uniform dynamic slices; padding rows carry id -1 and are
+masked to -inf scores.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from .dim_opt import optimized_projected_dimension
+from .chi2 import chi2_ppf_host
+from .idistance import IDistanceLayout, build_idistance
+from .projections import make_projection, project
+from .quick_probe import GroupTable, build_group_table, pack_codes_np
+
+
+class IndexArrays(NamedTuple):
+    """Device arrays. Leading dim conventions: n_pad rows, G groups, S subparts,
+    NB = n_pad / page_rows blocks."""
+
+    a: np.ndarray            # (d, m) projection matrix
+    x: np.ndarray            # (n_pad, d) original points, sorted layout
+    p: np.ndarray            # (n_pad, m) projected points, sorted layout
+    ids: np.ndarray          # (n_pad,) original row ids (-1 = padding)
+    l2sq: np.ndarray         # (n_pad,) squared 2-norms (0 for padding)
+    max_l2sq: np.ndarray     # () ||o_M||^2
+    g_code: np.ndarray       # (G,) uint32
+    g_min_l1: np.ndarray     # (G,)
+    g_rep_proj: np.ndarray   # (G, m)
+    g_rep_row: np.ndarray    # (G,)
+    g_count: np.ndarray      # (G,)
+    sp_center: np.ndarray    # (S, m)
+    sp_radius: np.ndarray    # (S,)
+    sp_start: np.ndarray     # (S+1,) row offsets into the sorted layout
+    sp_max_l2sq: np.ndarray  # (S,) max ||o||^2 per sub-partition (beyond-paper:
+                             # norm-adaptive radii + Cauchy-Schwarz pruning)
+    block_sp_lo: np.ndarray  # (NB,) first sub-partition overlapping each block
+    block_sp_hi: np.ndarray  # (NB,) one-past-last sub-partition of each block
+    block_max_l2sq: np.ndarray  # (NB,) max ||o||^2 over the block's sub-partitions
+    block_sp_idx: np.ndarray    # (NB, KMAX) sub-partitions per block (-1 pad) —
+                                # progressive mode's per-block gap computation
+
+
+@dataclass(frozen=True)
+class IndexMeta:
+    n: int
+    d: int
+    m: int
+    c: float
+    p: float
+    x_p: float               # Psi_m^{-1}(p), static threshold
+    page_rows: int
+    page_bytes: int
+    n_pad: int
+    n_blocks: int
+    n_groups: int
+    n_subparts: int
+    k_p: int
+    n_key: int
+    k_sp: int
+    seed: int
+    norm_strata: int = 1
+
+    @property
+    def index_bytes(self) -> int:
+        """Size of the *index* (everything except the raw data x) — the
+        paper's 'Index Size' metric (Fig. 4a)."""
+        per_point = self.m * 4 + 4 + 4  # projected point + id + l2sq
+        groups = self.n_groups * (4 + 4 + self.m * 4 + 4 + 4)
+        subparts = self.n_subparts * (self.m * 4 + 4 + 8) + 8
+        blocks = self.n_blocks * 8
+        proj = self.d * self.m * 4
+        return self.n_pad * per_point + groups + subparts + blocks + proj
+
+
+class ProMIPSIndex(NamedTuple):
+    arrays: IndexArrays
+    meta: IndexMeta
+    layout: Optional[IDistanceLayout]  # host-only; None once shipped to device
+
+
+def _stratified_layout(x, p_pts, k_p, n_key, k_sp, seed, norm_strata):
+    """Beyond-paper: build the iDistance layout per norm-quantile stratum so
+    sub-partitions are norm-homogeneous (makes the norm-adaptive radii in
+    search_device.adaptive_radii bite). ``norm_strata=1`` is the paper's
+    exact partition pattern."""
+    from .idistance import IDistanceLayout
+
+    n = x.shape[0]
+    if norm_strata <= 1:
+        return build_idistance(p_pts, k_p=k_p, n_key=n_key, k_sp=k_sp, seed=seed)
+    norms = np.linalg.norm(x, axis=1)
+    edges = np.quantile(norms, np.linspace(0, 1, norm_strata + 1)[1:-1])
+    strat = np.searchsorted(edges, norms)
+    perms, centers, radii, sp_c, sp_r, sp_k, sp_p, sizes, keys = ([] for _ in range(9))
+    key_base = 0
+    eps_acc, c_key_max = [], 1
+    for s in range(norm_strata):
+        rows = np.nonzero(strat == s)[0]
+        if len(rows) == 0:
+            continue
+        lay = build_idistance(p_pts[rows], k_p=k_p, n_key=n_key, k_sp=k_sp, seed=seed + s)
+        perms.append(rows[lay.perm])
+        centers.append(lay.part_center)
+        radii.append(lay.part_radius)
+        sp_c.append(lay.sp_center)
+        sp_r.append(lay.sp_radius)
+        sp_k.append(lay.sp_key + key_base)
+        sp_p.append(lay.sp_part + len(np.concatenate(centers)) - lay.part_center.shape[0])
+        sizes.append(np.diff(lay.sp_start))
+        keys.append(lay.keys + key_base)
+        key_base += int(lay.sp_key.max()) + 2 if len(lay.sp_key) else 1
+        eps_acc.append(lay.eps)
+        c_key_max = max(c_key_max, lay.c_key)
+    sp_start = np.concatenate([[0], np.cumsum(np.concatenate(sizes))]).astype(np.int64)
+    return IDistanceLayout(
+        perm=np.concatenate(perms).astype(np.int64),
+        part_center=np.concatenate(centers),
+        part_radius=np.concatenate(radii),
+        eps=float(np.mean(eps_acc)),
+        c_key=c_key_max,
+        keys=np.concatenate(keys),
+        sp_center=np.concatenate(sp_c),
+        sp_radius=np.concatenate(sp_r),
+        sp_start=sp_start,
+        sp_key=np.concatenate(sp_k),
+        sp_part=np.concatenate(sp_p),
+    )
+
+
+def build_index(
+    x: np.ndarray,
+    *,
+    m: Optional[int] = None,
+    c: float = 0.9,
+    p: float = 0.5,
+    k_p: int = 5,
+    n_key: int = 40,
+    k_sp: int = 10,
+    page_bytes: int = 4096,
+    seed: int = 0,
+    norm_strata: int = 1,
+) -> ProMIPSIndex:
+    """Pre-process (paper Fig. 2 left box + Algorithm 4).
+
+    x: (n, d) float32 data points. Returns the host-side index; call
+    ``jax.device_put(idx.arrays, ...)`` (or the sharded helper) to ship it.
+    ``norm_strata > 1`` enables the beyond-paper norm-stratified layout.
+    """
+    x = np.ascontiguousarray(x, np.float32)
+    n, d = x.shape
+    if m is None:
+        m = optimized_projected_dimension(n)
+    m = int(min(m, 30))
+
+    a = make_projection(d, m, seed=seed)
+    p_pts = project(x, a).astype(np.float32)
+
+    layout = _stratified_layout(x, p_pts, k_p, n_key, k_sp, seed, norm_strata)
+    perm = layout.perm
+    xs, ps = x[perm], p_pts[perm]
+    l1 = np.abs(xs).sum(axis=1).astype(np.float32)
+    l2sq = (xs * xs).sum(axis=1).astype(np.float32)
+
+    codes = pack_codes_np(ps)
+    groups: GroupTable = build_group_table(codes, l1, ps)
+
+    page_rows = max(1, page_bytes // (4 * d))
+    n_pad = int(math.ceil(n / page_rows)) * page_rows
+    n_blocks = n_pad // page_rows
+
+    def pad_rows(arr, fill=0):
+        pad = n_pad - n
+        if pad == 0:
+            return arr
+        width = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
+        return np.pad(arr, width, constant_values=fill)
+
+    sp_start = layout.sp_start
+    n_sp = len(layout.sp_radius)
+    sp_max_l2sq = np.asarray(
+        [l2sq[sp_start[s]:sp_start[s + 1]].max() for s in range(n_sp)], np.float32
+    )
+    block_lo = np.searchsorted(sp_start, np.arange(n_blocks) * page_rows, side="right") - 1
+    last_row = np.minimum((np.arange(n_blocks) + 1) * page_rows, n) - 1
+    block_hi = np.searchsorted(sp_start, last_row, side="right")
+    block_lo = np.clip(block_lo, 0, len(sp_start) - 2)
+    block_hi = np.clip(block_hi, block_lo + 1, len(sp_start) - 1)
+    kmax = int((block_hi - block_lo).max())
+    block_sp_idx = np.full((n_blocks, kmax), -1, np.int32)
+    block_max_l2sq = np.zeros(n_blocks, np.float32)
+    for b in range(n_blocks):
+        sps = np.arange(block_lo[b], block_hi[b])
+        block_sp_idx[b, : len(sps)] = sps
+        block_max_l2sq[b] = sp_max_l2sq[sps].max()
+
+    arrays = IndexArrays(
+        a=a,
+        x=pad_rows(xs),
+        p=pad_rows(ps),
+        ids=pad_rows(perm.astype(np.int32), fill=-1),
+        l2sq=pad_rows(l2sq),
+        max_l2sq=np.float32(l2sq.max()),
+        g_code=groups.code,
+        g_min_l1=groups.min_l1,
+        g_rep_proj=groups.rep_proj,
+        g_rep_row=groups.rep_row,
+        g_count=groups.count,
+        sp_center=layout.sp_center,
+        sp_radius=layout.sp_radius,
+        sp_start=sp_start.astype(np.int32),
+        sp_max_l2sq=sp_max_l2sq,
+        block_sp_lo=block_lo.astype(np.int32),
+        block_sp_hi=block_hi.astype(np.int32),
+        block_max_l2sq=block_max_l2sq,
+        block_sp_idx=block_sp_idx,
+    )
+    meta = IndexMeta(
+        n=n, d=d, m=m, c=c, p=p,
+        x_p=chi2_ppf_host(p, m),
+        page_rows=page_rows, page_bytes=page_bytes,
+        n_pad=n_pad, n_blocks=n_blocks,
+        n_groups=len(groups.code), n_subparts=len(layout.sp_radius),
+        k_p=k_p, n_key=n_key, k_sp=k_sp, seed=seed, norm_strata=norm_strata,
+    )
+    return ProMIPSIndex(arrays=arrays, meta=meta, layout=layout)

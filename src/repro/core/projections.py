@@ -1,0 +1,24 @@
+"""2-stable random projections (paper Definition 2).
+
+``f_i(o) = v_i . o`` with ``v_i ~ N(0, I_d)``; m projections stack into a
+(d, m) matrix so projecting a batch is a single matmul (MXU-friendly).
+Lemma 1: ``f(o1) - f(o2) ~ N(0, dis^2(o1, o2))`` per projection, which is
+what gives Lemma 2's chi-square ratio.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_projection(d: int, m: int, seed: int = 0) -> np.ndarray:
+    """(d, m) matrix of i.i.d. standard normals. Deterministic in ``seed``.
+
+    Built on host (pre-processing phase); replicated to devices at load.
+    """
+    rng = np.random.RandomState(seed)
+    return rng.standard_normal((d, m)).astype(np.float32)
+
+
+def project(x, a):
+    """P(x) = x @ A. Works for numpy and jax arrays; (..., d) -> (..., m)."""
+    return x @ a

@@ -1,0 +1,93 @@
+"""High-level ProMIPS API.
+
+>>> idx = ProMIPS.build(x, c=0.9, p=0.5)
+>>> ids, scores, stats = idx.search(queries, k=10)            # device mode
+>>> ids, scores, stats = idx.search_host(q, k=10)             # paper-faithful
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from .index import IndexArrays, IndexMeta, ProMIPSIndex, build_index
+from .search_device import search_batch, search_batch_progressive
+from .search_host import HostSearcher, HostStats
+
+
+class ProMIPS:
+    """Owns one built index; exposes device-mode and host-mode search."""
+
+    def __init__(self, index: ProMIPSIndex):
+        self.index = index
+        self._host: Optional[HostSearcher] = None
+        self._device_arrays: Optional[IndexArrays] = None
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def build(cls, x: np.ndarray, **kwargs) -> "ProMIPS":
+        return cls(build_index(x, **kwargs))
+
+    @property
+    def meta(self) -> IndexMeta:
+        return self.index.meta
+
+    @property
+    def arrays(self) -> IndexArrays:
+        if self._device_arrays is None:
+            self._device_arrays = jax.tree.map(jax.numpy.asarray, self.index.arrays)
+        return self._device_arrays
+
+    # -- search -------------------------------------------------------------
+    def search(self, queries: np.ndarray, k: int = 10,
+               budget: Optional[int] = None, budget2: Optional[int] = None,
+               norm_adaptive: bool = False, cs_prune: bool = False):
+        """Batched device-mode c-k-AMIP search. queries: (B, d)."""
+        meta = self.meta
+        if budget is None:
+            budget = meta.n_blocks
+        if budget2 is None:
+            budget2 = meta.n_blocks
+        budget = int(min(budget, meta.n_blocks))
+        budget2 = int(min(budget2, meta.n_blocks))
+        q = jax.numpy.asarray(np.atleast_2d(queries), jax.numpy.float32)
+        return search_batch(self.arrays, meta, q, k=k, budget=budget, budget2=budget2,
+                            norm_adaptive=norm_adaptive, cs_prune=cs_prune)
+
+    def search_progressive(self, queries: np.ndarray, k: int = 10,
+                           budget: Optional[int] = None, cs_prune: bool = True):
+        """Beyond-paper progressive device search (norm-adaptive frontier)."""
+        meta = self.meta
+        if budget is None:
+            budget = meta.n_blocks
+        budget = int(min(budget, meta.n_blocks))
+        q = jax.numpy.asarray(np.atleast_2d(queries), jax.numpy.float32)
+        return search_batch_progressive(self.arrays, meta, q, k=k, budget=budget,
+                                        cs_prune=cs_prune)
+
+    def search_host_progressive(self, q: np.ndarray, k: int = 10,
+                                c: float | None = None, p: float | None = None,
+                                cs_prune: bool = True):
+        if self._host is None:
+            self._host = HostSearcher(self.index)
+        return self._host.search_progressive(q, k=k, c=c, p=p, cs_prune=cs_prune)
+
+    def search_host(self, q: np.ndarray, k: int = 10, c: float | None = None,
+                    p: float | None = None, norm_adaptive: bool = False,
+                    cs_prune: bool = False):
+        """Paper-faithful single-query search (Algorithms 2+3)."""
+        if self._host is None:
+            self._host = HostSearcher(self.index)
+        return self._host.search(q, k=k, c=c, p=p, norm_adaptive=norm_adaptive,
+                                 cs_prune=cs_prune)
+
+    def search_incremental(self, q: np.ndarray, k: int = 10,
+                           c: float | None = None, p: float | None = None):
+        """Paper's Algorithm 1 (MIP-Search-I) baseline."""
+        if self._host is None:
+            self._host = HostSearcher(self.index)
+        return self._host.search_incremental(q, k=k, c=c, p=p)
+
+
+__all__ = ["ProMIPS", "ProMIPSIndex", "IndexArrays", "IndexMeta", "HostStats"]

@@ -1,0 +1,142 @@
+"""Quick-Probe (paper Section V, Algorithm 2).
+
+Locates, without incremental NN search, a point whose projected distance to
+the query can serve as the range-search radius:
+
+1. every projected point gets a sign binary code c(o) (bit i = 1 iff
+   P_i(o) >= 0); points sharing a code form a group;
+2. Theorem 3: dis(P(o), P(q)) >= (1/sqrt(m)) * sum_i (c_i(o) xor c_i(q)) * |P_i(q)|
+   — a per-GROUP lower bound LB_g (it only depends on the code);
+3. Theorem 4: dis(o, q) <= ||o||_1 + ||q||_1 (original space);
+4. Test A:  Psi_m( LB^2 / (c * (||o||_1 + ||q||_1)^2) ) >= p, evaluated with
+   the group's minimum ||o||_1 (groups are sorted by ||o||_1 so that point
+   maximises the testable value);
+5. scan groups in ascending LB order, return the first point passing Test A;
+   if none passes, return the point with the largest recorded value.
+
+TPU adaptation (see DESIGN.md §3): the sequential ascending-LB scan is
+replaced by a fully vectorised evaluation over all groups — "first passing
+group in ascending LB order" == "passing group with minimal LB" — which is
+exactly equivalent and removes the serial loop. Codes are bit-packed into a
+single uint32 per point (m <= 30 always; m* = O(log n)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pack_codes_np(p_pts: np.ndarray) -> np.ndarray:
+    """Sign codes of projected points, packed to uint32. (n, m) -> (n,)."""
+    n, m = p_pts.shape
+    assert m <= 30, "projected dimension must fit a packed uint32 code"
+    bits = (p_pts >= 0.0).astype(np.uint32)
+    weights = (1 << np.arange(m, dtype=np.uint32))
+    return (bits * weights[None, :]).sum(axis=1).astype(np.uint32)
+
+
+def pack_codes(p_pts: jnp.ndarray) -> jnp.ndarray:
+    """jit-able version of :func:`pack_codes_np`. (..., m) -> (...,)."""
+    m = p_pts.shape[-1]
+    weights = (jnp.uint32(1) << jnp.arange(m, dtype=jnp.uint32))
+    bits = (p_pts >= 0.0).astype(jnp.uint32)
+    return (bits * weights).sum(axis=-1).astype(jnp.uint32)
+
+
+def unpack_bits(codes: jnp.ndarray, m: int) -> jnp.ndarray:
+    """uint32 codes -> (..., m) float bits."""
+    shifts = jnp.arange(m, dtype=jnp.uint32)
+    return ((codes[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.float32)
+
+
+class GroupTable(NamedTuple):
+    """Per-group Quick-Probe metadata (G groups, padded rows allowed).
+
+    code:     (G,) uint32 — the group's sign code.
+    min_l1:   (G,) f32   — min ||o||_1 (ORIGINAL space) among members.
+    rep_proj: (G, m) f32 — projected point of that min-l1 member.
+    rep_row:  (G,) i32   — its row in the sorted data layout.
+    count:    (G,) i32   — group size (0 marks padding).
+    """
+
+    code: jnp.ndarray
+    min_l1: jnp.ndarray
+    rep_proj: jnp.ndarray
+    rep_row: jnp.ndarray
+    count: jnp.ndarray
+
+
+def build_group_table(codes: np.ndarray, l1: np.ndarray, p_pts: np.ndarray) -> GroupTable:
+    """Host-side group construction (pre-processing phase).
+
+    ``codes``/``l1``/``p_pts`` are in the final sorted data layout, so
+    ``rep_row`` indexes directly into the index's sorted arrays.
+    """
+    order = np.lexsort((l1, codes))
+    sc = codes[order]
+    boundaries = np.concatenate([[0], np.nonzero(np.diff(sc))[0] + 1, [len(sc)]])
+    g_code, g_min_l1, g_rep_proj, g_rep_row, g_count = [], [], [], [], []
+    for s, e in zip(boundaries[:-1], boundaries[1:]):
+        if s == e:
+            continue
+        rows = order[s:e]
+        rep = rows[0]  # lexsort => first member has min ||o||_1
+        g_code.append(sc[s])
+        g_min_l1.append(l1[rep])
+        g_rep_proj.append(p_pts[rep])
+        g_rep_row.append(rep)
+        g_count.append(e - s)
+    return GroupTable(
+        code=np.asarray(g_code, np.uint32),
+        min_l1=np.asarray(g_min_l1, np.float32),
+        rep_proj=np.asarray(g_rep_proj, np.float32),
+        rep_row=np.asarray(g_rep_row, np.int32),
+        count=np.asarray(g_count, np.int32),
+    )
+
+
+def group_lower_bounds(g_code: jnp.ndarray, q_code: jnp.ndarray, q_proj: jnp.ndarray) -> jnp.ndarray:
+    """Theorem 3 per-group lower bounds on dis(P(o), P(q)).
+
+    g_code: (G,), q_code: scalar, q_proj: (m,) -> (G,) f32.
+    """
+    m = q_proj.shape[-1]
+    xor_bits = unpack_bits(g_code ^ q_code, m)  # (G, m)
+    return (xor_bits @ jnp.abs(q_proj)) / jnp.sqrt(jnp.float32(m))
+
+
+def quick_probe(
+    table: GroupTable,
+    q_proj: jnp.ndarray,
+    q_l1: jnp.ndarray,
+    c: float,
+    x_p: float,
+):
+    """Algorithm 2, vectorised. Returns (rep_row, radius, test_a_passed).
+
+    Test A: Psi_m(LB^2 / (c (min_l1 + ||q||_1)^2)) >= p
+        <=> LB^2 >= x_p * c * (min_l1 + ||q||_1)^2   (monotonicity of Psi_m)
+
+    Among passing groups pick the one with the smallest LB (== first hit of
+    the paper's ascending-LB scan); if none passes, fall back to the group
+    with the largest tested value (paper's recorded-maximum fallback). The
+    returned radius is dis(P(o), P(q)) for the chosen representative point.
+    """
+    q_code = pack_codes(q_proj)
+    lb = group_lower_bounds(table.code, q_code, q_proj)  # (G,)
+    valid = table.count > 0
+    denom = c * (table.min_l1 + q_l1) ** 2
+    val = lb * lb / jnp.maximum(denom, 1e-30)
+    passes = (val >= x_p) & valid
+
+    any_pass = jnp.any(passes)
+    inf = jnp.float32(jnp.inf)
+    first_pass = jnp.argmin(jnp.where(passes, lb, inf))
+    best_val = jnp.argmax(jnp.where(valid, val, -inf))
+    chosen = jnp.where(any_pass, first_pass, best_val)
+
+    rep = table.rep_proj[chosen]
+    radius = jnp.sqrt(jnp.sum((rep - q_proj) ** 2))
+    return table.rep_row[chosen], radius, any_pass

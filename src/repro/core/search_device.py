@@ -1,0 +1,285 @@
+"""Device-mode ProMIPS search: jit-compiled, batched, fixed-budget.
+
+Implements MIP-Search-II (Algorithm 3) with the block-granular TPU
+adaptation (DESIGN.md §3):
+
+  quick-probe -> radius r -> sub-partition sphere filter -> block selection
+  -> budgeted block scoring scan (MXU matvecs + running top-k + Condition A)
+  -> Condition B test -> compensation round with radius r' over the blocks
+     NOT already scanned (the r'-selection strictly contains the r-selection,
+     so scanning the difference reproduces Algorithm 3's "extend the range").
+
+Shapes are static: `budget` blocks per round. Work for logically-unneeded
+blocks is masked rather than skipped (fixed-shape SPMD); `stats.pages`
+reports the *logical* page accesses — the number the paper's Fig. 7 counts —
+and is what the benchmark harness records.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .index import IndexArrays, IndexMeta
+from .quick_probe import GroupTable, quick_probe
+
+
+class SearchStats(NamedTuple):
+    pages: jnp.ndarray          # logical data-page accesses per query
+    candidates: jnp.ndarray     # verified candidate rows per query
+    probe_passed: jnp.ndarray   # Quick-Probe Test A hit (bool)
+    used_round2: jnp.ndarray    # compensation round triggered (bool)
+    radius0: jnp.ndarray        # Quick-Probe radius
+    radius1: jnp.ndarray        # compensation radius (0 if unused)
+    exhausted: jnp.ndarray      # budget ran out before Condition B held
+
+
+class TopK(NamedTuple):
+    scores: jnp.ndarray  # (k,) descending inner products
+    rows: jnp.ndarray    # (k,) rows in the sorted layout (-1 = empty)
+
+
+def _select_blocks(arrays: IndexArrays, q_proj, radius):
+    """Sphere-overlap filter: sub-partitions -> fixed-size blocks.
+
+    ``radius`` may be a scalar (paper-faithful, global radius) or a (S,)
+    vector of per-sub-partition radii (beyond-paper norm-adaptive mode —
+    see `adaptive_radii`). Entries < 0 deselect the sub-partition outright
+    (Cauchy-Schwarz pruning).
+    """
+    d_sp = jnp.sqrt(jnp.sum((arrays.sp_center - q_proj[None, :]) ** 2, axis=-1))
+    radius = jnp.broadcast_to(radius, d_sp.shape)
+    sel_sp = (d_sp <= radius + arrays.sp_radius) & (radius >= 0.0)  # (S,)
+    csum = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(sel_sp.astype(jnp.int32))])
+    touched = csum[arrays.block_sp_hi] - csum[arrays.block_sp_lo]
+    return touched > 0  # (NB,)
+
+
+def adaptive_radii(arrays: IndexArrays, meta: IndexMeta, s_k, q_l2sq, cs_prune: bool):
+    """Beyond-paper norm-adaptive per-sub-partition Condition-B radii.
+
+    Theorem 2's denominator upper-bounds ||o*||^2 by the GLOBAL max norm
+    ||o_M||^2; but if o* lives in sub-partition sp, ||o*||^2 <= M_sp^2, so
+    searching each sp out to  r_sp = sqrt(x_p * (M_sp^2 + ||q||^2 - 2 s_k / c))
+    preserves P[miss] <= 1-p by the identical argument (the bound is applied
+    in the one sub-partition that actually contains o*). On long-tail norm
+    distributions only the few high-norm sub-partitions get the big radius.
+
+    With ``cs_prune``, sub-partitions where even Cauchy-Schwarz's best case
+    M_sp * ||q|| cannot beat the running k-th score are deselected entirely
+    (deterministic: such a sp can contain neither o* nor a top-k improver).
+    """
+    s_k = jnp.maximum(s_k, -1e30)
+    denom = arrays.sp_max_l2sq + q_l2sq - 2.0 * s_k / meta.c
+    r_sp = jnp.sqrt(jnp.maximum(meta.x_p * denom, 0.0))
+    if cs_prune:
+        ok = jnp.sqrt(arrays.sp_max_l2sq) * jnp.sqrt(q_l2sq) >= s_k
+        r_sp = jnp.where(ok, r_sp, -1.0)
+    return r_sp
+
+
+def _merge_topk(top: TopK, scores, rows, k: int) -> TopK:
+    s = jnp.concatenate([top.scores, scores])
+    r = jnp.concatenate([top.rows, rows])
+    best_s, idx = jax.lax.top_k(s, k)
+    return TopK(scores=best_s, rows=r[idx])
+
+
+def _scan_blocks(arrays, meta, q, q_l2sq, block_mask, top: TopK, k: int, budget: int):
+    """Budgeted scoring pass over the selected blocks (one while-round).
+
+    Returns (top, pages, candidates, done_a). Blocks are visited in layout
+    order (selected-first via stable argsort), matching the sequential-disk
+    read pattern the paper's sub-partition layout is designed for.
+    """
+    page_rows = meta.page_rows
+    order = jnp.argsort(~block_mask, stable=True)  # selected block ids first
+    n_sel = jnp.sum(block_mask.astype(jnp.int32))
+    c_half = 0.5 * meta.c * (arrays.max_l2sq + q_l2sq)  # Condition A threshold on <o,q>
+
+    def body(carry, t):
+        top, pages, cand, done_a = carry
+        blk = order[t]
+        live = (t < n_sel) & ~done_a
+        base = blk * page_rows
+        rows_x = jax.lax.dynamic_slice(arrays.x, (base, 0), (page_rows, arrays.x.shape[1]))
+        rows_id = jax.lax.dynamic_slice(arrays.ids, (base,), (page_rows,))
+        scores = rows_x @ q  # (page_rows,) — the MXU verification matvec
+        valid = live & (rows_id >= 0)
+        scores = jnp.where(valid, scores, -jnp.inf)
+        row_idx = jnp.where(valid, base + jnp.arange(page_rows), -1)
+        top = jax.tree.map(
+            lambda new, old: jnp.where(live, new, old),
+            _merge_topk(top, scores, row_idx, k),
+            top,
+        )
+        pages = pages + live.astype(jnp.int32)
+        cand = cand + jnp.sum(valid.astype(jnp.int32))
+        # Condition A on the running k-th best (Theorem 1, c-k-AMIP form).
+        done_a = done_a | (top.scores[k - 1] >= c_half)
+        return (top, pages, cand, done_a), None
+
+    init = (top, jnp.int32(0), jnp.int32(0), top.scores[k - 1] >= c_half)
+    (top, pages, cand, done_a), _ = jax.lax.scan(body, init, jnp.arange(budget))
+    return top, pages, cand, done_a
+
+
+@functools.partial(
+    jax.jit, static_argnames=("meta", "k", "budget", "budget2", "norm_adaptive", "cs_prune")
+)
+def search_batch(
+    arrays: IndexArrays,
+    meta: IndexMeta,
+    queries: jnp.ndarray,
+    k: int = 10,
+    budget: int = 64,
+    budget2: int = 64,
+    norm_adaptive: bool = False,
+    cs_prune: bool = False,
+):
+    """c-k-AMIP search for a batch of queries. queries: (B, d).
+
+    Returns (ids (B, k) original row ids, scores (B, k), SearchStats).
+    """
+    table = GroupTable(
+        code=arrays.g_code,
+        min_l1=arrays.g_min_l1,
+        rep_proj=arrays.g_rep_proj,
+        rep_row=arrays.g_rep_row,
+        count=arrays.g_count,
+    )
+
+    def one(q):
+        q_proj = q @ arrays.a
+        q_l1 = jnp.sum(jnp.abs(q))
+        q_l2sq = jnp.sum(q * q)
+        _, r0, probe_ok = quick_probe(table, q_proj, q_l1, meta.c, meta.x_p)
+
+        empty = TopK(scores=jnp.full((k,), -jnp.inf), rows=jnp.full((k,), -1, jnp.int32))
+        mask0 = _select_blocks(arrays, q_proj, r0)
+        top, pages1, cand1, done_a = _scan_blocks(
+            arrays, meta, q, q_l2sq, mask0, empty, k, budget
+        )
+
+        # Condition B with the Quick-Probe radius (Algorithm 3 line 12).
+        s_k = top.scores[k - 1]
+        denom = arrays.max_l2sq + q_l2sq - 2.0 * jnp.maximum(s_k, -1e30) / meta.c
+        cond_b = (denom <= 0.0) | (r0 * r0 >= meta.x_p * denom)
+        r1 = jnp.sqrt(jnp.maximum(meta.x_p * denom, 0.0))
+        need2 = ~(cond_b | done_a)
+
+        # Compensation round over blocks newly selected by r' (r' > r0 here).
+        if norm_adaptive:
+            r_comp = adaptive_radii(arrays, meta, s_k, q_l2sq, cs_prune)
+            r_comp = jnp.where(need2, r_comp, -1.0)
+        else:
+            r_comp = jnp.where(need2, r1, -1.0)
+        mask1 = _select_blocks(arrays, q_proj, r_comp) & ~mask0
+        top, pages2, cand2, _ = _scan_blocks(
+            arrays, meta, q, q_l2sq, mask1, top, k, budget2
+        )
+        exhausted = (jnp.sum(mask0.astype(jnp.int32)) > budget) | (
+            need2 & (jnp.sum(mask1.astype(jnp.int32)) > budget2)
+        )
+        stats = SearchStats(
+            pages=pages1 + pages2,
+            candidates=cand1 + cand2,
+            probe_passed=probe_ok,
+            used_round2=need2,
+            radius0=r0,
+            radius1=jnp.where(need2, r1, 0.0),
+            exhausted=exhausted,
+        )
+        ids = jnp.where(top.rows >= 0, arrays.ids[jnp.maximum(top.rows, 0)], -1)
+        return ids, top.scores, stats
+
+    return jax.vmap(one)(queries)
+
+
+@functools.partial(jax.jit, static_argnames=("meta", "k", "budget", "cs_prune"))
+def search_batch_progressive(
+    arrays: IndexArrays,
+    meta: IndexMeta,
+    queries: jnp.ndarray,
+    k: int = 10,
+    budget: int = 64,
+    cs_prune: bool = True,
+):
+    """Beyond-paper progressive device search (see HostSearcher.search_progressive).
+
+    Blocks are visited in ascending "gap" order (projected distance to the
+    block's nearest sub-partition surface); each step re-tests the block
+    against the CURRENT norm-adaptive radius, so the frontier tightens as the
+    running k-th score grows. Per-block tests are conservative (block-level
+    max norm / min gap), so no qualified sub-partition is ever skipped.
+    """
+    page_rows = meta.page_rows
+
+    def one(q):
+        q_proj = q @ arrays.a
+        q_l2sq = jnp.sum(q * q)
+        q_norm = jnp.sqrt(q_l2sq)
+
+        d_sp = jnp.sqrt(jnp.sum((arrays.sp_center - q_proj[None, :]) ** 2, axis=-1))
+        gap_sp = d_sp - arrays.sp_radius  # distance to sub-partition surface
+        gathered = jnp.where(
+            arrays.block_sp_idx >= 0,
+            gap_sp[jnp.maximum(arrays.block_sp_idx, 0)],
+            jnp.inf,
+        )
+        block_gap = jnp.min(gathered, axis=1)  # (NB,)
+        order = jnp.argsort(block_gap, stable=True)
+        c_half = 0.5 * meta.c * (arrays.max_l2sq + q_l2sq)
+
+        def qualify(blk, s_k):
+            m2 = arrays.block_max_l2sq[blk]
+            denom = m2 + q_l2sq - 2.0 * jnp.maximum(s_k, -1e30) / meta.c
+            r_blk = jnp.sqrt(jnp.maximum(meta.x_p * denom, 0.0))
+            ok = block_gap[blk] <= r_blk
+            if cs_prune:
+                ok &= jnp.sqrt(m2) * q_norm >= s_k
+            return ok
+
+        def body(carry, t):
+            top, pages, cand, done_a = carry
+            blk = order[t]
+            live = qualify(blk, top.scores[k - 1]) & ~done_a
+            base = blk * page_rows
+            rows_x = jax.lax.dynamic_slice(arrays.x, (base, 0), (page_rows, arrays.x.shape[1]))
+            rows_id = jax.lax.dynamic_slice(arrays.ids, (base,), (page_rows,))
+            scores = rows_x @ q
+            valid = live & (rows_id >= 0)
+            scores = jnp.where(valid, scores, -jnp.inf)
+            row_idx = jnp.where(valid, base + jnp.arange(page_rows), -1)
+            top = jax.tree.map(
+                lambda new, old: jnp.where(live, new, old),
+                _merge_topk(top, scores, row_idx, k),
+                top,
+            )
+            pages = pages + live.astype(jnp.int32)
+            cand = cand + jnp.sum(valid.astype(jnp.int32))
+            done_a = done_a | (top.scores[k - 1] >= c_half)
+            return (top, pages, cand, done_a), None
+
+        empty = TopK(scores=jnp.full((k,), -jnp.inf), rows=jnp.full((k,), -1, jnp.int32))
+        init = (empty, jnp.int32(0), jnp.int32(0), jnp.bool_(False))
+        (top, pages, cand, done_a), _ = jax.lax.scan(body, init, jnp.arange(budget))
+
+        # any still-qualified block beyond the budget frontier?
+        s_k = top.scores[k - 1]
+        qual_all = jax.vmap(lambda b: qualify(b, s_k))(jnp.arange(arrays.block_sp_lo.shape[0]))
+        visited = jnp.zeros(arrays.block_sp_lo.shape[0], bool).at[order[:budget]].set(True)
+        exhausted = jnp.any(qual_all & ~visited) & ~done_a
+
+        stats = SearchStats(
+            pages=pages, candidates=cand,
+            probe_passed=jnp.bool_(False), used_round2=jnp.bool_(False),
+            radius0=jnp.float32(0.0), radius1=jnp.float32(0.0),
+            exhausted=exhausted,
+        )
+        ids = jnp.where(top.rows >= 0, arrays.ids[jnp.maximum(top.rows, 0)], -1)
+        return ids, top.scores, stats
+
+    return jax.vmap(one)(queries)

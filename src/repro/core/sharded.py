@@ -1,0 +1,131 @@
+"""Pod-scale ProMIPS: corpus sharded over the `model` mesh axis, one local
+index per shard, global top-k by all-gathering the per-shard (k, score)
+pairs — k x n_shards values cross the wire instead of n (DESIGN.md §3).
+
+Build: contiguous row ranges -> per-shard build_index (ids are GLOBAL row
+ids), padded to common array shapes and stacked on a leading shard axis.
+Search: shard_map over the model axis; each shard runs the jit device-mode
+progressive search on its slice; a tiny all_gather + top_k merges.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .index import IndexArrays, IndexMeta, build_index
+from .search_device import search_batch_progressive
+
+
+class ShardedIndex(NamedTuple):
+    arrays: IndexArrays      # every leaf has a leading (n_shards,) axis
+    meta: IndexMeta          # common (max-padded) meta
+
+
+def _pad_to(arr: np.ndarray, n: int, fill):
+    pad = n - arr.shape[0]
+    if pad <= 0:
+        return arr
+    width = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
+    return np.pad(arr, width, constant_values=fill)
+
+
+def build_sharded(x: np.ndarray, n_shards: int, **kwargs) -> ShardedIndex:
+    n = x.shape[0]
+    bounds = np.linspace(0, n, n_shards + 1).astype(int)
+    parts = []
+    for s in range(n_shards):
+        lo, hi = bounds[s], bounds[s + 1]
+        idx = build_index(x[lo:hi], **kwargs)
+        a = idx.arrays._replace(
+            ids=np.where(idx.arrays.ids >= 0, idx.arrays.ids + lo, -1).astype(np.int32)
+        )
+        parts.append((a, idx.meta))
+
+    n_pad = max(m.n_pad for _, m in parts)
+    g_max = max(m.n_groups for _, m in parts)
+    s_max = max(m.n_subparts for _, m in parts)
+    nb_max = max(m.n_blocks for _, m in parts)
+    kmax = max(a.block_sp_idx.shape[1] for a, _ in parts)
+    page_rows = parts[0][1].page_rows
+
+    stacked = {}
+    for field in IndexArrays._fields:
+        vals = []
+        for a, m in parts:
+            v = np.asarray(getattr(a, field))
+            if field in ("x", "p", "ids", "l2sq"):
+                v = _pad_to(v, n_pad, -1 if field == "ids" else 0)
+            elif field.startswith("g_"):
+                v = _pad_to(v, g_max, 0)
+            elif field == "sp_start":
+                v = _pad_to(v, s_max + 1, v[-1])
+            elif field.startswith("sp_"):
+                # unreachable centers (1e30) + zero radius => never selected
+                v = _pad_to(v, s_max, 1e30 if field == "sp_center" else 0)
+            elif field == "block_sp_idx":
+                if v.shape[1] < kmax:
+                    v = np.pad(v, ((0, 0), (0, kmax - v.shape[1])), constant_values=-1)
+                v = _pad_to(v, nb_max, -1)
+            elif field.startswith("block_"):
+                v = _pad_to(v, nb_max, 0)
+            vals.append(v)
+        stacked[field] = np.stack(vals)
+    meta = dataclasses.replace(
+        parts[0][1], n=n, n_pad=n_pad, n_blocks=nb_max, n_groups=g_max,
+        n_subparts=s_max, page_rows=page_rows,
+    )
+    return ShardedIndex(arrays=IndexArrays(**stacked), meta=meta)
+
+
+def sharded_search(
+    sharded: ShardedIndex,
+    queries: jnp.ndarray,
+    k: int,
+    mesh: Mesh,
+    *,
+    axis: str = "model",
+    budget: int = 64,
+    cs_prune: bool = True,
+):
+    """Global c-k-AMIP over the sharded corpus. queries: (B, d) replicated."""
+    meta = sharded.meta
+
+    def local(arr_shard, q):
+        arrays = jax.tree.map(lambda a: a[0], arr_shard)  # drop shard dim
+        ids, scores, stats = search_batch_progressive(
+            arrays, meta, q, k=k, budget=min(budget, meta.n_blocks),
+            cs_prune=cs_prune)
+        # gather per-shard winners; merge on every shard (cheap: k x shards)
+        all_ids = jax.lax.all_gather(ids, axis)        # (S, B, k)
+        all_scores = jax.lax.all_gather(scores, axis)  # (S, B, k)
+        s, b, _ = all_ids.shape
+        flat_i = jnp.moveaxis(all_ids, 0, 1).reshape(b, s * k)
+        flat_s = jnp.moveaxis(all_scores, 0, 1).reshape(b, s * k)
+        best_s, pos = jax.lax.top_k(flat_s, k)
+        best_i = jnp.take_along_axis(flat_i, pos, axis=1)
+        pages = jax.lax.psum(jnp.sum(stats.pages), axis)
+        return best_i, best_s, pages
+
+    in_arr_spec = jax.tree.map(lambda _: P(axis), sharded.arrays)
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(in_arr_spec, P()),
+        out_specs=(P(), P(), P()),
+        check_rep=False,
+    )
+    return fn(sharded.arrays, jnp.asarray(queries, jnp.float32))
+
+
+def device_put_sharded_index(sharded: ShardedIndex, mesh: Mesh, axis: str = "model"):
+    arrays = jax.tree.map(
+        lambda a: jax.device_put(jnp.asarray(a), NamedSharding(mesh, P(axis))),
+        sharded.arrays,
+    )
+    return ShardedIndex(arrays=arrays, meta=sharded.meta)

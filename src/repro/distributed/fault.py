@@ -1,0 +1,59 @@
+"""Fault tolerance & straggler mitigation (host-side runtime policy).
+
+- StragglerMonitor: EWMA of step latency; a step slower than
+  `threshold x` the EWMA flags a straggler event. The trainer's policy is
+  deadline-based *data skip*: the step's batch indices are consumed (the
+  stream is stateless in `step`, so every healthy worker advances
+  identically) and the checkpoint cadence tightens until latency recovers.
+- restart_plan: on resume, recompute the exact data position from the
+  restored step — no data is replayed or skipped (determinism comes from
+  TokenStream.batch_at(step)).
+- ElasticPolicy: decides the mesh from the *visible* device count; with the
+  mesh-agnostic checkpoints (distributed/checkpoint.py) a job restarted on
+  fewer/more hosts re-shards the same logical state (tested 8 -> 4).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class StragglerMonitor:
+    threshold: float = 2.5
+    alpha: float = 0.2
+    ewma: float = 0.0
+    events: int = 0
+    _t0: float = field(default=0.0, repr=False)
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> bool:
+        """Returns True if this step was a straggler."""
+        dt = time.perf_counter() - self._t0
+        if self.ewma == 0.0:
+            self.ewma = dt
+            return False
+        slow = dt > self.threshold * self.ewma
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        if slow:
+            self.events += 1
+        return slow
+
+
+def restart_plan(restored_step: int, total_steps: int):
+    """Steps still to run after a restore; data position == step index."""
+    return range(restored_step, total_steps)
+
+
+@dataclass(frozen=True)
+class ElasticPolicy:
+    """Choose a mesh shape for the devices actually alive."""
+    model_parallel: int = 16
+
+    def mesh_shape(self, n_devices: int):
+        mp = self.model_parallel
+        while mp > 1 and n_devices % mp:
+            mp //= 2
+        return (n_devices // mp, mp)  # (data, model)

@@ -1,0 +1,217 @@
+"""Logical -> physical sharding rules (DESIGN.md §7).
+
+Parameters are sharded by *name-path rules* applied to the trailing
+dimensions (leading scan-stack axes stay unsharded); every rule checks
+divisibility against the mesh and falls back to replication, so one rule set
+serves every (arch × mesh) cell. Inputs/caches get family-aware specs from
+``batch_specs`` / ``cache_specs``.
+
+Data-parallel axes: ("pod", "data") when the mesh has a pod axis, else
+("data",). Tensor/expert axes: "model".
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % axis_size(mesh, axes) == 0
+
+
+def _spec_for(path: str, shape, mesh: Mesh) -> P:
+    """Trailing-dims PartitionSpec for one parameter."""
+    model_ok = lambda d: _fits(shape[d], mesh, "model")
+    nd = len(shape)
+
+    def pad(*trailing):
+        return P(*([None] * (nd - len(trailing)) + list(trailing)))
+
+    name = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    if name == "embed":
+        return pad("model", None) if model_ok(-2) else pad(None, None)
+    if name == "unembed":
+        return pad(None, "model") if model_ok(-1) else pad(None, None)
+    if name in ("wq", "wk", "wv", "w_gates", "w_up", "w_gate", "in_proj", "w_if"):
+        if parent == "moe":
+            # MoE experts (…, E, d, ff): shard experts if divisible, else ff
+            if _fits(shape[-3], mesh, "model"):
+                return pad("model", None, None)
+            return pad(None, None, "model") if model_ok(-1) else pad(None, None, None)
+        return pad(None, "model") if model_ok(-1) else pad(None, None)
+    if name in ("wo", "w_down", "out_proj"):
+        if parent == "moe":  # MoE (…, E, ff, d)
+            if _fits(shape[-3], mesh, "model"):
+                return pad("model", None, None)
+            return pad(None, "model", None) if _fits(shape[-2], mesh, "model") else pad(None, None, None)
+        return pad("model", None) if model_ok(-2) else pad(None, None)
+    if name == "router":
+        return pad(None, None)
+    return P(*([None] * nd))  # norms, gates, biases, conv, frontend
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_specs(params_shape: Any, mesh: Mesh):
+    """PartitionSpec pytree for a params (shape) pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(_path_str(path), leaf.shape, mesh), params_shape
+    )
+
+
+def param_shardings(params_shape: Any, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs(params_shape, mesh))
+
+
+def zero1_specs(params_shape: Any, mesh: Mesh):
+    """Optimizer-state / grad-accumulator specs (ZeRO-1 partitioning).
+
+    The 'data' axis is appended to the dim that is ALREADY model-sharded
+    (P(..., ("model","data"))): the param<->moment reshard is then a
+    same-dim slice / all-gather with a compatible device order, which GSPMD
+    executes as a cheap subgroup collective. Putting 'data' on a *different*
+    dim triggers GSPMD's replicate-then-repartition last resort (~33 GB f32
+    transients on qwen3-32b — EXPERIMENTS.md §Perf iter 1). Params with no
+    model-sharded dim (norms, biases — tiny) stay replicated."""
+    base = param_specs(params_shape, mesh)
+    dsz = axis_size(mesh, "data")
+
+    def upgrade(leaf, spec):
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, (dim, pt) in enumerate(zip(leaf.shape, parts)):
+            if pt == "model" and dim % (axis_size(mesh, "model") * dsz) == 0:
+                parts[i] = ("model", "data")
+                return P(*parts)
+        # no extendable model dim (e.g. MoE expert-sharded stacks): shard the
+        # largest free dim over data — cross-dim reshard, but measured cheap
+        # when the model-sharded dim is untouched (see §Perf iter 1 notes)
+        best, best_size = None, 0
+        for i, (dim, pt) in enumerate(zip(leaf.shape, parts)):
+            if pt is None and dim % dsz == 0 and dim > best_size:
+                best, best_size = i, dim
+        if best is not None and leaf.size >= 1 << 20:
+            parts[best] = "data"
+        return P(*parts)
+
+    return jax.tree.map(upgrade, params_shape, base)
+
+
+# ---------------------------------------------------------------------------
+# input / cache specs per shape cell
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg, shape, mesh: Mesh):
+    """Specs for the train/prefill batch dict."""
+    dp = dp_axes(mesh)
+    bdim = dp if _fits(shape.global_batch, mesh, dp) else None
+    spec = {
+        "tokens": P(bdim, None),
+        "labels": P(bdim, None),
+    }
+    if cfg.frontend == "vision":
+        spec["patches"] = P(bdim, None, None)
+    if cfg.frontend == "audio":
+        spec["frames"] = P(bdim, None, None)
+    return spec
+
+
+def cache_specs(cfg, shape, mesh: Mesh):
+    """Specs for the decode cache.
+
+    KV model-axis placement preference: kv_heads > head_dim > sequence.
+    Head/dim sharding keeps the flash-decode block scan fully local (scores
+    psum only); sequence sharding makes GSPMD reshard every scanned block
+    (measured collective blow-up — EXPERIMENTS.md §Perf iter 2). Sequence
+    sharding remains the fallback (h2o-danube: kh=8, dh=120) and the
+    long-context path for unshardable batch (long_500k, B=1) where it is
+    paired with the context-parallel merge.
+    """
+    dp = dp_axes(mesh)
+    b = shape.global_batch
+    bdim = dp if _fits(b, mesh, dp) else None
+    kh, dh = cfg.n_kv_heads, cfg.head_dim_
+    if bdim is None:
+        # batch unshardable (long_500k, B=1): context parallelism — shard
+        # sequence over data, heads/dim over model when divisible
+        hd = "model" if _fits(kh, mesh, "model") else (
+            "model" if _fits(dh, mesh, "model") else None)
+        if hd and _fits(kh, mesh, "model"):
+            kv = P(None, None, "data", "model", None)
+        elif hd:
+            kv = P(None, None, "data", None, "model")
+        else:
+            kv = P(None, None, ("data", "model"), None, None)
+        seq_axes = "data"
+    elif _fits(kh, mesh, "model"):
+        kv = P(None, bdim, None, "model", None)
+        seq_axes = None
+    elif _fits(dh, mesh, "model"):
+        kv = P(None, bdim, None, None, "model")
+        seq_axes = None
+    else:
+        kv = P(None, bdim, "model", None, None)
+        seq_axes = "model"
+    specs = {"len": P(bdim)}
+    if cfg.block_pattern in ("attn", "encdec"):
+        specs["k"] = kv
+        specs["v"] = kv
+    if cfg.block_pattern == "encdec":
+        specs["xk"] = P(None, bdim, None, None, None)
+        specs["xv"] = P(None, bdim, None, None, None)
+        specs["enc_len"] = P(bdim)
+    if cfg.block_pattern == "xlstm_7_1":
+        # C:(G,7,B,H,P,P) n:(G,7,B,H,P) m:(G,7,B,H); H tiny -> shard P
+        pm = "model" if _fits(cfg.d_model // cfg.n_heads, mesh, "model") else None
+        specs["mlstm_c"] = P(None, None, bdim, None, pm, None)
+        specs["mlstm_n"] = P(None, None, bdim, None, pm)
+        specs["mlstm_m"] = P(None, None, bdim, None)
+        specs["slstm"] = tuple(P(None, bdim, None, pm) for _ in range(4))
+    if cfg.block_pattern == "zamba2":
+        inner = cfg.ssm.expand * cfg.d_model
+        h = inner // cfg.ssm.head_dim
+        hm = "model" if _fits(h, mesh, "model") else None
+        specs["mamba_h"] = P(None, None, bdim, hm, None, None)
+        specs["mamba_conv"] = P(None, None, bdim, None, None)
+        if cfg.n_layers % cfg.shared_attn_every:
+            specs["tail_h"] = P(None, bdim, hm, None, None)
+            specs["tail_conv"] = P(None, bdim, None, None)
+        # shared attention caches: (n_groups, B, S, KH, dh) — same rank and
+        # rule as the per-layer kv caches (leading axis = group, unsharded)
+        specs["shared_k"] = kv
+        specs["shared_v"] = kv
+    return specs
+
+
+def decode_token_spec(cfg, shape, mesh: Mesh):
+    dp = dp_axes(mesh)
+    bdim = dp if _fits(shape.global_batch, mesh, dp) else None
+    return P(bdim, None)
+
+
+def logits_spec(cfg, mesh: Mesh):
+    return P(None, "model") if _fits(cfg.vocab_padded, mesh, "model") else P(None, None)

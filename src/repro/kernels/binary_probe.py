@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: Quick-Probe group lower bounds (paper Theorem 3).
+
+For every sign-code group g:  LB_g = (1/sqrt(m)) * sum_i bit_i(code_g ^ code_q) * |P_i(q)|.
+
+The group table has up to 2^m entries; the kernel tiles it over the grid and
+evaluates the XOR + per-bit weighted accumulation entirely in VMEM. The bit
+loop is a static unroll (m <= 30) of shift/AND/FMA — VPU-friendly, no MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(codes_ref, qcode_ref, qabs_ref, o_ref, *, m: int):
+    codes = codes_ref[...]          # (bG, 1) uint32
+    qcode = qcode_ref[0, 0]         # scalar uint32
+    x = codes ^ qcode
+    acc = jnp.zeros(codes.shape, jnp.float32)
+    for i in range(m):              # static unroll, m <= 30
+        bit = ((x >> jnp.uint32(i)) & jnp.uint32(1)).astype(jnp.float32)
+        acc += bit * qabs_ref[0, i]
+    o_ref[...] = acc * (1.0 / (m ** 0.5))
+
+
+@functools.partial(jax.jit, static_argnames=("block_g", "interpret"))
+def binary_probe_lb(
+    codes: jax.Array,
+    q_code: jax.Array,
+    q_proj: jax.Array,
+    *,
+    block_g: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """Theorem-3 lower bounds for all groups. codes: (G,) uint32,
+    q_code: scalar uint32, q_proj: (m,) f32. Returns (G,) f32."""
+    g = codes.shape[0]
+    m = q_proj.shape[0]
+    block_g = min(block_g, max(8, g))
+    gp = -(-g // block_g) * block_g
+    cpad = jnp.pad(codes, (0, gp - g)).reshape(gp, 1)
+    qabs = jnp.abs(q_proj).astype(jnp.float32).reshape(1, m)
+    qc = q_code.astype(jnp.uint32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, m=m),
+        grid=(gp // block_g,),
+        in_specs=[
+            pl.BlockSpec((block_g, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_g, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp, 1), jnp.float32),
+        interpret=interpret,
+    )(cpad, qc, qabs)
+    return out[:g, 0]

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: flash-decode attention (one query token, long KV cache).
+
+Used by `serve_step` for the decode_32k / long_500k cells and by zamba2's
+shared attention block at 524k context. GQA layout: queries are grouped per
+KV head — q (B, KH, G, dh) attends K/V (B, S, KH, dh).
+
+Grid (B, KH, S/bS) with the sequence axis innermost; online softmax state
+(running max m, normalizer l) and the output accumulator live in the
+revisited output block plus two VMEM scratch tiles, so the KV cache streams
+HBM->VMEM exactly once — the kernel is memory-bound by design and its
+roofline is the HBM term (S*KH*dh*2 bytes/token).
+
+Length masking comes from a per-batch `cache_len` scalar so one compiled
+kernel serves ragged batches (continuous batching in serve/engine.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, block_s: int, scale: float):
+    s_idx = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)        # (G, dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)     # (bS, dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)     # (bS, dh)
+    cache_len = len_ref[0, 0]
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                   # (G, bS)
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(pos < cache_len, scores, NEG_INF)
+
+    m_prev = m_ref[:, :1]                       # (G, 1)
+    l_prev = l_ref[:, :1]
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)                 # (G, bS)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[:, :1] = m_new
+    l_ref[:, :1] = l_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    cache_len: jax.Array,
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """One-token GQA attention against a long KV cache.
+
+    q: (B, KH, G, dh); k, v: (B, S, KH, dh); cache_len: (B,) int32 — valid
+    prefix length per sequence. Returns (B, KH, G, dh).
+    """
+    b, kh, g, dh = q.shape
+    s = k.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+    block_s = min(block_s, s)
+    sp = -(-s // block_s) * block_s
+    if sp != s:
+        k = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    lens = cache_len.astype(jnp.int32).reshape(b, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s, scale=scale),
+        grid=(b, kh, sp // block_s),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi, hi, si: (bi, 0)),
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, si: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, dh), lambda bi, hi, si: (bi, si, hi, 0)),
+            pl.BlockSpec((1, block_s, 1, dh), lambda bi, hi, si: (bi, si, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda bi, hi, si: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, q, k, v)
+    return out

@@ -1,0 +1,46 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute with ``interpret=True`` (the body
+runs as traced jnp — bit-exact semantics, validated against ref.py); on a
+TPU backend the same calls lower to Mosaic. ``use_pallas=False`` routes to
+the pure-jnp oracle, which is what the dry-run lowers (compact HLO; the
+kernels are the TPU production path — see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .binary_probe import binary_probe_lb as _binary_probe_pallas
+from .decode_attention import decode_attention as _decode_attention_pallas
+from .mips_topk import mips_score as _mips_score_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def mips_score(x, q, valid, *, use_pallas: bool = True, **block_kwargs):
+    if not use_pallas:
+        return ref.mips_score_ref(x, q, valid)
+    return _mips_score_pallas(x, q, valid, interpret=_interpret(), **block_kwargs)
+
+
+def mips_topk(x, q, valid, k: int, *, use_pallas: bool = True, **block_kwargs):
+    """Fused verification scan + top-k: returns (scores (B,k), rows (B,k))."""
+    scores = mips_score(x, q, valid, use_pallas=use_pallas, **block_kwargs)  # (R, B)
+    top, idx = jax.lax.top_k(scores.T, k)  # (B, k)
+    return top, idx
+
+
+def binary_probe_lb(codes, q_code, q_proj, *, use_pallas: bool = True, **block_kwargs):
+    if not use_pallas:
+        return ref.binary_probe_lb_ref(codes, q_code, q_proj)
+    return _binary_probe_pallas(codes, q_code, q_proj, interpret=_interpret(), **block_kwargs)
+
+
+def decode_attention(q, k, v, cache_len, *, use_pallas: bool = True, **block_kwargs):
+    if not use_pallas:
+        return ref.decode_attention_ref(q, k, v, cache_len)
+    return _decode_attention_pallas(q, k, v, cache_len, interpret=_interpret(), **block_kwargs)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the shape/dtype
+sweep tests assert against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mips_score_ref(x: jax.Array, q: jax.Array, valid: jax.Array) -> jax.Array:
+    """scores = x @ q.T, -inf on invalid rows. x:(R,D) q:(B,D) valid:(R,)."""
+    scores = x.astype(jnp.float32) @ q.astype(jnp.float32).T
+    return jnp.where(valid.astype(bool)[:, None], scores, NEG_INF)
+
+
+def binary_probe_lb_ref(codes: jax.Array, q_code: jax.Array, q_proj: jax.Array) -> jax.Array:
+    """Theorem-3 group lower bounds. codes:(G,) q_code:() q_proj:(m,)."""
+    m = q_proj.shape[0]
+    shifts = jnp.arange(m, dtype=jnp.uint32)
+    bits = (((codes[:, None] ^ q_code) >> shifts) & jnp.uint32(1)).astype(jnp.float32)
+    return bits @ jnp.abs(q_proj).astype(jnp.float32) / jnp.sqrt(jnp.float32(m))
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, cache_len: jax.Array) -> jax.Array:
+    """Naive softmax decode attention. q:(B,KH,G,dh) k,v:(B,S,KH,dh) len:(B,)."""
+    b, kh, g, dh = q.shape
+    s = k.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+    scores = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    mask = jnp.arange(s)[None, None, None, :] < cache_len[:, None, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

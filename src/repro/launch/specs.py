@@ -1,0 +1,174 @@
+"""Abstract (ShapeDtypeStruct) inputs + shardings for every dry-run cell.
+
+No device allocation anywhere in this module — everything is eval_shape /
+ShapeDtypeStruct, so a 512-device mesh of host CPUs can lower and compile
+each (arch × shape × mesh) cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import ArchConfig, ShapeCfg
+from ..distributed import sharding as shard_lib
+from ..models import transformer as model_lib
+from ..train.loop import TrainCfg, TrainState, init_state, make_train_step
+from ..train.optimizer import AdamWState
+
+
+def model_dtype(cfg):
+    return jnp.bfloat16
+
+
+def abstract_params(cfg: ArchConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(
+        functools.partial(model_lib.init_params, cfg=cfg, dtype=model_dtype(cfg)), key
+    )
+
+
+def choose_microbatches(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh) -> int:
+    """Grad-accum factor so one microbatch's activations fit HBM.
+
+    Heuristic: target <= ~4096 tokens per data-parallel shard per microbatch
+    for >= 8B-param models, <= 16384 otherwise; clipped to divisors of the
+    global batch.
+    """
+    dp = shard_lib.axis_size(mesh, shard_lib.dp_axes(mesh))
+    tokens_per_shard = shape.global_batch * shape.seq_len // dp
+    big = cfg.param_count() >= 8e9
+    target = 2048 if big else 16384
+    mb = max(1, tokens_per_shard // target)
+    while shape.global_batch % mb:
+        mb -= 1
+    return max(1, mb)
+
+
+def train_cfg_for(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh) -> TrainCfg:
+    return TrainCfg(microbatches=choose_microbatches(cfg, shape, mesh), remat="full")
+
+
+def batch_structs(cfg: ArchConfig, shape: ShapeCfg) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.frontend == "vision":
+        batch["patches"] = jax.ShapeDtypeStruct((b, cfg.frontend_len, cfg.d_model), model_dtype(cfg))
+    if cfg.frontend == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct((b, cfg.frontend_len, cfg.d_model), model_dtype(cfg))
+    return batch
+
+
+def state_structs(cfg: ArchConfig, tcfg: TrainCfg):
+    params = abstract_params(cfg)
+    return jax.eval_shape(functools.partial(init_state, tcfg=tcfg), params)
+
+
+def state_shardings(cfg: ArchConfig, tcfg: TrainCfg, mesh: Mesh):
+    params_shape = abstract_params(cfg)
+    pspec = shard_lib.param_specs(params_shape, mesh)
+    zspec = shard_lib.zero1_specs(params_shape, mesh)
+    ns = lambda spec_tree: jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+    return TrainState(
+        params=ns(pspec),
+        opt=AdamWState(mu=ns(zspec), nu=ns(zspec), count=NamedSharding(mesh, P())),
+        ef=ns(zspec) if tcfg.compress_grads else None,
+        step=NamedSharding(mesh, P()),
+    )
+
+
+def cache_structs(cfg: ArchConfig, shape: ShapeCfg):
+    cache = jax.eval_shape(
+        functools.partial(model_lib.init_cache, cfg, shape.global_batch,
+                          shape.seq_len, model_dtype(cfg))
+    )
+    return cache
+
+
+def cache_shardings(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh):
+    specs = shard_lib.cache_specs(cfg, shape, mesh)
+    cache_shape = cache_structs(cfg, shape)
+
+    def spec_of(path, leaf):
+        name = shard_lib._path_str(path).split("/")[0]
+        sp = specs.get(name, None)
+        if isinstance(sp, tuple) and not isinstance(sp, P):
+            idx = int(shard_lib._path_str(path).split("/")[1])
+            sp = sp[idx]
+        if sp is None:
+            sp = P(*([None] * len(leaf.shape)))
+        return NamedSharding(mesh, sp)
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache_shape)
+
+
+# ---------------------------------------------------------------------------
+# step functions per cell kind
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh,
+               microbatch_override: int | None = None):
+    """Returns (fn, abstract_args, in_shardings, out_shardings) for the cell."""
+    ns = lambda spec: NamedSharding(mesh, spec)
+
+    if shape.kind == "train":
+        tcfg = train_cfg_for(cfg, shape, mesh)
+        if microbatch_override is not None:
+            import dataclasses
+            tcfg = dataclasses.replace(tcfg, microbatches=microbatch_override)
+        acc_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            shard_lib.zero1_specs(abstract_params(cfg), mesh))
+        mb_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(None, *s)),
+            shard_lib.batch_specs(cfg, shape, mesh))
+        p_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            shard_lib.param_specs(abstract_params(cfg), mesh))
+        step = make_train_step(cfg, tcfg, acc_shardings=acc_sh, mb_shardings=mb_sh,
+                               param_shardings=p_sh)
+        st_sh = state_shardings(cfg, tcfg, mesh)
+        b_sh = jax.tree.map(ns, shard_lib.batch_specs(cfg, shape, mesh))
+        args = (state_structs(cfg, tcfg), batch_structs(cfg, shape))
+        in_sh = (st_sh, b_sh)
+        out_sh = (st_sh, ns(P()))
+        return step, args, in_sh, out_sh
+
+    params_struct = abstract_params(cfg)
+    p_sh = jax.tree.map(ns, shard_lib.param_specs(params_struct, mesh))
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return model_lib.prefill(params, cfg, batch, shape.seq_len, remat="none")
+        args = (params_struct, batch_structs(cfg, shape))
+        c_sh = cache_shardings(cfg, shape, mesh)
+        in_sh = (p_sh, jax.tree.map(ns, shard_lib.batch_specs(cfg, shape, mesh)))
+        out_sh = (c_sh, ns(shard_lib.logits_spec(cfg, mesh)))
+        return prefill_step, args, in_sh, out_sh
+
+    if shape.kind == "decode":
+        def serve_step(params, cache, token):
+            return model_lib.decode_step(params, cfg, cache, token)
+        b = shape.global_batch
+        token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        args = (params_struct, cache_structs(cfg, shape), token)
+        c_sh = cache_shardings(cfg, shape, mesh)
+        t_sh = ns(shard_lib.decode_token_spec(cfg, shape, mesh))
+        in_sh = (p_sh, c_sh, t_sh)
+        out_sh = (ns(shard_lib.logits_spec(cfg, mesh)), c_sh)
+        return serve_step, args, in_sh, out_sh
+
+    raise ValueError(shape.kind)
+
+
+def cell_applicable(cfg: ArchConfig, shape: ShapeCfg):
+    """(ok, reason) — long_500k only for sub-quadratic families (DESIGN §6)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "skipped(full-attention)"
+    return True, ""

@@ -1,0 +1,273 @@
+"""GQA attention: blockwise-causal training path (flash-style lax.scan, no
+S x S materialisation), sliding-window support, qk-norm, RoPE; decode path
+against a KV cache (pure-jnp flash-decode; the Pallas `decode_attention`
+kernel is the TPU production path and is numerically validated against the
+same reference).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init, rms_norm
+from .scan_util import scan as _scan
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype=jnp.float32):
+    d, h, kh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(ks[0], (d, h * dh), dtype=dtype),
+        "wk": dense_init(ks[1], (d, kh * dh), dtype=dtype),
+        "wv": dense_init(ks[2], (d, kh * dh), dtype=dtype),
+        "wo": dense_init(ks[3], (h * dh, d), scale=(h * dh) ** -0.5, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = jnp.ones((dh,), dtype)
+        params["k_norm"] = jnp.ones((dh,), dtype)
+    return params
+
+
+def _project_qkv(params, cfg, x, positions):
+    b, s, d = x.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = (x @ params["wq"]).reshape(b, s, h, dh)
+    k = (x @ params["wk"]).reshape(b, s, kh, dh)
+    v = (x @ params["wv"]).reshape(b, s, kh, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask_for(s, block, blk_idx, *, window: int, bidirectional: bool):
+    q_pos = jnp.arange(s)
+    kv_pos = blk_idx * block + jnp.arange(block)
+    if bidirectional:
+        mask = jnp.broadcast_to(kv_pos[None, :] < s, (s, block))
+    else:
+        mask = kv_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        mask &= kv_pos[None, :] < s
+    return mask
+
+
+def _blocks(x, block):
+    b, s, kh, dh = x.shape
+    nblk = -(-s // block)
+    sp = nblk * block
+    if sp != s:
+        x = jnp.pad(x, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    return jnp.moveaxis(x.reshape(b, nblk, block, kh, dh), 1, 0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_core(qg, k, v, window, bidirectional, block):
+    out, _ = _flash_fwd_impl(qg, k, v, window, bidirectional, block)
+    return out
+
+
+def _flash_fwd_impl(qg, k, v, window, bidirectional, block):
+    """qg: (B,S,KH,G,dh) pre-scaled f32; k,v: (B,S,KH,dh) f32.
+    Online-softmax forward; returns (out (B,KH,G,S,dh), lse (B,KH,G,S))."""
+    b, s, kh, g, dh = qg.shape
+    qf = jnp.moveaxis(qg, 1, 3)  # (B,KH,G,S,dh)
+
+    def body(carry, blk):
+        m_prev, l_prev, acc = carry
+        k_blk, v_blk, blk_idx = blk
+        scores = jnp.einsum("bkgsd,btkd->bkgst", qf, k_blk)
+        mask = _mask_for(s, block, blk_idx, window=window, bidirectional=bidirectional)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bkgst,btkd->bkgsd", p, v_blk)
+        return (m_new, l_new, acc), None
+
+    nblk = -(-s // block)
+    init = (
+        jnp.full((b, kh, g, s), NEG_INF, jnp.float32),
+        jnp.zeros((b, kh, g, s), jnp.float32),
+        jnp.zeros((b, kh, g, s, dh), jnp.float32),
+    )
+    (m, l, acc), _ = _scan(
+        body, init, (_blocks(k, block), _blocks(v, block), jnp.arange(nblk)))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe[..., None]
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+def _flash_fwd(qg, k, v, window, bidirectional, block):
+    out, lse = _flash_fwd_impl(qg, k, v, window, bidirectional, block)
+    return out, (qg, k, v, out, lse)
+
+
+def _flash_bwd(window, bidirectional, block, res, d_out):
+    """Flash-attention backward: recompute scores blockwise from (out, lse);
+    memory is linear in S (no stacked softmax residuals — this is what keeps
+    the train_4k cells inside v5e HBM, EXPERIMENTS.md §Perf iter 1)."""
+    qg, k, v, out, lse = res
+    b, s, kh, g, dh = qg.shape
+    qf = jnp.moveaxis(qg, 1, 3)                        # (B,KH,G,S,dh)
+    delta = jnp.sum(d_out * out, axis=-1)              # (B,KH,G,S)
+    nblk = -(-s // block)
+
+    def body(dq_acc, blk):
+        k_blk, v_blk, blk_idx = blk
+        scores = jnp.einsum("bkgsd,btkd->bkgst", qf, k_blk)
+        mask = _mask_for(s, block, blk_idx, window=window, bidirectional=bidirectional)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        p = jnp.exp(scores - lse[..., None])           # (B,KH,G,S,t)
+        dv_blk = jnp.einsum("bkgst,bkgsd->btkd", p, d_out)
+        dp = jnp.einsum("bkgsd,btkd->bkgst", d_out, v_blk)
+        ds = p * (dp - delta[..., None])
+        dq_acc = dq_acc + jnp.einsum("bkgst,btkd->bkgsd", ds, k_blk)
+        dk_blk = jnp.einsum("bkgst,bkgsd->btkd", ds, qf)
+        return dq_acc, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros_like(qf)
+    dq, (dk_blks, dv_blks) = _scan(
+        body, dq0, (_blocks(k, block), _blocks(v, block), jnp.arange(nblk)))
+    dk = jnp.moveaxis(dk_blks, 0, 1).reshape(b, nblk * block, kh, dh)[:, :s]
+    dv = jnp.moveaxis(dv_blks, 0, 1).reshape(b, nblk * block, kh, dh)[:, :s]
+    dq = jnp.moveaxis(dq, 3, 1)                        # back to (B,S,KH,G,dh)
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _flash_causal(q, k, v, *, window: int = 0, block: int = 512, bidirectional: bool = False):
+    """Blockwise online-softmax attention. q:(B,S,H,dh) k,v:(B,S,KH,dh).
+
+    window > 0 restricts attention to the trailing `window` positions (SWA).
+    Forward and backward both stream KV blocks (custom_vjp): activation
+    memory is O(S) — only (out, lse) are saved.
+    """
+    b, s, h, dh = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = dh ** -0.5
+    qg = (q.reshape(b, s, kh, g, dh) * scale).astype(jnp.float32)
+    out = _flash_core(qg, k.astype(jnp.float32), v.astype(jnp.float32),
+                      window, bidirectional, block)
+    return jnp.moveaxis(out, 3, 1).reshape(b, s, h, dh).astype(q.dtype)
+
+
+def attention_train(params, cfg, x, positions, *, bidirectional: bool = False):
+    """Full training/prefill attention. x: (B, S, d) -> (B, S, d)."""
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    window = cfg.window if cfg.attn == "swa" else 0
+    out = _flash_causal(q, k, v, window=window, bidirectional=bidirectional)
+    b, s, _, _ = out.shape
+    return out.reshape(b, s, -1) @ params["wo"], (k, v)
+
+
+def flash_decode(q, k_cache, v_cache, cache_len, *, block: int = 1024):
+    """One-token decode vs KV cache, pure-jnp online softmax over KV blocks.
+
+    q: (B, H, dh); caches: (B, S, KH, dh); cache_len: (B,). Returns (B, H, dh).
+    Mirrors kernels/decode_attention.py (the Pallas path).
+    """
+    b, h, dh = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    scale = dh ** -0.5
+    qg = q.reshape(b, kh, g, dh).astype(jnp.float32) * scale
+    nblk = -(-s // block)
+    sp = nblk * block
+    if sp != s:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    kb = jnp.moveaxis(k_cache.reshape(b, nblk, block, kh, dh), 1, 0).astype(jnp.float32)
+    vb = jnp.moveaxis(v_cache.reshape(b, nblk, block, kh, dh), 1, 0).astype(jnp.float32)
+
+    def body(carry, blk):
+        m_prev, l_prev, acc = carry
+        k_blk, v_blk, blk_idx = blk
+        pos = blk_idx * block + jnp.arange(block)
+        scores = jnp.einsum("bkgd,btkd->bkgt", qg, k_blk)
+        mask = pos[None, :] < cache_len[:, None]
+        scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+        m_cur = jnp.max(scores, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bkgt,btkd->bkgd", p, v_blk)
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((b, kh, g), NEG_INF, jnp.float32),
+        jnp.zeros((b, kh, g), jnp.float32),
+        jnp.zeros((b, kh, g, dh), jnp.float32),
+    )
+    (m, l, acc), _ = _scan(body, init, (kb, vb, jnp.arange(nblk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, dh).astype(q.dtype)
+
+
+def attention_decode(params, cfg, x, k_cache, v_cache, cache_len):
+    """Single-token decode. x: (B, 1, d); caches hold previous K/V (this
+    token's K/V must already be written at position cache_len - 1)."""
+    b = x.shape[0]
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    positions = (cache_len - 1)[:, None]
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    out = flash_decode(q.reshape(b, h, dh), k_cache, v_cache, cache_len)
+    return out.reshape(b, 1, h * dh) @ params["wo"], (k_new, v_new)
+
+
+def decode_kv(params, cfg, x, cache_len):
+    """Project this token's K/V (for the cache write before attention)."""
+    positions = (cache_len - 1)[:, None]
+    _, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    return k_new, v_new
+
+
+def init_cross_attention(key, cfg, dtype=jnp.float32):
+    return init_attention(key, cfg, dtype=dtype)
+
+
+def cross_attention(params, cfg, x, enc_k, enc_v, enc_len):
+    """Decoder->encoder attention (whisper). x: (B, S, d); enc K/V cached."""
+    b, s, d = x.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = (x @ params["wq"]).reshape(b, s, h, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+    outs = []
+    # loop-free: fold S into batch for flash_decode (each target position
+    # attends the full encoder output — no causal structure)
+    qf = q.reshape(b, s * h, dh).reshape(b, s, h, dh)
+    scale = dh ** -0.5
+    g = h // kh
+    scores = jnp.einsum("bshd,btkd->bhst", qf.astype(jnp.float32) * scale,
+                        enc_k.astype(jnp.float32).repeat(g, axis=2))
+    mask = jnp.arange(enc_k.shape[1])[None, :] < enc_len[:, None]
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,btkd->bshd", w, enc_v.astype(jnp.float32).repeat(g, axis=2))
+    return out.reshape(b, s, h * dh).astype(x.dtype) @ params["wo"]
+
+
+def encode_kv(params, cfg, enc_out):
+    """Precompute encoder K/V for cross attention."""
+    b, t, d = enc_out.shape
+    kh, dh = cfg.n_kv_heads, cfg.head_dim_
+    k = (enc_out @ params["wk"]).reshape(b, t, kh, dh)
+    v = (enc_out @ params["wv"]).reshape(b, t, kh, dh)
+    if cfg.qk_norm:
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    return k, v

@@ -1,0 +1,103 @@
+"""Mixture-of-Experts layer: top-k softmax router + permutation-based
+dispatch (sort tokens by expert, gather into (E, C, d) capacity buffers,
+batched expert matmuls, scatter back). Compact HLO (sort/gather/dot/scatter)
+that lowers to all-to-all under expert-parallel sharding, and FLOP-faithful
+for the roofline (2 * 2 * T * topk * d * ff active FLOPs + capacity waste).
+
+Supports shared experts (qwen2-moe: 4 shared + 60 routed) applied densely.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    d, ff = cfg.d_model, cfg.d_ff
+    e = cfg.moe.n_experts
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": dense_init(ks[0], (d, e), scale=d ** -0.5, dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, ff), dtype=dtype),
+        "w_up": dense_init(ks[2], (e, d, ff), dtype=dtype),
+        "w_down": dense_init(ks[3], (e, ff, d), dtype=dtype),
+    }
+    if cfg.moe.n_shared:
+        sh = cfg.moe.n_shared * ff
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        params["shared"] = {
+            "w_gate": dense_init(k1, (d, sh), dtype=dtype),
+            "w_up": dense_init(k2, (d, sh), dtype=dtype),
+            "w_down": dense_init(k3, (sh, d), dtype=dtype),
+        }
+    return params
+
+
+def apply_moe(params, cfg, x, *, capacity_factor: float = 1.25):
+    """x: (B, S, d) -> (B, S, d). Permutation-based top-k dispatch,
+    PER SEQUENCE: the (token-slot -> expert) sort runs within each batch row,
+    so with batch sharded over the data axes every sort/gather/scatter is
+    local to its shard (a single global argsort forces GSPMD to replicate
+    the full token stream — measured 184 s of collectives on
+    moonshot train_4k; EXPERIMENTS.md §Perf iter 3). Capacity is therefore
+    per-sequence: C = S * topk * cf / E."""
+    b, s, d = x.shape
+    e, topk = cfg.moe.n_experts, cfg.moe.top_k
+
+    logits = (x.astype(jnp.float32) @ params["router"])            # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, choice = jax.lax.top_k(probs, topk)                      # (B, S, topk)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)   # renormalise
+
+    # flatten (token, slot) pairs within each row and sort by expert
+    flat_expert = choice.reshape(b, s * topk)
+    flat_token = jnp.broadcast_to(jnp.repeat(jnp.arange(s), topk), (b, s * topk))
+    flat_gate = gate.reshape(b, s * topk)
+    order = jnp.argsort(flat_expert, axis=1, stable=True)          # per-row sort
+    sorted_expert = jnp.take_along_axis(flat_expert, order, axis=1)
+    sorted_token = jnp.take_along_axis(flat_token, order, axis=1)
+    sorted_gate = jnp.take_along_axis(flat_gate, order, axis=1)
+
+    # per-expert capacity: position within the expert's run (per row)
+    capacity = max(1, int(capacity_factor * s * topk / e))
+    pos = jnp.broadcast_to(jnp.arange(s * topk), (b, s * topk))
+    run_start = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(e)))(sorted_expert)
+    slot = pos - jnp.take_along_axis(run_start, sorted_expert, axis=1)
+    keep = slot < capacity
+    dest = jnp.where(keep, sorted_expert * capacity + slot, e * capacity)
+
+    # gather tokens into per-row capacity buffers (trap row absorbs drops)
+    def row_dispatch(xt_row, dest_row, tok_row, keep_row):
+        buf = jnp.zeros((e * capacity + 1, d), xt_row.dtype)
+        vals = xt_row[tok_row] * keep_row[:, None].astype(xt_row.dtype)
+        return buf.at[dest_row].set(vals)[:-1]
+
+    buf = jax.vmap(row_dispatch)(x, dest, sorted_token, keep)       # (B, E*C, d)
+    buf = buf.reshape(b, e, capacity, d)
+
+    # batched expert MLPs (B, E, C, d) x (E, d, ff): B on data, E on model
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["w_gate"]))
+    u = jnp.einsum("becd,edf->becf", buf, params["w_up"])
+    y = jnp.einsum("becf,efd->becd", g * u, params["w_down"])       # (B, E, C, d)
+
+    # scatter back with gate weights (per row, local)
+    def row_combine(y_row, dest_row, tok_row, keep_row, gate_row):
+        y_flat = y_row.reshape(e * capacity, d)
+        contrib = jnp.where(keep_row[:, None],
+                            y_flat[jnp.minimum(dest_row, e * capacity - 1)], 0.0)
+        out = jnp.zeros((s, d), y_row.dtype)
+        return out.at[tok_row].add((contrib * gate_row[:, None]).astype(y_row.dtype))
+
+    out = jax.vmap(row_combine)(y, dest, sorted_token, keep, sorted_gate)
+
+    if cfg.moe.n_shared:
+        sh = params["shared"]
+        out = out + (jax.nn.silu(x @ sh["w_gate"]) * (x @ sh["w_up"])) @ sh["w_down"]
+
+    # auxiliary load-balance loss (Switch-style), returned for the trainer
+    density = jnp.mean(jax.nn.one_hot(choice[..., 0], e), axis=(0, 1))
+    router_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(density * router_prob)
+    return out, aux

@@ -1,0 +1,36 @@
+"""Central lax.scan wrapper with a global unroll switch.
+
+XLA's cost_analysis counts a while-loop body ONCE regardless of trip count,
+so launch/roofline.py measures small UNROLLED model variants and
+extrapolates linearly in depth/microbatches. Every structural scan in the
+model stack (layers, microbatches, flash-attention KV blocks, Mamba/mLSTM
+chunks) routes through here; only the sLSTM time scan stays a real scan
+(unrolling seq_len steps is infeasible) and gets an analytic correction in
+the roofline (see launch/roofline.py::slstm_correction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+UNROLL = False
+
+
+def set_unroll(value: bool) -> None:
+    global UNROLL
+    UNROLL = bool(value)
+
+
+def scan(body, carry, xs, *, force_loop: bool = False):
+    if not UNROLL or force_loop:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *t: jnp.stack(t), *ys)
+    else:
+        ys = None
+    return carry, ys

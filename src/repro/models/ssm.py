@@ -1,0 +1,142 @@
+"""Mamba2-style selective state-space block (SSD), chunked for training and
+single-step for decode. Faithful to the block structure (in_proj -> short
+depthwise conv -> per-head scalar decay a = exp(-softplus(A) dt) -> state
+update h = a h + dt x B^T -> y = C h + D x -> gated out_proj); the chunked
+scan replaces the authors' fused CUDA kernel (DESIGN.md §10).
+
+State: (B, H, P, N) with P = head dim, N = cfg.ssm.state_dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+from .scan_util import scan as _scan
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    inner = cfg.ssm.expand * d
+    p = cfg.ssm.head_dim
+    h = inner // p
+    n = cfg.ssm.state_dim
+    return d, inner, h, p, n
+
+
+def init_mamba(key, cfg, dtype=jnp.float32):
+    d, inner, h, p, n = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        # order: [z(inner) | x(inner) | B(n) | C(n) | dt(h)]
+        "in_proj": dense_init(ks[0], (d, 2 * inner + 2 * n + h), dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm.conv_dim, inner + 2 * n), scale=0.3, dtype=dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((inner,), dtype),
+        "out_proj": dense_init(ks[2], (inner, d), dtype=dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    d, inner, h, p, n = _dims(cfg)
+    z = proj[..., :inner]
+    xbc = proj[..., inner:2 * inner + 2 * n]
+    dt = proj[..., 2 * inner + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_state=None):
+    """Short depthwise causal conv. xbc: (B, S, Cd); conv_w: (K, Cd)."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (k - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = conv_state  # (B, K-1, Cd)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def mamba_chunked(params, cfg, x, *, chunk: int = 256):
+    """Training/prefill pass. x: (B, S, d) -> (B, S, d), final state."""
+    d, inner, h, p, n = _dims(cfg)
+    b, s, _ = x.shape
+    proj = x @ params["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"])
+    xs = xbc[..., :inner].reshape(b, s, h, p)
+    bmat = xbc[..., inner:inner + n]
+    cmat = xbc[..., inner + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = jnp.exp(-jnp.exp(params["a_log"])[None, None] * dt)           # (B,S,H) decay in (0,1)
+
+    nchunk = -(-s // chunk)
+    sp = nchunk * chunk
+    if sp != s:
+        pad = lambda t: jnp.pad(t, ((0, 0), (0, sp - s)) + ((0, 0),) * (t.ndim - 2))
+        xs, bmat, cmat, dt, a = map(pad, (xs, bmat, cmat, dt, a))
+    xs = xs.reshape(b, nchunk, chunk, h, p)
+    bmat = bmat.reshape(b, nchunk, chunk, n)
+    cmat = cmat.reshape(b, nchunk, chunk, n)
+    dt = dt.reshape(b, nchunk, chunk, h)
+    a = a.reshape(b, nchunk, chunk, h)
+
+    log_a = jnp.log(jnp.maximum(a, 1e-20))
+    cum = jnp.cumsum(log_a, axis=2)                                   # (B,NC,L,H)
+
+    def body(hstate, blk):
+        xs_c, b_c, c_c, dt_c, cum_c, la_c = blk
+        # hstate: (B, H, P, N)
+        total = cum_c[:, -1]                                          # (B,H)
+        # inter-chunk: y_inter[t] = C_t . (decay(0..t) * h_in)
+        decay_in = jnp.exp(cum_c)                                     # (B,L,H)
+        y_inter = jnp.einsum("bln,bhpn,blh->blhp", c_c, hstate, decay_in)
+        # intra-chunk: causal kernel G[t,s] = exp(cum[t]-cum[s]) dt[s]
+        rel = cum_c[:, :, None, :] - cum_c[:, None, :, :]             # (B,L,L,H)
+        causal = jnp.tril(jnp.ones((rel.shape[1], rel.shape[1]), bool))
+        g = jnp.where(causal[None, :, :, None], jnp.exp(rel), 0.0) * dt_c[:, None]
+        scores = jnp.einsum("bln,bmn->blm", c_c, b_c)                 # (B,L,L)
+        y_intra = jnp.einsum("blm,blmh,bmhp->blhp", scores, g, xs_c)
+        # state update: h_out = decay_total h_in + sum_s decay(s..end) dt_s x_s b_s^T
+        decay_out = jnp.exp(total[:, None] - cum_c)                   # (B,L,H)
+        dx = dt_c[..., None] * xs_c                                   # (B,L,H,P)
+        h_new = jnp.exp(total)[..., None, None] * hstate + jnp.einsum(
+            "blh,blhp,bln->bhpn", decay_out, dx, b_c
+        )
+        return h_new, y_inter + y_intra
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    blks = tuple(jnp.moveaxis(t, 1, 0) for t in (xs, bmat, cmat, dt, cum, log_a))
+    h_fin, ys = _scan(body, h0, blks)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, sp, h, p)[:, :s]
+    y = y + params["d_skip"][None, None, :, None] * xs.reshape(b, sp, h, p)[:, :s]
+    y = y.reshape(b, s, inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"], (h_fin, conv_state)
+
+
+def mamba_step(params, cfg, x, state):
+    """Decode step. x: (B, 1, d); state = (h (B,H,P,N), conv (B,K-1,Cd))."""
+    d, inner, h, p, n = _dims(cfg)
+    b = x.shape[0]
+    hstate, conv_state = state
+    proj = x @ params["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], conv_state)
+    xbc = xbc[:, 0]
+    xs = xbc[..., :inner].reshape(b, h, p)
+    bmat = xbc[..., inner:inner + n]
+    cmat = xbc[..., inner + n:]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(params["a_log"])[None] * dt1)
+    h_new = a[..., None, None] * hstate + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt1, xs.astype(jnp.float32), bmat.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cmat.astype(jnp.float32), h_new)
+    y = y + params["d_skip"][None, :, None] * xs
+    y = y.reshape(b, 1, inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"], (h_new, conv_state)

@@ -1,0 +1,526 @@
+"""Model assembly for the assigned-architecture pool.
+
+One config-driven implementation with three entry points:
+
+  loss_fn(params, cfg, batch)            — training loss (+ aux metrics)
+  prefill(params, cfg, batch, cache_len) — build KV/state cache, last logits
+  decode_step(params, cfg, cache, token) — one-token decode
+
+Block patterns: "attn" (dense/MoE/GQA/SWA/qk-norm), "xlstm_7_1",
+"zamba2" (Mamba2 + shared attention block), "encdec" (whisper).
+Layers are stacked on a leading axis and executed with lax.scan (compact
+HLO for the 512-device dry-run); remat policy is configurable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_lib
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from . import xlstm as xlstm_lib
+from .layers import dense_init, init_mlp, apply_mlp, rms_norm
+
+Params = Dict[str, Any]
+
+# Unroll switch lives in scan_util (shared by attention/ssm/xlstm inner
+# scans); see that module for why (roofline FLOP accounting).
+from .scan_util import scan as _scan  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block_attn(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn_lib.init_attention(k1, cfg, dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_lib.init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _stack_init(fn, key, n, *args):
+    return jax.vmap(lambda k: fn(k, *args))(jax.random.split(key, n))
+
+
+def init_params(key, cfg, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, 8)
+    vp = cfg.vocab_padded
+    params: Params = {
+        "embed": dense_init(keys[0], (vp, cfg.d_model), scale=0.02, dtype=dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1], (cfg.d_model, vp), dtype=dtype)
+    if cfg.frontend != "none":
+        params["frontend_proj"] = dense_init(keys[2], (cfg.d_model, cfg.d_model), dtype=dtype)
+
+    if cfg.block_pattern == "attn":
+        params["blocks"] = _stack_init(_init_block_attn, keys[3], cfg.n_layers, cfg, dtype)
+    elif cfg.block_pattern == "xlstm_7_1":
+        n_groups = cfg.n_layers // 8
+        params["mlstm"] = jax.vmap(
+            lambda k: _stack_init(xlstm_lib.init_mlstm, k, 7, cfg, dtype)
+        )(jax.random.split(keys[3], n_groups))
+        params["slstm"] = _stack_init(xlstm_lib.init_slstm, keys[4], n_groups, cfg, dtype)
+        params["ln_m"] = jnp.ones((n_groups, 7, cfg.d_model), dtype)
+        params["ln_s"] = jnp.ones((n_groups, cfg.d_model), dtype)
+    elif cfg.block_pattern == "zamba2":
+        every = cfg.shared_attn_every
+        n_groups, rem = cfg.n_layers // every, cfg.n_layers % every
+        params["mamba"] = jax.vmap(
+            lambda k: _stack_init(ssm_lib.init_mamba, k, every, cfg, dtype)
+        )(jax.random.split(keys[3], n_groups))
+        params["mamba_ln"] = jnp.ones((n_groups, every, cfg.d_model), dtype)
+        if rem:
+            params["mamba_tail"] = _stack_init(ssm_lib.init_mamba, keys[4], rem, cfg, dtype)
+            params["mamba_tail_ln"] = jnp.ones((rem, cfg.d_model), dtype)
+        params["shared"] = _init_block_attn(keys[5], cfg, dtype)
+    elif cfg.block_pattern == "encdec":
+        params["enc_blocks"] = _stack_init(_init_block_attn, keys[3], cfg.enc_layers, cfg, dtype)
+        params["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+
+        def _init_dec(k, cfg, dtype):
+            k1, k2 = jax.random.split(k)
+            p = _init_block_attn(k1, cfg, dtype)
+            p["ln_x"] = jnp.ones((cfg.d_model,), dtype)
+            p["xattn"] = attn_lib.init_cross_attention(k2, cfg, dtype)
+            return p
+
+        params["blocks"] = _stack_init(_init_dec, keys[4], cfg.n_layers, cfg, dtype)
+    else:
+        raise ValueError(cfg.block_pattern)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _logits(params, cfg, x):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ w).astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits
+
+
+def cross_entropy(logits, labels):
+    """Stable CE with label -1 = ignore. logits (…,V) f32, labels (…,)."""
+    valid = labels >= 0
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, lse - ll, 0.0)
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def _maybe_remat(fn, policy: Optional[str]):
+    if policy in (None, "none"):
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    raise ValueError(policy)
+
+
+# ---------------------------------------------------------------------------
+# forward passes per pattern
+# ---------------------------------------------------------------------------
+
+def _attn_backbone(params, cfg, x, positions, *, remat="full", bidirectional=False,
+                   collect_kv=False, blocks_key="blocks"):
+    """Scan over homogeneous attention blocks. Returns (x, aux, kv?)."""
+
+    def block(carry, lp):
+        x, aux = carry
+        h, kv = attn_lib.attention_train(
+            lp["attn"], cfg, rms_norm(x, lp["ln1"], cfg.norm_eps), positions,
+            bidirectional=bidirectional,
+        )
+        x = x + h
+        if cfg.moe is not None and "moe" in lp:
+            h, a = moe_lib.apply_moe(lp["moe"], cfg, rms_norm(x, lp["ln2"], cfg.norm_eps),
+                                     capacity_factor=cfg.moe.capacity_factor)
+            aux = aux + a
+        else:
+            h = apply_mlp(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+        x = x + h
+        out = kv if collect_kv else None
+        return (x, aux), out
+
+    (x, aux), kvs = _scan(_maybe_remat(block, remat), (x, jnp.float32(0.0)),
+                                 params[blocks_key])
+    return x, aux, kvs
+
+
+def _xlstm_backbone(params, cfg, x, *, remat="full", states=None, collect_states=False):
+    n_groups = cfg.n_layers // 8
+
+    def group(carry, gp):
+        x, _ = carry
+
+        def mblock(carry2, lp):
+            h, _ = xlstm_lib.mlstm_chunked(
+                lp["p"], cfg, rms_norm(carry2, lp["ln"], cfg.norm_eps))
+            return carry2 + h, None
+
+        x, _ = _scan(mblock, x, {"p": gp["mlstm"], "ln": gp["ln_m"]})
+        h, _ = xlstm_lib.slstm_scan(gp["slstm"], cfg, rms_norm(x, gp["ln_s"], cfg.norm_eps))
+        return (x + h, jnp.float32(0.0)), None
+
+    stacked = {"mlstm": params["mlstm"], "slstm": params["slstm"],
+               "ln_m": params["ln_m"], "ln_s": params["ln_s"]}
+    (x, _), _ = _scan(_maybe_remat(group, remat), (x, jnp.float32(0.0)), stacked)
+    return x
+
+
+def _zamba_backbone(params, cfg, x, positions, *, remat="full"):
+    every = cfg.shared_attn_every
+
+    def group(carry, gp):
+        x, aux = carry
+
+        def mblock(c, lp):
+            h, _ = ssm_lib.mamba_chunked(lp["p"], cfg, rms_norm(c, lp["ln"], cfg.norm_eps))
+            return c + h, None
+
+        x, _ = _scan(mblock, x, {"p": gp["mamba"], "ln": gp["ln"]})
+        sp = params["shared"]
+        h, _ = attn_lib.attention_train(sp["attn"], cfg,
+                                        rms_norm(x, sp["ln1"], cfg.norm_eps), positions)
+        x = x + h
+        x = x + apply_mlp(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps))
+        return (x, aux), None
+
+    stacked = {"mamba": params["mamba"], "ln": params["mamba_ln"]}
+    (x, aux), _ = _scan(_maybe_remat(group, remat), (x, jnp.float32(0.0)), stacked)
+    if "mamba_tail" in params:
+        def tail(c, lp):
+            h, _ = ssm_lib.mamba_chunked(lp["p"], cfg, rms_norm(c, lp["ln"], cfg.norm_eps))
+            return c + h, None
+        x, _ = _scan(tail, x, {"p": params["mamba_tail"], "ln": params["mamba_tail_ln"]})
+    return x
+
+
+def _embed_inputs(params, cfg, batch):
+    """Token embedding + modality-stub prepend. Returns (x, label_offset)."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+    offset = 0
+    if cfg.frontend == "vision":
+        patches = batch["patches"] @ params["frontend_proj"]
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        offset = cfg.frontend_len
+    return x, offset
+
+
+# ---------------------------------------------------------------------------
+# public: training loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, cfg, batch, *, remat: str = "full"):
+    """batch: tokens (B,S) int32, labels (B,S) int32 (-1 ignored);
+    + patches (B,F,d) for vlm; + frames (B,F,d) for audio enc-dec."""
+    if cfg.block_pattern == "encdec":
+        return _loss_encdec(params, cfg, batch, remat=remat)
+    x, offset = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    aux = jnp.float32(0.0)
+    if cfg.block_pattern == "attn":
+        x, aux, _ = _attn_backbone(params, cfg, x, positions, remat=remat)
+    elif cfg.block_pattern == "xlstm_7_1":
+        x = _xlstm_backbone(params, cfg, x, remat=remat)
+    elif cfg.block_pattern == "zamba2":
+        x = _zamba_backbone(params, cfg, x, positions, remat=remat)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if offset:
+        x = x[:, offset:]
+    logits = _logits(params, cfg, x)
+    loss = cross_entropy(logits, batch["labels"])
+    return loss + 0.01 * aux, {"loss": loss, "aux": aux}
+
+
+def _loss_encdec(params, cfg, batch, *, remat="full"):
+    frames = batch["frames"] @ params["frontend_proj"]
+    b, f, _ = frames.shape
+    enc_pos = jnp.broadcast_to(jnp.arange(f), (b, f))
+    enc, _, _ = _attn_backbone(params, cfg, frames, enc_pos, remat=remat,
+                               bidirectional=True, blocks_key="enc_blocks")
+    enc = rms_norm(enc, params["enc_norm"], cfg.norm_eps)
+    enc_len = jnp.full((b,), f, jnp.int32)
+
+    x = params["embed"][batch["tokens"]]
+    s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def block(carry, lp):
+        x, aux = carry
+        h, _ = attn_lib.attention_train(lp["attn"], cfg,
+                                        rms_norm(x, lp["ln1"], cfg.norm_eps), positions)
+        x = x + h
+        x = x + attn_lib.cross_attention(
+            lp["xattn"], cfg, rms_norm(x, lp["ln_x"], cfg.norm_eps),
+            *attn_lib.encode_kv(lp["xattn"], cfg, enc), enc_len)
+        x = x + apply_mlp(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+        return (x, aux), None
+
+    (x, aux), _ = _scan(_maybe_remat(block, remat), (x, jnp.float32(0.0)),
+                               params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    loss = cross_entropy(_logits(params, cfg, x), batch["labels"])
+    return loss, {"loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# public: prefill + decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch_size: int, max_len: int, dtype=jnp.float32) -> Params:
+    kh, dh = cfg.n_kv_heads, cfg.head_dim_
+    cache: Params = {"len": jnp.zeros((batch_size,), jnp.int32)}
+    kv_len = min(max_len, cfg.window) if cfg.attn == "swa" else max_len
+    if cfg.block_pattern == "attn":
+        cache["k"] = jnp.zeros((cfg.n_layers, batch_size, kv_len, kh, dh), dtype)
+        cache["v"] = jnp.zeros_like(cache["k"])
+    elif cfg.block_pattern == "xlstm_7_1":
+        n_groups = cfg.n_layers // 8
+        d, h, p = cfg.d_model, cfg.n_heads, cfg.d_model // cfg.n_heads
+        cache["mlstm_c"] = jnp.zeros((n_groups, 7, batch_size, h, p, p), jnp.float32)
+        cache["mlstm_n"] = jnp.zeros((n_groups, 7, batch_size, h, p), jnp.float32)
+        cache["mlstm_m"] = jnp.full((n_groups, 7, batch_size, h), -jnp.inf, jnp.float32)
+        cache["slstm"] = tuple(
+            (jnp.full if i == 3 else jnp.zeros)((n_groups, batch_size, h, p), jnp.float32)
+            if i != 3 else jnp.full((n_groups, batch_size, h, p), -jnp.inf, jnp.float32)
+            for i in range(4)
+        )
+    elif cfg.block_pattern == "zamba2":
+        every = cfg.shared_attn_every
+        n_groups, rem = cfg.n_layers // every, cfg.n_layers % every
+        d = cfg.d_model
+        inner = cfg.ssm.expand * d
+        h = inner // cfg.ssm.head_dim
+        conv_c = inner + 2 * cfg.ssm.state_dim
+        cache["mamba_h"] = jnp.zeros((n_groups, every, batch_size, h, cfg.ssm.head_dim,
+                                      cfg.ssm.state_dim), jnp.float32)
+        cache["mamba_conv"] = jnp.zeros((n_groups, every, batch_size,
+                                         cfg.ssm.conv_dim - 1, conv_c), dtype)
+        if rem:
+            cache["tail_h"] = jnp.zeros((rem, batch_size, h, cfg.ssm.head_dim,
+                                         cfg.ssm.state_dim), jnp.float32)
+            cache["tail_conv"] = jnp.zeros((rem, batch_size, cfg.ssm.conv_dim - 1, conv_c), dtype)
+        cache["shared_k"] = jnp.zeros((n_groups, batch_size, kv_len, kh, dh), dtype)
+        cache["shared_v"] = jnp.zeros_like(cache["shared_k"])
+    elif cfg.block_pattern == "encdec":
+        cache["k"] = jnp.zeros((cfg.n_layers, batch_size, kv_len, kh, dh), dtype)
+        cache["v"] = jnp.zeros_like(cache["k"])
+        cache["xk"] = jnp.zeros((cfg.n_layers, batch_size, cfg.frontend_len, kh, dh), dtype)
+        cache["xv"] = jnp.zeros_like(cache["xk"])
+        cache["enc_len"] = jnp.zeros((batch_size,), jnp.int32)
+    return cache
+
+
+def _write_kv(cache_k, k_new, pos):
+    """Scatter one token's KV at per-sequence position. cache (B,S,KH,dh)."""
+    def one(c, kn, p):
+        return jax.lax.dynamic_update_slice(c, kn, (p, 0, 0))
+    return jax.vmap(one)(cache_k, k_new, pos)
+
+
+def decode_step(params, cfg, cache, token, *, return_hidden: bool = False):
+    """token: (B, 1) int32. Returns (logits (B, vocab_padded), cache);
+    with return_hidden=True returns the post-norm hidden state (B, d)
+    instead of logits (the ProMIPS approximate-logits path queries the
+    c-AMIP index with it — serve/engine.py)."""
+    x = params["embed"][token]
+    b = x.shape[0]
+    new_len = cache["len"] + 1
+    pos_write = new_len - 1
+    if cfg.attn == "swa":
+        pos_write = pos_write % cache["k"].shape[2] if "k" in cache else pos_write
+
+    if cfg.block_pattern == "attn":
+        def block(x, inputs):
+            lp, kc, vc = inputs
+            h_in = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            k_new, v_new = attn_lib.decode_kv(lp["attn"], cfg, h_in, new_len)
+            kc = _write_kv(kc, k_new, pos_write)
+            vc = _write_kv(vc, v_new, pos_write)
+            q = (h_in @ lp["attn"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim_)
+            if cfg.qk_norm:
+                q = rms_norm(q, lp["attn"]["q_norm"], cfg.norm_eps)
+            from .layers import apply_rope
+            q = apply_rope(q, (new_len - 1)[:, None], cfg.rope_theta)
+            att = attn_lib.flash_decode(q[:, 0], kc, vc, jnp.minimum(new_len, kc.shape[1]))
+            x = x + att.reshape(b, 1, -1) @ lp["attn"]["wo"]
+            if cfg.moe is not None and "moe" in lp:
+                h, _ = moe_lib.apply_moe(lp["moe"], cfg, rms_norm(x, lp["ln2"], cfg.norm_eps),
+                                         capacity_factor=cfg.moe.capacity_factor)
+            else:
+                h = apply_mlp(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+            return x + h, (kc, vc)
+
+        x, (ks, vs) = _scan(block, x, (params["blocks"], cache["k"], cache["v"]))
+        cache = dict(cache, k=ks, v=vs, len=new_len)
+    elif cfg.block_pattern == "xlstm_7_1":
+        def group(x, inputs):
+            gp, c_st, n_st, m_st, sl_st = inputs
+
+            def mblock(carry, inp):
+                xx = carry
+                lp, cs, ns, ms = inp
+                h, (c2, n2, m2) = xlstm_lib.mlstm_step(
+                    lp["p"], cfg, rms_norm(xx, lp["ln"], cfg.norm_eps), (cs, ns, ms))
+                return xx + h, (c2, n2, m2)
+
+            x, sts = _scan(mblock, x,
+                                  ({"p": gp["mlstm"], "ln": gp["ln_m"]}, c_st, n_st, m_st))
+            h, sl2 = xlstm_lib.slstm_step(gp["slstm"], cfg,
+                                          rms_norm(x, gp["ln_s"], cfg.norm_eps), sl_st)
+            return x + h, (sts, sl2)
+
+        stacked = ({"mlstm": params["mlstm"], "slstm": params["slstm"],
+                    "ln_m": params["ln_m"], "ln_s": params["ln_s"]},
+                   cache["mlstm_c"], cache["mlstm_n"], cache["mlstm_m"], cache["slstm"])
+        x, (msts, slst) = _scan(group, x, stacked)
+        cache = dict(cache, mlstm_c=msts[0], mlstm_n=msts[1], mlstm_m=msts[2],
+                     slstm=slst, len=new_len)
+    elif cfg.block_pattern == "zamba2":
+        sp = params["shared"]
+
+        def group(x, inputs):
+            gp, hs, convs, kc, vc = inputs
+
+            def mblock(carry, inp):
+                xx = carry
+                lp, h_st, c_st = inp
+                h, (h2, c2) = ssm_lib.mamba_step(
+                    lp["p"], cfg, rms_norm(xx, lp["ln"], cfg.norm_eps), (h_st, c_st))
+                return xx + h, (h2, c2)
+
+            x, (h2, c2) = _scan(mblock, x,
+                                       ({"p": gp["mamba"], "ln": gp["ln"]}, hs, convs))
+            h_in = rms_norm(x, sp["ln1"], cfg.norm_eps)
+            k_new, v_new = attn_lib.decode_kv(sp["attn"], cfg, h_in, new_len)
+            kc = _write_kv(kc, k_new, pos_write)
+            vc = _write_kv(vc, v_new, pos_write)
+            q = (h_in @ sp["attn"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim_)
+            from .layers import apply_rope
+            q = apply_rope(q, (new_len - 1)[:, None], cfg.rope_theta)
+            att = attn_lib.flash_decode(q[:, 0], kc, vc, jnp.minimum(new_len, kc.shape[1]))
+            x = x + att.reshape(b, 1, -1) @ sp["attn"]["wo"]
+            x = x + apply_mlp(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps))
+            return x, (h2, c2, kc, vc)
+
+        stacked = ({"mamba": params["mamba"], "ln": params["mamba_ln"]},
+                   cache["mamba_h"], cache["mamba_conv"],
+                   cache["shared_k"], cache["shared_v"])
+        x, (h2, c2, ks, vs) = _scan(group, x, stacked)
+        upd = dict(mamba_h=h2, mamba_conv=c2, shared_k=ks, shared_v=vs, len=new_len)
+        if "tail_h" in cache:
+            def tail(carry, inp):
+                xx = carry
+                lp, h_st, c_st = inp
+                h, (h2, c2) = ssm_lib.mamba_step(
+                    lp["p"], cfg, rms_norm(xx, lp["ln"], cfg.norm_eps), (h_st, c_st))
+                return xx + h, (h2, c2)
+            x, (th, tc) = _scan(
+                tail, x, ({"p": params["mamba_tail"], "ln": params["mamba_tail_ln"]},
+                          cache["tail_h"], cache["tail_conv"]))
+            upd.update(tail_h=th, tail_conv=tc)
+        cache = dict(cache, **upd)
+    elif cfg.block_pattern == "encdec":
+        def block(x, inputs):
+            lp, kc, vc, xk, xv = inputs
+            h_in = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            k_new, v_new = attn_lib.decode_kv(lp["attn"], cfg, h_in, new_len)
+            kc = _write_kv(kc, k_new, pos_write)
+            vc = _write_kv(vc, v_new, pos_write)
+            q = (h_in @ lp["attn"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim_)
+            from .layers import apply_rope
+            q = apply_rope(q, (new_len - 1)[:, None], cfg.rope_theta)
+            att = attn_lib.flash_decode(q[:, 0], kc, vc, new_len)
+            x = x + att.reshape(b, 1, -1) @ lp["attn"]["wo"]
+            x = x + attn_lib.cross_attention(
+                lp["xattn"], cfg, rms_norm(x, lp["ln_x"], cfg.norm_eps),
+                xk, xv, cache["enc_len"])
+            x = x + apply_mlp(lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+            return x, (kc, vc)
+
+        x, (ks, vs) = _scan(
+            block, x, (params["blocks"], cache["k"], cache["v"], cache["xk"], cache["xv"]))
+        cache = dict(cache, k=ks, v=vs, len=new_len)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x[:, 0], cache
+    return _logits(params, cfg, x)[:, 0], cache
+
+
+def prefill(params, cfg, batch, max_len: int, *, remat: str = "none"):
+    """Run the full prompt, build the cache, return last-position logits.
+
+    batch: tokens (B, S) (+ patches/frames). Cache KV sized to max_len.
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    dtype = params["embed"].dtype
+    cache = init_cache(cfg, b, max_len, dtype)
+    if cfg.block_pattern == "attn":
+        x, offset = _embed_inputs(params, cfg, batch)
+        st = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(st), (b, st))
+        x, _, kvs = _attn_backbone(params, cfg, x, positions, remat=remat, collect_kv=True)
+        ks, vs = kvs
+        kv_len = cache["k"].shape[2]
+        ks = ks[:, :, -kv_len:] if st > kv_len else jnp.pad(
+            ks, ((0, 0), (0, 0), (0, kv_len - st), (0, 0), (0, 0)))
+        vs = vs[:, :, -kv_len:] if st > kv_len else jnp.pad(
+            vs, ((0, 0), (0, 0), (0, kv_len - st), (0, 0), (0, 0)))
+        cache = dict(cache, k=ks.astype(dtype), v=vs.astype(dtype),
+                     len=jnp.full((b,), st, jnp.int32))
+    elif cfg.block_pattern == "encdec":
+        frames = batch["frames"] @ params["frontend_proj"]
+        f = frames.shape[1]
+        enc_pos = jnp.broadcast_to(jnp.arange(f), (b, f))
+        enc, _, _ = _attn_backbone(params, cfg, frames, enc_pos, remat=remat,
+                                   bidirectional=True, blocks_key="enc_blocks")
+        enc = rms_norm(enc, params["enc_norm"], cfg.norm_eps)
+        xk = jax.vmap(lambda lp: attn_lib.encode_kv(lp["xattn"], cfg, enc)[0])(params["blocks"])
+        xv = jax.vmap(lambda lp: attn_lib.encode_kv(lp["xattn"], cfg, enc)[1])(params["blocks"])
+        cache = dict(cache, xk=xk.astype(dtype), xv=xv.astype(dtype),
+                     enc_len=jnp.full((b,), f, jnp.int32), len=jnp.zeros((b,), jnp.int32))
+        x = rms_norm(enc, params["final_norm"], cfg.norm_eps)
+        return cache, _logits(params, cfg, x)[:, -1]
+    else:
+        # recurrent families: prefill = chunked scan re-using the train path,
+        # then states are produced by stepping the last token (smoke-scale) —
+        # production path would thread chunked final states; dry-run cells for
+        # ssm/hybrid use decode_step which is the steady-state cost anyway.
+        x, _ = _embed_inputs(params, cfg, batch)
+        cache = dict(cache, len=jnp.full((b,), s, jnp.int32))
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        if cfg.block_pattern == "xlstm_7_1":
+            x = _xlstm_backbone(params, cfg, x, remat=remat)
+        else:
+            x = _zamba_backbone(params, cfg, x, positions, remat=remat)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return cache, _logits(params, cfg, x)[:, -1]
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return cache, _logits(params, cfg, x)[:, 0]

@@ -1,0 +1,193 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix-memory, chunk-parallel)
+and sLSTM (scalar-memory, inherently sequential — recurrent R weights).
+
+mLSTM state: C (B, H, P, P) matrix memory + n (B, H, P) normalizer, with
+exponential input gate and sigmoid forget gate (stabilised in log space).
+Chunked scan mirrors ssm.mamba_chunked; the 7:1 mLSTM:sLSTM stacking of the
+1.3B model comes from configs (block_pattern="xlstm_7_1").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+from .scan_util import scan as _scan
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    p = d // h
+    return d, h, p
+
+
+def init_mlstm(key, cfg, dtype=jnp.float32):
+    d, h, p = _dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * d), dtype=dtype),      # [x_in | gate]
+        "wq": dense_init(ks[1], (d, d), dtype=dtype),
+        "wk": dense_init(ks[2], (d, d), dtype=dtype),
+        "wv": dense_init(ks[3], (d, d), dtype=dtype),
+        "w_if": dense_init(ks[4], (d, 2 * h), scale=d ** -0.5, dtype=jnp.float32),
+        "if_bias": jnp.concatenate([jnp.zeros(h), 3.0 + jnp.arange(h, dtype=jnp.float32) * 0.5 / max(h - 1, 1)]),
+        "norm": jnp.ones((d,), dtype),
+        "w_down": dense_init(ks[5], (d, d), dtype=dtype),
+    }
+
+
+def mlstm_chunked(params, cfg, x, *, chunk: int = 256):
+    """Training pass. x: (B, S, d) -> (B, S, d), final (C, n, m) state."""
+    d, h, p = _dims(cfg)
+    b, s, _ = x.shape
+    up = x @ params["w_up"]
+    x_in, gate = jnp.split(up, 2, axis=-1)
+    q = (x_in @ params["wq"]).reshape(b, s, h, p) * (p ** -0.5)
+    k = (x_in @ params["wk"]).reshape(b, s, h, p) * (p ** -0.5)
+    v = (x_in @ params["wv"]).reshape(b, s, h, p)
+    if_pre = x.astype(jnp.float32) @ params["w_if"] + params["if_bias"]
+    log_i = if_pre[..., :h]                              # (B,S,H) exp input gate
+    log_f = -jax.nn.softplus(-if_pre[..., h:])           # log sigmoid forget
+
+    nchunk = -(-s // chunk)
+    sp = nchunk * chunk
+    if sp != s:
+        pad = lambda t: jnp.pad(t, ((0, 0), (0, sp - s)) + ((0, 0),) * (t.ndim - 2))
+        q, k, v, log_i, log_f = map(pad, (q, k, v, log_i, log_f))
+    rs = lambda t: jnp.moveaxis(t.reshape(b, nchunk, chunk, *t.shape[2:]), 1, 0)
+    qc, kc, vc, lic, lfc = map(rs, (q, k, v, log_i, log_f))
+
+    def body(carry, blk):
+        c_st, n_st, m_st = carry      # (B,H,P,P), (B,H,P), (B,H)
+        q_c, k_c, v_c, li_c, lf_c = blk
+        cumf = jnp.cumsum(lf_c, axis=1)                          # (B,L,H)
+        # stabiliser: running max of (cumf + m_in) vs intra log weights
+        log_in = cumf + m_st[:, None]                            # decay applied to carry-in
+        intra = cumf[:, :, None, :] - cumf[:, None, :, :] + li_c[:, None, :, :]
+        causal = jnp.tril(jnp.ones((intra.shape[1], intra.shape[1]), bool))
+        intra = jnp.where(causal[None, :, :, None], intra, -jnp.inf)
+        m_new = jnp.maximum(log_in, jnp.max(intra, axis=2))      # (B,L,H)
+        # inter-chunk contribution
+        y_inter = jnp.einsum("blhp,bhpr,blh->blhr", q_c, c_st,
+                             jnp.exp(log_in - m_new))
+        n_inter = jnp.einsum("blhp,bhp,blh->blh", q_c, n_st, jnp.exp(log_in - m_new))
+        # intra-chunk
+        w = jnp.exp(intra - m_new[:, :, None, :])                # (B,L,L,H)
+        scores = jnp.einsum("blhp,bmhp->blmh", q_c, k_c) * w
+        y_intra = jnp.einsum("blmh,bmhr->blhr", scores, v_c)
+        n_intra = jnp.sum(scores, axis=2)                        # (B,L,H)
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_new))
+        y = (y_inter + y_intra) / denom[..., None]
+        # state to next chunk
+        tot = cumf[:, -1]                                        # (B,H)
+        m_out = jnp.maximum(tot + m_st, jnp.max(tot[:, None] - cumf + li_c, axis=1))
+        decay_out = jnp.exp(tot[:, None] - cumf + li_c - m_out[:, None])  # (B,L,H)
+        c_new = jnp.exp(tot + m_st - m_out)[..., None, None] * c_st + jnp.einsum(
+            "blh,blhp,blhr->bhpr", decay_out, k_c, v_c
+        )
+        n_new = jnp.exp(tot + m_st - m_out)[..., None] * n_st + jnp.einsum(
+            "blh,blhp->bhp", decay_out, k_c
+        )
+        return (c_new, n_new, m_out), y
+
+    c0 = jnp.zeros((b, h, p, p), jnp.float32)
+    n0 = jnp.zeros((b, h, p), jnp.float32)
+    m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    (c_f, n_f, m_f), ys = _scan(body, (c0, n0, m0), (qc, kc, vc, lic, lfc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, sp, d)[:, :s].astype(x.dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(gate)
+    return y @ params["w_down"], (c_f, n_f, m_f)
+
+
+def mlstm_step(params, cfg, x, state):
+    """Decode step. x: (B, 1, d); state (C, n, m)."""
+    d, h, p = _dims(cfg)
+    b = x.shape[0]
+    c_st, n_st, m_st = state
+    up = x @ params["w_up"]
+    x_in, gate = jnp.split(up, 2, axis=-1)
+    q = (x_in[:, 0] @ params["wq"]).reshape(b, h, p) * (p ** -0.5)
+    k = (x_in[:, 0] @ params["wk"]).reshape(b, h, p) * (p ** -0.5)
+    v = (x_in[:, 0] @ params["wv"]).reshape(b, h, p)
+    if_pre = x[:, 0].astype(jnp.float32) @ params["w_if"] + params["if_bias"]
+    log_i, log_f = if_pre[..., :h], -jax.nn.softplus(-if_pre[..., h:])
+    m_new = jnp.maximum(log_f + m_st, log_i)
+    f_ = jnp.exp(log_f + m_st - m_new)
+    i_ = jnp.exp(log_i - m_new)
+    c_new = f_[..., None, None] * c_st + i_[..., None, None] * jnp.einsum("bhp,bhr->bhpr", k, v)
+    n_new = f_[..., None] * n_st + i_[..., None] * k
+    num = jnp.einsum("bhp,bhpr->bhr", q, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n_new)), jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(b, 1, d).astype(x.dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps) * jax.nn.silu(gate)
+    return y @ params["w_down"], (c_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar memory with recurrent weights — sequential by construction.
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype=jnp.float32):
+    d, h, p = _dims(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": dense_init(ks[0], (d, 4 * d), dtype=dtype),      # z,i,f,o pre-acts
+        "r_gates": dense_init(ks[1], (h, p, 4 * p), scale=p ** -0.5, dtype=dtype),
+        "bias": jnp.concatenate([jnp.zeros(2 * d), jnp.ones(d), jnp.zeros(d)]).astype(jnp.float32),
+        "norm": jnp.ones((d,), dtype),
+        "w_down": dense_init(ks[2], (d, d), dtype=dtype),
+    }
+
+
+def _slstm_cell(params, cfg, wx_t, state):
+    """One step. wx_t: (B, 4d) input pre-activations; state (h,c,n,m)."""
+    d, h, p = _dims(cfg)
+    h_prev, c_prev, n_prev, m_prev = state
+    rh = jnp.einsum("bhp,hpr->bhr", h_prev, params["r_gates"])       # (B,H,4P)
+    pre = wx_t.reshape(-1, h, 4 * p) + rh + params["bias"].reshape(h, 4 * p)
+    z, i_raw, f_raw, o = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    log_f = -jax.nn.softplus(-f_raw)
+    m_new = jnp.maximum(log_f + m_prev, i_raw)
+    i_ = jnp.exp(i_raw - m_new)
+    f_ = jnp.exp(log_f + m_prev - m_new)
+    c_new = f_ * c_prev + i_ * z
+    n_new = f_ * n_prev + i_
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new.astype(wx_t.dtype), c_new, n_new, m_new)
+
+
+def slstm_scan(params, cfg, x):
+    """Training pass (sequential lax.scan over time). x: (B,S,d)."""
+    d, h, p = _dims(cfg)
+    b, s, _ = x.shape
+    wx = x @ params["w_gates"]                                       # (B,S,4d)
+    state = (
+        jnp.zeros((b, h, p), x.dtype),
+        jnp.zeros((b, h, p), jnp.float32),
+        jnp.zeros((b, h, p), jnp.float32),
+        jnp.full((b, h, p), -jnp.inf, jnp.float32),
+    )
+
+    def body(st, wx_t):
+        st = _slstm_cell(params, cfg, wx_t, st)
+        return st, st[0]
+
+    state, hs = _scan(body, state, jnp.moveaxis(wx, 1, 0), force_loop=True)
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    return y @ params["w_down"], state
+
+
+def slstm_step(params, cfg, x, state):
+    """Decode step. x: (B, 1, d)."""
+    d, h, p = _dims(cfg)
+    b = x.shape[0]
+    wx = (x[:, 0] @ params["w_gates"])
+    state = _slstm_cell(params, cfg, wx, state)
+    y = state[0].reshape(b, 1, d)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    return y @ params["w_down"], state

@@ -1,0 +1,142 @@
+"""Batched decode engine with slot-based continuous batching and
+ProMIPS-accelerated approximate top-k logits.
+
+The decode-time logit computation argmax_v <h, E_v> over the output
+embedding IS a MIPS problem (paper §I's multi-class prediction use case);
+`logits_mode="promips"` replaces the dense h @ E^T scan with the device-mode
+c-k-AMIP search over an index built on the embedding rows — probability-
+guaranteed approximate greedy decoding whose page/FLOP savings mirror the
+paper's Fig. 7/8. `logits_mode="exact"` is the baseline.
+
+Continuous batching: fixed B slots; finished sequences free their slot and
+a queued request is admitted with a single-request prefill scattered into
+the batch cache at the slot index.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.promips import ProMIPS
+from ..core.search_device import search_batch_progressive
+from ..models import transformer as model_lib
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: Optional[List[int]] = None
+    slot: int = -1
+
+
+class DecodeEngine:
+    def __init__(self, params, cfg, *, batch_slots: int = 4, max_len: int = 512,
+                 logits_mode: str = "exact", promips_kwargs: Optional[dict] = None,
+                 promips_budget: Optional[int] = None, eos_id: int = 0):
+        self.params, self.cfg = params, cfg
+        self.b, self.max_len = batch_slots, max_len
+        self.logits_mode = logits_mode
+        self.eos_id = eos_id
+        self.cache = model_lib.init_cache(cfg, batch_slots, max_len,
+                                          params["embed"].dtype)
+        self.active = np.zeros(batch_slots, bool)
+        self.requests: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+        self.steps = 0
+        self.pages = 0
+        self._decode = jax.jit(
+            lambda p, c, t: model_lib.decode_step(p, cfg, c, t))
+        self._decode_hidden = jax.jit(
+            lambda p, c, t: model_lib.decode_step(p, cfg, c, t, return_hidden=True))
+        if logits_mode == "promips":
+            emb = np.asarray(params["embed"], np.float32)[: cfg.vocab]
+            kw = dict(m=8, c=0.9, p=0.9, norm_strata=4)
+            kw.update(promips_kwargs or {})
+            self.index = ProMIPS.build(emb, **kw)
+            self.promips_budget = promips_budget or self.index.meta.n_blocks
+
+    # -- request lifecycle ---------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
+        req = Request(prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, out_tokens=[])
+        self.queue.append(req)
+        return req
+
+    def _admit(self):
+        for slot in range(self.b):
+            if self.active[slot] or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            req.slot = slot
+            batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+            if self.cfg.frontend == "vision":
+                batch["patches"] = jnp.zeros(
+                    (1, self.cfg.frontend_len, self.cfg.d_model),
+                    self.params["embed"].dtype)
+            if self.cfg.frontend == "audio":
+                batch["frames"] = jnp.zeros(
+                    (1, self.cfg.frontend_len, self.cfg.d_model),
+                    self.params["embed"].dtype)
+            cache1, logits = model_lib.prefill(self.params, self.cfg, batch,
+                                               self.max_len)
+
+            def insert(full, one):
+                if one.ndim == 0:
+                    return full
+                for ax in range(one.ndim):
+                    if full.shape[ax] == self.b and one.shape[ax] == 1:
+                        idx = [slice(None)] * one.ndim
+                        idx[ax] = slice(slot, slot + 1)
+                        return full.at[tuple(idx)].set(one.astype(full.dtype))
+                return full
+
+            self.cache = jax.tree.map(insert, self.cache, cache1)
+            req.out_tokens.append(int(np.argmax(np.asarray(logits[0]))))
+            self.active[slot] = True
+            self.requests[slot] = req
+
+    # -- main loop -----------------------------------------------------------
+    def step(self) -> bool:
+        """One engine step: admit, decode one token for all active slots."""
+        self._admit()
+        if not self.active.any():
+            return False
+        tokens = np.zeros((self.b, 1), np.int32)
+        for slot in range(self.b):
+            if self.active[slot]:
+                tokens[slot, 0] = self.requests[slot].out_tokens[-1]
+        if self.logits_mode == "promips":
+            hidden, self.cache = self._decode_hidden(
+                self.params, self.cache, jnp.asarray(tokens))
+            ids, _, stats = search_batch_progressive(
+                self.index.arrays, self.index.meta,
+                jnp.asarray(hidden, jnp.float32), k=4,
+                budget=min(self.promips_budget, self.index.meta.n_blocks))
+            self.pages += int(np.sum(np.asarray(stats.pages)))
+            nxt = np.asarray(ids)[:, 0]
+        else:
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(tokens))
+            nxt = np.argmax(np.asarray(logits), axis=-1)
+            self.pages += self.cfg.vocab_padded * self.cfg.d_model * 4 // 4096 \
+                * int(self.active.sum()) // max(self.b, 1)
+        self.steps += 1
+        for slot in range(self.b):
+            if not self.active[slot]:
+                continue
+            req = self.requests[slot]
+            req.out_tokens.append(int(nxt[slot]))
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or int(nxt[slot]) == self.eos_id):
+                self.active[slot] = False
+                self.requests[slot] = None
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        while (self.queue or self.active.any()) and self.steps < max_steps:
+            self.step()

@@ -1,0 +1,134 @@
+"""Training step with microbatched gradient accumulation, remat, optional
+error-feedback gradient compression, and AdamW (ZeRO-1-shardable moments).
+
+`make_train_step(cfg, train_cfg)` returns a pure `(state, batch) -> (state,
+metrics)` suitable for jax.jit with in/out shardings; the microbatch loop is
+a lax.scan so only one microbatch of activations is ever live (this is what
+lets qwen3-32b train_4k fit v5e HBM — see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.compression import ErrorFeedback, compress_grads, error_feedback_init
+from ..models import transformer as model_lib
+from .optimizer import AdamWState, adamw_init, adamw_update, cosine_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainCfg:
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    microbatches: int = 1
+    remat: str = "full"            # none | full | dots
+    compress_grads: bool = False   # error-feedback int8 (cross-pod wire fmt)
+    max_grad_norm: float = 1.0
+    weight_decay: float = 0.1
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    ef: Optional[ErrorFeedback]
+    step: jax.Array
+
+
+def init_state(params, tcfg: TrainCfg) -> TrainState:
+    return TrainState(
+        params=params,
+        opt=adamw_init(params),
+        ef=error_feedback_init(params) if tcfg.compress_grads else None,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def _split_microbatches(batch, n: int, mb_shardings=None):
+    """(B, ...) -> (n, B/n, ...) for every leaf.
+
+    Without the explicit constraint GSPMD moves the data-parallel sharding of
+    the original batch axis onto the OUTER (scan) axis of the reshape,
+    leaving every microbatch batch-replicated — a ~16x activation blow-up
+    (EXPERIMENTS.md §Perf iter 1). `mb_shardings` pins the inner batch axis.
+    """
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by microbatches {n}"
+        return x.reshape(n, b // n, *x.shape[1:])
+    out = jax.tree.map(split, batch)
+    if mb_shardings is not None:
+        out = jax.tree.map(jax.lax.with_sharding_constraint, out, mb_shardings)
+    return out
+
+
+def make_train_step(cfg, tcfg: TrainCfg, *, acc_shardings=None, mb_shardings=None,
+                    param_shardings=None):
+    """acc_shardings: optional pytree of NamedShardings (ZeRO layout) for the
+    f32 microbatch gradient accumulator AND the optimizer math: params are
+    sliced into this layout before the AdamW update (free: replicated->shard)
+    so every optimizer op is local, and only the final bf16 params are
+    all-gathered back to `param_shardings`. Without this GSPMD resolves the
+    mixed-sharding elementwise ops by full f32 replication (~33 GB/tensor on
+    qwen3-32b). mb_shardings: per-microbatch batch shardings (see
+    _split_microbatches). All three are EXPERIMENTS.md §Perf iteration 1."""
+    lr = cosine_schedule(tcfg.lr, tcfg.warmup, tcfg.total_steps)
+
+    def loss_for(params, mb):
+        loss, metrics = model_lib.loss_fn(params, cfg, mb, remat=tcfg.remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+    def constrain(tree):
+        if acc_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, acc_shardings)
+
+    def train_step(state: TrainState, batch):
+        if tcfg.microbatches > 1:
+            mbs = _split_microbatches(batch, tcfg.microbatches, mb_shardings)
+
+            def acc_body(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, _), g = grad_fn(state.params, mb)
+                # reduce into the ZeRO layout: constraining g BEFORE the add
+                # turns the backward's data-axis all-reduce into a
+                # reduce-scatter and keeps the += fully local
+                g = constrain(jax.tree.map(lambda gi: gi.astype(jnp.float32), g))
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, loss_acc + loss), None
+
+            zeros = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params))
+            (g_sum, loss_sum), _ = model_lib._scan(acc_body, (zeros, jnp.float32(0.0)), mbs)
+            grads = constrain(jax.tree.map(lambda g: g / tcfg.microbatches, g_sum))
+            loss = loss_sum / tcfg.microbatches
+        else:
+            (loss, _), grads = grad_fn(state.params, batch)
+            grads = constrain(jax.tree.map(lambda g: g.astype(jnp.float32), grads))
+
+        ef = state.ef
+        if tcfg.compress_grads:
+            grads, ef = compress_grads(grads, ef)
+
+        params_in = state.params
+        if acc_shardings is not None:
+            # slice params into the ZeRO layout (local), update there
+            params_in = jax.tree.map(jax.lax.with_sharding_constraint,
+                                     state.params, acc_shardings)
+        params, opt, gnorm = adamw_update(
+            grads, state.opt, params_in, lr=lr,
+            weight_decay=tcfg.weight_decay, max_grad_norm=tcfg.max_grad_norm,
+        )
+        if acc_shardings is not None and param_shardings is not None:
+            # all-gather the bf16 result back to the compute layout
+            params = jax.tree.map(jax.lax.with_sharding_constraint,
+                                  params, param_shardings)
+        new_state = TrainState(params=params, opt=opt, ef=ef, step=state.step + 1)
+        return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr(opt.count)}
+
+    return train_step

@@ -1,0 +1,68 @@
+"""AdamW + LR schedules in pure JAX (no optax in this container).
+
+Moments can carry their own (ZeRO-1) shardings — the trainer passes
+`zero1_specs` so each data-parallel rank owns a slice of the optimizer
+state; XLA inserts the reduce-scatter/all-gather pair automatically from the
+sharding mismatch between grads and moments.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: jax.Array | dict
+    nu: jax.Array | dict
+    count: jax.Array
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(mu=zeros, nu=jax.tree.map(jnp.copy, zeros), count=jnp.zeros((), jnp.int32))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def adamw_update(
+    grads, state: AdamWState, params,
+    *, lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+    weight_decay: float = 0.1, max_grad_norm: float = 1.0,
+):
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    count = state.count + 1
+    lr_t = lr(count) if callable(lr) else lr
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mu_hat = mu / (1 - b1 ** count.astype(jnp.float32))
+        nu_hat = nu / (1 - b2 ** count.astype(jnp.float32))
+        step = mu_hat / (jnp.sqrt(nu_hat) + eps)
+        decay = weight_decay if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr_t * (step + decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3)
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3)
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3)
+    return new_p, AdamWState(mu=new_mu, nu=new_nu, count=count), gnorm

@@ -1,0 +1,40 @@
+"""Baseline methods (paper §VIII-A1): sanity accuracy + page accounting."""
+import numpy as np
+import pytest
+
+from repro.baselines import ExactMIPS, H2ALSH, PQBased, RangeLSH
+from repro.baselines.exact import exact_topk
+from repro.core import overall_ratio, recall_at_k
+
+
+@pytest.fixture(scope="module")
+def corpus(mf_corpus):
+    x, q = mf_corpus
+    eids, escores = exact_topk(x, q[:10], 10)
+    return x, q[:10], eids, escores
+
+
+def test_exact(corpus):
+    x, q, eids, escores = corpus
+    m = ExactMIPS().build(x)
+    ids, scores, st = m.search(q[0], 10)
+    assert recall_at_k(ids, eids[0]) == 1.0
+    assert st["pages"] == m.n_pages
+
+
+@pytest.mark.parametrize("cls,kw,min_ratio", [
+    (H2ALSH, {}, 0.85), (RangeLSH, {}, 0.55), (PQBased, dict(n_cells=16), 0.85)])
+def test_baseline_quality(corpus, cls, kw, min_ratio):
+    x, q, eids, escores = corpus
+    m = cls(**kw).build(x)
+    ratios, pages = [], []
+    for i in range(10):
+        ids, scores, st = m.search(q[i], 10)
+        ratios.append(overall_ratio(scores, escores[i]))
+        pages.append(st["pages"])
+        assert st["pages"] > 0
+    assert np.mean(ratios) >= min_ratio, np.mean(ratios)
+    assert m.index_bytes > 0 and m.build_seconds >= 0
+    # all baselines probe fewer pages than a full scan would by definition
+    full = ExactMIPS().build(x).n_pages
+    assert np.mean(pages) <= full * 2  # (index pages may add a small overhead)

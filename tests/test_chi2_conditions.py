@@ -1,0 +1,92 @@
+"""Chi-square machinery + Conditions A/B (paper Section IV, Theorems 1-2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+from repro.core.chi2 import chi2_cdf, chi2_ppf, chi2_ppf_host
+from repro.core.conditions import (
+    compensation_radius, condition_a, condition_b, condition_b_threshold)
+
+
+@pytest.mark.parametrize("m", [2, 6, 8, 10, 16])
+def test_chi2_cdf_matches_scipy(m):
+    from scipy.stats import chi2
+    xs = np.linspace(0.01, 5 * m, 64)
+    ours = np.asarray(chi2_cdf(jnp.asarray(xs, jnp.float32), m))
+    ref = chi2.cdf(xs, m)
+    np.testing.assert_allclose(ours, ref, atol=2e-5)
+
+
+@given(p=st.floats(0.05, 0.99), m=st.integers(2, 24))
+@settings(max_examples=40, deadline=None)
+def test_chi2_ppf_inverts_cdf(p, m):
+    x = float(chi2_ppf(jnp.float32(p), m))
+    assert abs(float(chi2_cdf(jnp.float32(x), m)) - p) < 1e-3
+    assert abs(x - chi2_ppf_host(p, m)) < max(1e-3 * chi2_ppf_host(p, m), 1e-3)
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_condition_a_theorem1(data):
+    """Condition A true => the tested point IS a c-AMIP answer (Theorem 1):
+    <o_i, q> >= c <o*, q> for any o* with ||o*|| <= ||o_M||."""
+    rng = np.random.RandomState(data.draw(st.integers(0, 10_000)))
+    d = data.draw(st.integers(2, 16))
+    c = data.draw(st.floats(0.1, 0.99))
+    x = rng.standard_normal((64, d)).astype(np.float32) * 2
+    q = rng.standard_normal(d).astype(np.float32)
+    scores = x @ q
+    max_l2sq = float((x * x).sum(1).max())
+    q_l2sq = float(q @ q)
+    best = float(scores.max())
+    if bool(condition_a(best, max_l2sq, q_l2sq, c)):
+        # the guarantee must hold against the exact optimum
+        assert best >= c * scores.max() - 1e-4
+        # and indeed against ANY point whose norm is bounded by o_M:
+        # ||o*||^2 + ||q||^2 - 2<o*,q> >= 0 always, so <o*,q> <= (max+q)/2
+        assert 2 * best / c >= max_l2sq + q_l2sq - 1e-4
+
+
+def test_condition_b_threshold_equivalence():
+    """Psi_m(t) >= p  <=>  t >= Psi_m^{-1}(p): the device-path threshold form
+    agrees with the direct CDF form on a grid."""
+    m, c, p = 8, 0.9, 0.7
+    x_p = chi2_ppf_host(p, m)
+    rng = np.random.RandomState(0)
+    for _ in range(200):
+        proj_d2 = float(rng.gamma(2, 8))
+        best_ip = float(rng.standard_normal() * 5)
+        max_l2sq, q_l2sq = float(rng.gamma(3, 4)), float(rng.gamma(3, 4))
+        a = bool(condition_b(proj_d2, best_ip, max_l2sq, q_l2sq, c, p, m))
+        b = bool(condition_b_threshold(proj_d2, best_ip, max_l2sq, q_l2sq, c, x_p))
+        assert a == b
+
+
+def test_compensation_radius_formula():
+    """r' = sqrt(x_p (||o_M||^2 + ||q||^2 - 2<o_max,q>/c)), clipped at 0."""
+    m, p, c = 6, 0.5, 0.9
+    x_p = chi2_ppf_host(p, m)
+    r = float(compensation_radius(1.0, 10.0, 5.0, c, x_p))
+    assert np.isclose(r ** 2, x_p * (10 + 5 - 2 / c), rtol=1e-5)
+    assert float(compensation_radius(100.0, 1.0, 1.0, c, x_p)) == 0.0
+
+
+def test_lemma2_chi_square_ratio():
+    """dis^2(P(o),P(q)) / dis^2(o,q) ~ chi2(m) (Lemma 2): empirical moments.
+
+    Ratios of points under a SHARED projection are correlated, so moments
+    are averaged over independent projection draws."""
+    from repro.core.projections import make_projection, project
+    rng = np.random.RandomState(1)
+    d, m, n = 64, 8, 400
+    ratios = []
+    for seed in range(20):
+        o = rng.standard_normal((n, d)).astype(np.float32)
+        q = rng.standard_normal(d).astype(np.float32)
+        a = make_projection(d, m, seed=seed)
+        ratios.append(((project(o, a) - project(q[None], a)) ** 2).sum(1) /
+                      np.maximum(((o - q) ** 2).sum(1), 1e-12))
+    ratio = np.concatenate(ratios)
+    assert abs(ratio.mean() - m) < 0.5          # E[chi2(m)] = m
+    assert abs(ratio.var() - 2 * m) < 4.0       # Var = 2m

@@ -1,0 +1,96 @@
+"""iDistance layout (Section VI, Algorithm 4, Formula 6) + index invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.idistance import build_idistance, kmeans_np, ring_key_range
+from repro.core.index import build_index
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(20, 300))
+@settings(max_examples=15, deadline=None)
+def test_layout_invariants(seed, n):
+    rng = np.random.RandomState(seed)
+    p = rng.standard_normal((n, 6)).astype(np.float32)
+    lay = build_idistance(p, k_p=3, n_key=8, k_sp=4, seed=seed % 11)
+    # permutation is a bijection over rows
+    assert sorted(lay.perm.tolist()) == list(range(n))
+    # sub-partition segments tile [0, n) contiguously
+    assert lay.sp_start[0] == 0 and lay.sp_start[-1] == n
+    assert np.all(np.diff(lay.sp_start) > 0)
+    # every point is inside its sub-partition sphere; keys follow Formula 6
+    for s in range(len(lay.sp_radius)):
+        rows = np.arange(lay.sp_start[s], lay.sp_start[s + 1])
+        d = np.linalg.norm(p[lay.perm[rows]] - lay.sp_center[s], axis=1)
+        assert np.all(d <= lay.sp_radius[s] + 1e-4)
+        part = lay.sp_part[s]
+        ring = lay.sp_key[s] - part * lay.c_key
+        dc = np.linalg.norm(p[lay.perm[rows]] - lay.part_center[part], axis=1)
+        assert np.all(np.floor(dc / lay.eps).astype(int) == ring)
+
+
+def test_ring_key_range_covers_sphere():
+    """Every point within radius r of q lies in one of the key windows."""
+    rng = np.random.RandomState(1)
+    p = rng.standard_normal((400, 5)).astype(np.float32)
+    lay = build_idistance(p, k_p=4, n_key=10, k_sp=3, seed=0)
+    q = rng.standard_normal(5).astype(np.float32)
+    r = 1.0
+    windows = ring_key_range(lay, q, r)
+    keys_sorted = lay.keys  # sorted layout keys
+    inside = np.nonzero(np.linalg.norm(p[lay.perm] - q, axis=1) <= r)[0]
+    for row in inside:
+        key = keys_sorted[row]
+        assert any(lo <= key <= hi for lo, hi in windows), (key, windows)
+
+
+def test_kmeans_basics():
+    rng = np.random.RandomState(0)
+    x = np.concatenate([rng.standard_normal((50, 3)) + 5,
+                        rng.standard_normal((50, 3)) - 5]).astype(np.float32)
+    centers, assign = kmeans_np(x, 2, seed=0)
+    assert centers.shape == (2, 3)
+    # the two clusters separate
+    assert len(np.unique(assign[:50])) == 1 and len(np.unique(assign[50:])) == 1
+    assert assign[0] != assign[-1]
+
+
+@pytest.mark.parametrize("strata", [1, 4])
+def test_build_index_invariants(strata):
+    rng = np.random.RandomState(2)
+    x = rng.standard_normal((800, 32)).astype(np.float32)
+    idx = build_index(x, m=6, norm_strata=strata, page_bytes=1024)
+    a, meta = idx.arrays, idx.meta
+    n = meta.n
+    # ids: a permutation with -1 padding
+    ids = a.ids[a.ids >= 0]
+    assert sorted(ids.tolist()) == list(range(n))
+    # sorted arrays match original rows
+    np.testing.assert_allclose(a.x[: n], x[a.ids[:n]], rtol=1e-6)
+    # l2 norms + max
+    np.testing.assert_allclose(a.l2sq[:n], (x[a.ids[:n]] ** 2).sum(1), rtol=1e-5)
+    assert np.isclose(a.max_l2sq, (x * x).sum(1).max(), rtol=1e-5)
+    # sub-partition max norms
+    for s in range(meta.n_subparts):
+        lo, hi = a.sp_start[s], a.sp_start[s + 1]
+        assert np.isclose(a.sp_max_l2sq[s], a.l2sq[lo:hi].max(), rtol=1e-5)
+    # block tables consistent
+    assert meta.n_pad % meta.page_rows == 0
+    for b in range(meta.n_blocks):
+        lo_row, hi_row = b * meta.page_rows, min((b + 1) * meta.page_rows, n) - 1
+        if lo_row >= n:
+            continue
+        sp_lo, sp_hi = a.block_sp_lo[b], a.block_sp_hi[b]
+        assert a.sp_start[sp_lo] <= lo_row < a.sp_start[sp_hi]
+        sps = a.block_sp_idx[b][a.block_sp_idx[b] >= 0]
+        assert np.isclose(a.block_max_l2sq[b], a.sp_max_l2sq[sps].max(), rtol=1e-5)
+
+
+def test_optimized_projected_dimension():
+    from repro.core.dim_opt import optimized_projected_dimension, quick_probe_cost
+    for n in (1000, 17770, 624961, 11164866):
+        m = optimized_projected_dimension(n)
+        costs = {mm: quick_probe_cost(mm, n) for mm in range(2, 25)}
+        assert costs[m] == min(costs.values())
+    # larger n -> larger m (monotone trend, paper §V-B)
+    assert optimized_projected_dimension(11164866) >= optimized_projected_dimension(17770)

@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.binary_probe import binary_probe_lb
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.mips_topk import mips_score
+
+
+@pytest.mark.parametrize("r,b,d", [(64, 4, 32), (300, 17, 200), (1024, 1, 128),
+                                   (129, 128, 384), (8, 8, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mips_score_sweep(rng, r, b, d, dtype):
+    x = jnp.asarray(rng.standard_normal((r, d)), dtype)
+    q = jnp.asarray(rng.standard_normal((b, d)), dtype)
+    valid = jnp.asarray(rng.rand(r) > 0.2)
+    got = mips_score(x, q, valid, interpret=True)
+    want = ref.mips_score_ref(x, q, valid)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    rel = jnp.abs(got - want) / (1.0 + jnp.abs(want))
+    assert float(rel.max()) < tol
+
+
+@pytest.mark.parametrize("g,m", [(1, 4), (64, 8), (700, 12), (4096, 16), (33, 30)])
+def test_binary_probe_sweep(rng, g, m):
+    codes = jnp.asarray(rng.randint(0, 2 ** min(m, 31), g), jnp.uint32)
+    qc = jnp.uint32(rng.randint(0, 2 ** min(m, 31)))
+    qp = jnp.asarray(rng.standard_normal(m), jnp.float32)
+    got = binary_probe_lb(codes, qc, qp, interpret=True)
+    want = ref.binary_probe_lb_ref(codes, qc, qp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,kh,g,dh,s,block", [
+    (1, 1, 1, 32, 128, 64), (2, 4, 2, 64, 1000, 256),
+    (3, 2, 8, 128, 512, 512), (2, 8, 1, 64, 300, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(rng, b, kh, g, dh, s, block, dtype):
+    q = jnp.asarray(rng.standard_normal((b, kh, g, dh)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, kh, dh)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, kh, dh)), dtype)
+    lens = jnp.asarray(rng.randint(1, s + 1, b), jnp.int32)
+    got = decode_attention(q, k, v, lens, block_s=block, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    atol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol, rtol=1e-2)
+
+
+def test_ops_wrappers_route(rng):
+    """ops.* dispatches to ref when use_pallas=False and matches."""
+    x = jnp.asarray(rng.standard_normal((100, 64)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((5, 64)), jnp.float32)
+    valid = jnp.ones(100, bool)
+    a = ops.mips_score(x, q, valid, use_pallas=True)
+    b = ops.mips_score(x, q, valid, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+    top, idx = ops.mips_topk(x, q, valid, k=7)
+    want = np.sort(np.asarray(x @ q.T).T, axis=1)[:, ::-1][:, :7]
+    np.testing.assert_allclose(np.asarray(top), want, atol=1e-4)
+
+
+def test_flash_train_attention_grads(rng):
+    """Training flash attention (custom_vjp) vs naive softmax attention."""
+    from repro.models.attention import _flash_causal
+    B, S, H, KH, dh = 2, 80, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KH, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KH, dh)), jnp.float32)
+
+    def naive(q, k, v):
+        g = H // KH
+        qf = q.reshape(B, S, KH, g, dh).astype(jnp.float32) * dh ** -0.5
+        scores = jnp.einsum("bskgd,btkd->bkgst", qf, k.astype(jnp.float32))
+        mask = jnp.arange(S)[None, :] <= jnp.arange(S)[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, -1)
+        out = jnp.einsum("bkgst,btkd->bkgsd", w, v.astype(jnp.float32))
+        return jnp.moveaxis(out, 3, 1).reshape(B, S, H, dh)
+
+    f1 = lambda *a: jnp.sum(jnp.cos(_flash_causal(*a, block=32)))
+    f2 = lambda *a: jnp.sum(jnp.cos(naive(*a)))
+    assert abs(float(f1(q, k, v)) - float(f2(q, k, v))) < 1e-2
+    g1 = jax.grad(f1, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)

@@ -1,0 +1,102 @@
+"""Quick-Probe (paper Section V): Theorems 3 & 4 bounds, packing, Algorithm 2
+host/device agreement."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+from repro.core.projections import make_projection, project
+from repro.core.quick_probe import (
+    build_group_table, group_lower_bounds, pack_codes, pack_codes_np,
+    quick_probe, unpack_bits)
+
+
+@given(st.integers(1, 30), st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_roundtrip(m, n, seed):
+    rng = np.random.RandomState(seed)
+    p = rng.standard_normal((n, m)).astype(np.float32)
+    codes = pack_codes_np(p)
+    assert np.array_equal(codes, np.asarray(pack_codes(jnp.asarray(p))))
+    bits = np.asarray(unpack_bits(jnp.asarray(codes), m))
+    assert np.array_equal(bits, (p >= 0).astype(np.float32))
+
+
+@given(st.integers(2, 24), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_theorem3_lower_bound_valid(m, seed):
+    """LB_g <= dis(P(o), P(q)) for every member o of group g."""
+    rng = np.random.RandomState(seed)
+    n, d = 128, 24
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    q = rng.standard_normal(d).astype(np.float32)
+    a = make_projection(d, m, seed=seed % 97)
+    po, pq = project(x, a), project(q, a)
+    codes = pack_codes_np(po)
+    qcode = pack_codes_np(pq[None])[0]
+    lb = np.asarray(group_lower_bounds(jnp.asarray(codes), jnp.uint32(qcode),
+                                       jnp.asarray(pq)))
+    true = np.linalg.norm(po - pq[None], axis=1)
+    assert np.all(lb <= true + 1e-3 * np.abs(true) + 1e-4)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_theorem4_upper_bound_valid(seed):
+    """dis(o, q) <= ||o||_1 + ||q||_1 (original space)."""
+    rng = np.random.RandomState(seed)
+    d = rng.randint(2, 64)
+    o = rng.standard_normal(d) * rng.gamma(2, 2)
+    q = rng.standard_normal(d) * rng.gamma(2, 2)
+    assert np.linalg.norm(o - q) <= np.abs(o).sum() + np.abs(q).sum() + 1e-9
+
+
+def test_group_table_min_l1_is_min():
+    rng = np.random.RandomState(0)
+    n, m, d = 300, 6, 16
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    a = make_projection(d, m, seed=0)
+    p = project(x, a)
+    l1 = np.abs(x).sum(1).astype(np.float32)
+    codes = pack_codes_np(p)
+    table = build_group_table(codes, l1, p)
+    for gi in range(len(table.code)):
+        members = np.nonzero(codes == table.code[gi])[0]
+        assert np.isclose(table.min_l1[gi], l1[members].min())
+        assert codes[table.rep_row[gi]] == table.code[gi]
+        assert np.isclose(l1[table.rep_row[gi]], l1[members].min())
+
+
+def test_quick_probe_vectorised_equals_sequential():
+    """Vectorised Algorithm 2 == faithful ascending-LB sequential scan."""
+    from repro.core.chi2 import chi2_ppf_host
+    rng = np.random.RandomState(3)
+    n, d, m, c, p = 500, 24, 8, 0.9, 0.5
+    x = (rng.standard_normal((n, d)) * 0.2).astype(np.float32)  # small norms
+    q = rng.standard_normal(d).astype(np.float32) * 3
+    a = make_projection(d, m, seed=1)
+    po, pq = project(x, a), project(q, a)
+    l1 = np.abs(x).sum(1).astype(np.float32)
+    codes = pack_codes_np(po)
+    table = build_group_table(codes, l1, po)
+    x_p = chi2_ppf_host(p, m)
+    row, radius, ok = quick_probe(
+        table, jnp.asarray(pq), jnp.float32(np.abs(q).sum()), c, x_p)
+    # sequential reference
+    qcode = pack_codes_np(pq[None])[0]
+    lb = np.asarray(group_lower_bounds(jnp.asarray(table.code), jnp.uint32(qcode),
+                                       jnp.asarray(pq)))
+    order = np.argsort(lb, kind="stable")
+    chosen, best_v, best_g = -1, -np.inf, order[0]
+    for g in order:
+        val = lb[g] ** 2 / max(c * (table.min_l1[g] + np.abs(q).sum()) ** 2, 1e-30)
+        if val >= x_p:
+            chosen = g
+            break
+        if val > best_v:
+            best_v, best_g = val, g
+    if chosen < 0:
+        chosen = best_g
+    assert int(row) == int(table.rep_row[chosen])
+    exp_r = np.linalg.norm(table.rep_proj[chosen] - pq)
+    assert np.isclose(float(radius), exp_r, rtol=1e-5)

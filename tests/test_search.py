@@ -1,0 +1,108 @@
+"""End-to-end c-k-AMIP guarantees (Theorems 1-2) on host + device paths,
+MIP-Search-I vs II, progressive mode, and the paper's accuracy metric."""
+import numpy as np
+import pytest
+
+from repro.baselines.exact import exact_topk
+from repro.core import ProMIPS, overall_ratio, recall_at_k
+
+
+@pytest.fixture(scope="module")
+def built(mf_corpus):
+    x, q = mf_corpus
+    pm = ProMIPS.build(x, m=8, c=0.9, p=0.5, norm_strata=4, page_bytes=2048)
+    eids, escores = exact_topk(x, q, 10)
+    return x, q, pm, eids, escores
+
+
+def _guarantee_fraction(ratios, c):
+    return np.mean([r >= c - 1e-6 for r in ratios])
+
+
+def test_host_search_guarantee(built):
+    """P[overall ratio >= c] >= p across queries (Theorem 2)."""
+    x, q, pm, eids, escores = built
+    ratios, pages = [], []
+    for i in range(len(q)):
+        ids, scores, st = pm.search_host(q[i], k=10)
+        assert len(set(ids.tolist())) == 10  # no duplicates
+        ratios.append(overall_ratio(scores, escores[i]))
+        pages.append(st.pages)
+    assert _guarantee_fraction(ratios, 0.9) >= 0.5
+    assert np.mean(ratios) > 0.85
+
+
+def test_host_progressive_guarantee_and_fewer_pages(built):
+    x, q, pm, eids, escores = built
+    r_prog, pg_prog, pg_paper = [], [], []
+    for i in range(len(q)):
+        ids, scores, st = pm.search_host_progressive(q[i], k=10)
+        r_prog.append(overall_ratio(scores, escores[i]))
+        pg_prog.append(st.pages)
+        _, _, st2 = pm.search_host(q[i], k=10)
+        pg_paper.append(st2.pages)
+    assert _guarantee_fraction(r_prog, 0.9) >= 0.5
+    assert np.mean(pg_prog) <= np.mean(pg_paper)  # beyond-paper: never worse
+
+
+def test_incremental_matches_conditions(built):
+    """MIP-Search-I terminates via A or B and satisfies the guarantee."""
+    x, q, pm, eids, escores = built
+    ratios = []
+    for i in range(8):
+        ids, scores, st = pm.search_incremental(q[i], k=10)
+        assert st.stopped_by in ("A", "B", "exhausted")
+        ratios.append(overall_ratio(scores, escores[i]))
+    assert _guarantee_fraction(ratios, 0.9) >= 0.5
+
+
+def test_device_matches_host_semantics(built):
+    """Device mode (jit, batched) achieves the same guarantee."""
+    x, q, pm, eids, escores = built
+    ids, scores, stats = pm.search(q, k=10)
+    ids, scores = np.asarray(ids), np.asarray(scores)
+    ratios = [overall_ratio(scores[i], escores[i]) for i in range(len(q))]
+    assert _guarantee_fraction(ratios, 0.9) >= 0.5
+    assert not np.asarray(stats.exhausted).any()
+    # ids valid & deduplicated
+    for i in range(len(q)):
+        got = ids[i][ids[i] >= 0]
+        assert len(set(got.tolist())) == len(got)
+
+
+def test_device_progressive(built):
+    x, q, pm, eids, escores = built
+    ids, scores, stats = pm.search_progressive(q, k=10)
+    ratios = [overall_ratio(np.asarray(scores)[i], escores[i]) for i in range(len(q))]
+    assert _guarantee_fraction(ratios, 0.9) >= 0.5
+
+
+def test_full_budget_exact_recovery(mf_corpus):
+    """With c -> 1, p -> 1 the search must return the exact MIPS top-k."""
+    x, q = mf_corpus
+    pm = ProMIPS.build(x, m=8, c=0.999, p=0.999, norm_strata=1)
+    eids, escores = exact_topk(x, q[:8], 5)
+    for i in range(8):
+        ids, scores, st = pm.search_host(q[i], k=5)
+        assert recall_at_k(ids, eids[i]) >= 0.8
+        assert overall_ratio(scores, escores[i]) >= 0.99
+
+
+def test_varying_c_p_tradeoff(mf_corpus):
+    """Paper Figs. 10-11: smaller c or p => no more pages than larger."""
+    x, q = mf_corpus
+    pm = ProMIPS.build(x, m=8, c=0.9, p=0.5, norm_strata=4)
+    pages = {}
+    for c in (0.7, 0.9):
+        pg = [pm.search_host(q[i], k=10, c=c)[2].pages for i in range(8)]
+        pages[c] = np.mean(pg)
+    assert pages[0.7] <= pages[0.9] + 1e-9
+    for p in (0.3, 0.9):
+        pg = [pm.search_host(q[i], k=10, p=p)[2].pages for i in range(8)]
+        pages[f"p{p}"] = np.mean(pg)
+    assert pages["p0.3"] <= pages["p0.9"] + 1e-9
+
+
+def test_metrics():
+    assert overall_ratio(np.array([9.0, 4.0]), np.array([10.0, 5.0])) == pytest.approx(0.85)
+    assert recall_at_k(np.array([1, 2, 3]), np.array([3, 4, 5])) == pytest.approx(1 / 3)
