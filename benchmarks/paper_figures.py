@@ -157,6 +157,64 @@ def ablation_beyond_paper():
     return rows
 
 
+def bench_search_runtime(quick: bool = False):
+    """Host vs device-scan vs device-batched verification — the two-phase
+    runtime speedup cell (ISSUE 1 acceptance: batched >= 2x scan per query
+    on a >= 64-query batch). Writes BENCH_search.json at the repo root with
+    per-query latency + logical pages so the perf trajectory is recorded."""
+    import json
+    import os
+
+    import jax.numpy as jnp
+
+    from repro.core import ProMIPS
+    from repro.data.synthetic import mf_factors
+
+    n, d, n_q = (8000, 64, 64) if quick else (20000, 96, 64)
+    x = mf_factors(n, d, 16, decay=0.25, seed=0, norm_tail=0.3)
+    q = mf_factors(n_q, d, 16, decay=0.25, seed=1)
+    pm = ProMIPS.build(x, m=8, c=0.9, p=0.5, norm_strata=1)
+    qj = jnp.asarray(q, jnp.float32)
+
+    import jax
+    backend = ("tpu-pallas" if jax.default_backend() == "tpu"
+               else f"{jax.default_backend()}-jnp-oracle")
+    rec = {"n": n, "d": d, "batch": n_q, "k": 10,
+           "n_blocks": pm.meta.n_blocks, "page_rows": pm.meta.page_rows,
+           "backend": backend}
+    rows = []
+
+    pm.search_host(q[0], k=10)   # warm-up: lazy HostSearcher build + chi2,
+    t0 = time.perf_counter()     # mirroring the device paths' compile call
+    for i in range(8):
+        _, _, st_h = pm.search_host(q[i], k=10)
+    rec["host_us_per_query"] = (time.perf_counter() - t0) / 8 * 1e6
+    rows.append(("runtime/host", rec["host_us_per_query"], "queries=8"))
+
+    for label in ("scan", "batched"):
+        ids, _, st = pm.search(qj, k=10, verification=label)   # compile
+        ids.block_until_ready()
+        reps = 3
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            ids, _, st = pm.search(qj, k=10, verification=label)
+            ids.block_until_ready()
+        us = (time.perf_counter() - t0) / (reps * n_q) * 1e6
+        pages = float(np.mean(np.asarray(st.pages)))
+        rec[f"device_{label}_us_per_query"] = us
+        rec[f"device_{label}_pages_mean"] = pages
+        rows.append((f"runtime/device_{label}", us, f"pages={pages:.0f}"))
+
+    rec["speedup_batched_vs_scan"] = (
+        rec["device_scan_us_per_query"] / rec["device_batched_us_per_query"])
+    rows.append(("runtime/speedup_batched_vs_scan", 0.0,
+                 f"x{rec['speedup_batched_vs_scan']:.2f}"))
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    with open(os.path.join(root, "BENCH_search.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rows
+
+
 def bench_device_throughput():
     """Batched device-mode (jit) search throughput + Pallas kernel check."""
     import jax.numpy as jnp

@@ -26,6 +26,7 @@ BENCHES = [
     ("fig11_impact_of_p", F.fig11_impact_of_p),
     ("table2_complexity_scaling", F.table2_complexity_scaling),
     ("ablation_beyond_paper", F.ablation_beyond_paper),
+    ("search_runtime", F.bench_search_runtime),
     ("device_throughput", F.bench_device_throughput),
 ]
 
@@ -34,11 +35,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter")
     ap.add_argument("--out", default="results/bench")
+    ap.add_argument("--quick", action="store_true",
+                    help="fast smoke: host-vs-scan-vs-batched runtime "
+                         "comparison only (writes BENCH_search.json)")
     args = ap.parse_args()
 
+    benches = ([("search_runtime", lambda: F.bench_search_runtime(quick=True))]
+               if args.quick else BENCHES)
     os.makedirs(args.out, exist_ok=True)
     print("name,us_per_call,derived")
-    for name, fn in BENCHES:
+    for name, fn in benches:
         if args.only and args.only not in name:
             continue
         t0 = time.time()

@@ -30,8 +30,8 @@ def main():
     if n_dev >= 2:
         from repro.core.sharded import (build_sharded, device_put_sharded_index,
                                         sharded_search)
-        mesh = jax.make_mesh((1, n_dev), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((1, n_dev), ("data", "model"))
         sh = build_sharded(items, n_dev, m=8, c=0.9, p=0.7, norm_strata=4)
         shd = device_put_sharded_index(sh, mesh)
         ids, scores, pages = sharded_search(shd, users, 10, mesh,

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 verify + fast perf smoke. Run from anywhere; results land in
+# results/bench/ and the runtime comparison in BENCH_search.json (repo root)
+# so the perf trajectory is recorded per commit.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -q
+
+echo "== benchmark smoke (host vs scan vs batched runtime) =="
+python -m benchmarks.run --quick --out results/bench
+
+echo "== BENCH_search.json =="
+cat BENCH_search.json

@@ -21,7 +21,9 @@ from .quick_probe import (
     quick_probe,
     unpack_bits,
 )
-from .search_device import SearchStats, search_batch
+from .runtime import RuntimeConfig
+from .runtime import search as runtime_search
+from .search_device import SearchStats, search_batch, search_batch_progressive
 from .search_host import HostSearcher, HostStats
 
 __all__ = [
@@ -32,6 +34,8 @@ __all__ = [
     "make_projection", "project",
     "GroupTable", "build_group_table", "group_lower_bounds",
     "pack_codes", "pack_codes_np", "quick_probe", "unpack_bits",
-    "SearchStats", "search_batch", "HostSearcher", "HostStats",
+    "SearchStats", "search_batch", "search_batch_progressive",
+    "RuntimeConfig", "runtime_search",
+    "HostSearcher", "HostStats",
     "overall_ratio", "recall_at_k",
 ]

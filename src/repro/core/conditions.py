@@ -14,47 +14,29 @@ For c-k-AMIP both conditions use the current k-th best inner product
 All functions are elementwise / broadcastable and jit-safe; `best_ip` is the
 running (k-th) maximum inner product, `proj_dist_sq` is the squared distance
 in the projected space at the current search frontier.
+
+The arithmetic lives in `search_common` (the backend-neutral core shared by
+the host and device search paths); this module re-exports the jnp-default
+forms and adds the in-graph chi-square variant of Condition B.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from .chi2 import chi2_cdf
-
-
-def condition_a(best_ip, max_l2sq, q_l2sq, c: float):
-    """Theorem 1 test. True => terminate, result is exact-guaranteed."""
-    return max_l2sq + q_l2sq - 2.0 * best_ip / c <= 0.0
-
-
-def condition_b_denominator(best_ip, max_l2sq, q_l2sq, c: float):
-    """||o_M||^2 + ||q||^2 - 2<o_max,q>/c (the Formula 2 denominator)."""
-    return max_l2sq + q_l2sq - 2.0 * best_ip / c
+from .search_common import (  # noqa: F401  (re-exported public API)
+    compensation_radius,
+    condition_a,
+    condition_b_denominator,
+)
+from .search_common import condition_b as condition_b_threshold  # noqa: F401
 
 
 def condition_b(proj_dist_sq, best_ip, max_l2sq, q_l2sq, c: float, p: float, m: int):
-    """Theorem 2 test. True => terminate with probability-p guarantee."""
+    """Theorem 2 test via in-graph chi-square CDF (dynamic p). True =>
+    terminate with probability-p guarantee. The hot paths use the static
+    threshold form `condition_b_threshold` instead."""
     denom = condition_b_denominator(best_ip, max_l2sq, q_l2sq, c)
     # denom <= 0 is exactly Condition A — already guaranteed.
     ratio = proj_dist_sq / jnp.maximum(denom, 1e-30)
     return jnp.where(denom <= 0.0, True, chi2_cdf(ratio, m) >= p)
-
-
-def condition_b_threshold(proj_dist_sq, best_ip, max_l2sq, q_l2sq, c: float, x_p):
-    """Condition B via the precomputed static threshold x_p = Psi_m^{-1}(p).
-
-    Psi_m(t) >= p  <=>  t >= x_p (Psi_m is monotone), avoiding in-graph
-    gammainc. Used on the device hot path.
-    """
-    denom = condition_b_denominator(best_ip, max_l2sq, q_l2sq, c)
-    return jnp.where(denom <= 0.0, True, proj_dist_sq >= x_p * denom)
-
-
-def compensation_radius(best_ip, max_l2sq, q_l2sq, c: float, x_p):
-    """r' = sqrt(Psi_m^{-1}(p) * (||o_M||^2 + ||q||^2 - 2<o_max,q>/c)).
-
-    The Algorithm 3 expanded range when the Quick-Probe estimate failed
-    Condition B. Non-positive denominators (Condition A territory) map to 0.
-    """
-    denom = condition_b_denominator(best_ip, max_l2sq, q_l2sq, c)
-    return jnp.sqrt(jnp.maximum(x_p * denom, 0.0))

@@ -90,7 +90,7 @@ class ProMIPSIndex(NamedTuple):
 def _stratified_layout(x, p_pts, k_p, n_key, k_sp, seed, norm_strata):
     """Beyond-paper: build the iDistance layout per norm-quantile stratum so
     sub-partitions are norm-homogeneous (makes the norm-adaptive radii in
-    search_device.adaptive_radii bite). ``norm_strata=1`` is the paper's
+    search_common.adaptive_radii bite). ``norm_strata=1`` is the paper's
     exact partition pattern."""
     from .idistance import IDistanceLayout
 

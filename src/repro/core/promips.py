@@ -12,7 +12,8 @@ import jax
 import numpy as np
 
 from .index import IndexArrays, IndexMeta, ProMIPSIndex, build_index
-from .search_device import search_batch, search_batch_progressive
+from .runtime import RuntimeConfig
+from .runtime import search as runtime_search
 from .search_host import HostSearcher, HostStats
 
 
@@ -39,32 +40,30 @@ class ProMIPS:
             self._device_arrays = jax.tree.map(jax.numpy.asarray, self.index.arrays)
         return self._device_arrays
 
-    # -- search -------------------------------------------------------------
+    # -- search (device paths route through the unified runtime) ------------
     def search(self, queries: np.ndarray, k: int = 10,
                budget: Optional[int] = None, budget2: Optional[int] = None,
-               norm_adaptive: bool = False, cs_prune: bool = False):
-        """Batched device-mode c-k-AMIP search. queries: (B, d)."""
-        meta = self.meta
-        if budget is None:
-            budget = meta.n_blocks
-        if budget2 is None:
-            budget2 = meta.n_blocks
-        budget = int(min(budget, meta.n_blocks))
-        budget2 = int(min(budget2, meta.n_blocks))
-        q = jax.numpy.asarray(np.atleast_2d(queries), jax.numpy.float32)
-        return search_batch(self.arrays, meta, q, k=k, budget=budget, budget2=budget2,
+               norm_adaptive: bool = False, cs_prune: bool = False,
+               verification: str = "batched"):
+        """Batched device-mode c-k-AMIP search. queries: (B, d).
+
+        ``verification`` picks the candidate-scoring backend ("batched" =
+        one Pallas matmul per round over the unioned block selection,
+        "scan" = legacy per-query lax.scan). Identical results at the
+        default full budget; a finite ``budget`` caps the shared union tile
+        under "batched" vs each query's own selection under "scan".
+        """
+        cfg = RuntimeConfig(k=k, budget=budget, budget2=budget2,
+                            mode="two_phase", verification=verification,
                             norm_adaptive=norm_adaptive, cs_prune=cs_prune)
+        return runtime_search(self.arrays, self.meta, queries, cfg)
 
     def search_progressive(self, queries: np.ndarray, k: int = 10,
                            budget: Optional[int] = None, cs_prune: bool = True):
         """Beyond-paper progressive device search (norm-adaptive frontier)."""
-        meta = self.meta
-        if budget is None:
-            budget = meta.n_blocks
-        budget = int(min(budget, meta.n_blocks))
-        q = jax.numpy.asarray(np.atleast_2d(queries), jax.numpy.float32)
-        return search_batch_progressive(self.arrays, meta, q, k=k, budget=budget,
-                                        cs_prune=cs_prune)
+        cfg = RuntimeConfig(k=k, budget=budget, mode="progressive",
+                            cs_prune=cs_prune)
+        return runtime_search(self.arrays, self.meta, queries, cfg)
 
     def search_host_progressive(self, q: np.ndarray, k: int = 10,
                                 c: float | None = None, p: float | None = None,

@@ -1,0 +1,91 @@
+"""Unified two-phase search runtime (DESIGN.md §3.2).
+
+Single entry point the device, sharded and serve layers all call. A
+`RuntimeConfig` names the algorithm (`mode`) and the candidate-verification
+backend (`verification`); the runtime clamps budgets to the index size and
+dispatches to the jit'd implementations in `search_device`:
+
+  mode="two_phase"   Algorithm 3 (Quick-Probe + range + compensation round);
+                     verification="batched" unions the per-query block
+                     selections and scores them in one `kernels/ops.mips_score`
+                     call per round (the fast path), "scan" is the legacy
+                     per-query lax.scan, kept as the semantics reference /
+                     benchmark baseline. Results are identical at the default
+                     full budget; a finite ``budget`` caps the SHARED union
+                     tile under "batched" vs each query's own selection under
+                     "scan" (affected queries are flagged ``exhausted``).
+  mode="progressive" beyond-paper norm-adaptive frontier search.
+
+All modes return the same (ids (B, k), scores (B, k), SearchStats) triple.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .index import IndexArrays, IndexMeta
+from .search_device import SearchStats, search_batch, search_batch_progressive
+
+
+@jax.jit
+def _rescore(x, rows, queries):
+    """Exact f32 inner products for the returned candidate rows.
+
+    Every search backend reports scores through this one compiled function,
+    so "scan" and "batched" verification return BIT-IDENTICAL scores (inside
+    a fused search graph XLA may re-associate the verification dots
+    differently per backend; the candidate SETS are identical, so one shared
+    rescore of the k winners removes the ULP-level noise from the API).
+    """
+    cand = jnp.take(x, jnp.maximum(rows, 0), axis=0)     # (B, k, d)
+    s = jnp.einsum("bkd,bd->bk", cand, queries)
+    return jnp.where(rows >= 0, s, -jnp.inf)
+
+
+@dataclass(frozen=True)
+class RuntimeConfig:
+    """Static (hashable) search-runtime configuration."""
+
+    k: int = 10
+    budget: Optional[int] = None       # None => all blocks (no truncation)
+    budget2: Optional[int] = None      # compensation round; None => budget
+    mode: str = "two_phase"            # "two_phase" | "progressive"
+    verification: str = "batched"      # "batched" | "scan" (two_phase only)
+    norm_adaptive: bool = False
+    cs_prune: bool = False
+    use_pallas: Optional[bool] = None   # None => Pallas on TPU, jnp oracle off-TPU
+
+
+def search(arrays: IndexArrays, meta: IndexMeta, queries,
+           cfg: RuntimeConfig = RuntimeConfig()):
+    """Run one batched c-k-AMIP search under ``cfg``.
+
+    queries: (B, d). Returns (ids (B, k), scores (B, k), SearchStats).
+    Safe to call inside jit / shard_map (the underlying functions are jit'd
+    with static meta/config arguments).
+    """
+    budget = int(min(cfg.budget if cfg.budget is not None else meta.n_blocks,
+                     meta.n_blocks))
+    budget2 = int(min(cfg.budget2 if cfg.budget2 is not None else budget,
+                      meta.n_blocks))
+    q = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
+    if cfg.mode == "progressive":
+        ids, _, stats = search_batch_progressive(arrays, meta, q, k=cfg.k,
+                                                 budget=budget,
+                                                 cs_prune=cfg.cs_prune)
+    elif cfg.mode == "two_phase":
+        ids, _, stats = search_batch(arrays, meta, q, k=cfg.k, budget=budget,
+                                     budget2=budget2,
+                                     norm_adaptive=cfg.norm_adaptive,
+                                     cs_prune=cfg.cs_prune,
+                                     verification=cfg.verification,
+                                     use_pallas=cfg.use_pallas)
+    else:
+        raise ValueError(f"unknown search mode: {cfg.mode!r}")
+    return ids, _rescore(arrays.x, stats.rows, q), stats
+
+
+__all__ = ["RuntimeConfig", "SearchStats", "search"]

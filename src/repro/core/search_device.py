@@ -4,10 +4,33 @@ Implements MIP-Search-II (Algorithm 3) with the block-granular TPU
 adaptation (DESIGN.md §3):
 
   quick-probe -> radius r -> sub-partition sphere filter -> block selection
-  -> budgeted block scoring scan (MXU matvecs + running top-k + Condition A)
-  -> Condition B test -> compensation round with radius r' over the blocks
-     NOT already scanned (the r'-selection strictly contains the r-selection,
-     so scanning the difference reproduces Algorithm 3's "extend the range").
+  -> candidate verification -> Condition B test -> compensation round with
+     radius r' over the blocks NOT already scanned (the r'-selection strictly
+     contains the r-selection, so scanning the difference reproduces
+     Algorithm 3's "extend the range").
+
+All condition/radius arithmetic is imported from `search_common` (the
+backend-neutral core shared with `HostSearcher`). Two verification backends:
+
+``verification="batched"`` (default, DESIGN.md §3.2) — the two-phase
+  runtime. Per round, the blocks selected by ANY query in the batch are
+  unioned, their rows gathered into one (R, d) tile, and ALL queries are
+  scored against the tile in a single `kernels/ops.mips_score` call (Pallas
+  on TPU; its jnp oracle off-TPU — interpret mode is a correctness vehicle,
+  opt in with use_pallas=True) — one MXU matmul instead of B x budget
+  sequential matvecs. The sequential Condition-A semantics are then
+  reconstructed EXACTLY from the precomputed scores: "running k-th best
+  >= threshold after block t" is equivalent to "at least k rows scoring
+  >= threshold in blocks <= t", so at the default full budget the per-query
+  stop block, logical page count, candidate count and final top-k are
+  bit-identical to the scan backend (the parity test in
+  tests/test_search_runtime.py asserts this). With a FINITE budget the two
+  backends budget differently: "scan" caps each query's own selection at
+  ``budget`` blocks, "batched" caps the union tile shared by the whole
+  batch — queries whose selection does not fit are flagged ``exhausted``.
+
+``verification="scan"`` — the legacy per-query `lax.scan` of per-block
+  matvecs, kept as the semantics reference and for the benchmark baseline.
 
 Shapes are static: `budget` blocks per round. Work for logically-unneeded
 blocks is masked rather than skipped (fixed-shape SPMD); `stats.pages`
@@ -17,11 +40,13 @@ and is what the benchmark harness records.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels import ops
+from . import search_common as sc
 from .index import IndexArrays, IndexMeta
 from .quick_probe import GroupTable, quick_probe
 
@@ -34,6 +59,9 @@ class SearchStats(NamedTuple):
     radius0: jnp.ndarray        # Quick-Probe radius
     radius1: jnp.ndarray        # compensation radius (0 if unused)
     exhausted: jnp.ndarray      # budget ran out before Condition B held
+    rows: jnp.ndarray           # top-k rows in the padded sorted layout (-1 =
+                                # empty); lets the runtime rescore candidates
+                                # through one shared kernel call
 
 
 class TopK(NamedTuple):
@@ -41,51 +69,182 @@ class TopK(NamedTuple):
     rows: jnp.ndarray    # (k,) rows in the sorted layout (-1 = empty)
 
 
+def _group_table(arrays: IndexArrays) -> GroupTable:
+    return GroupTable(
+        code=arrays.g_code,
+        min_l1=arrays.g_min_l1,
+        rep_proj=arrays.g_rep_proj,
+        rep_row=arrays.g_rep_row,
+        count=arrays.g_count,
+    )
+
+
 def _select_blocks(arrays: IndexArrays, q_proj, radius):
     """Sphere-overlap filter: sub-partitions -> fixed-size blocks.
 
     ``radius`` may be a scalar (paper-faithful, global radius) or a (S,)
     vector of per-sub-partition radii (beyond-paper norm-adaptive mode —
-    see `adaptive_radii`). Entries < 0 deselect the sub-partition outright
-    (Cauchy-Schwarz pruning).
+    see `search_common.adaptive_radii`). Entries < 0 deselect the
+    sub-partition outright (Cauchy-Schwarz pruning).
     """
     d_sp = jnp.sqrt(jnp.sum((arrays.sp_center - q_proj[None, :]) ** 2, axis=-1))
     radius = jnp.broadcast_to(radius, d_sp.shape)
-    sel_sp = (d_sp <= radius + arrays.sp_radius) & (radius >= 0.0)  # (S,)
+    sel_sp = sc.sphere_select(d_sp, arrays.sp_radius, radius)  # (S,)
     csum = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(sel_sp.astype(jnp.int32))])
     touched = csum[arrays.block_sp_hi] - csum[arrays.block_sp_lo]
     return touched > 0  # (NB,)
 
 
 def adaptive_radii(arrays: IndexArrays, meta: IndexMeta, s_k, q_l2sq, cs_prune: bool):
-    """Beyond-paper norm-adaptive per-sub-partition Condition-B radii.
-
-    Theorem 2's denominator upper-bounds ||o*||^2 by the GLOBAL max norm
-    ||o_M||^2; but if o* lives in sub-partition sp, ||o*||^2 <= M_sp^2, so
-    searching each sp out to  r_sp = sqrt(x_p * (M_sp^2 + ||q||^2 - 2 s_k / c))
-    preserves P[miss] <= 1-p by the identical argument (the bound is applied
-    in the one sub-partition that actually contains o*). On long-tail norm
-    distributions only the few high-norm sub-partitions get the big radius.
-
-    With ``cs_prune``, sub-partitions where even Cauchy-Schwarz's best case
-    M_sp * ||q|| cannot beat the running k-th score are deselected entirely
-    (deterministic: such a sp can contain neither o* nor a top-k improver).
-    """
-    s_k = jnp.maximum(s_k, -1e30)
-    denom = arrays.sp_max_l2sq + q_l2sq - 2.0 * s_k / meta.c
-    r_sp = jnp.sqrt(jnp.maximum(meta.x_p * denom, 0.0))
-    if cs_prune:
-        ok = jnp.sqrt(arrays.sp_max_l2sq) * jnp.sqrt(q_l2sq) >= s_k
-        r_sp = jnp.where(ok, r_sp, -1.0)
-    return r_sp
+    """Per-sub-partition norm-adaptive radii (delegates to `search_common`)."""
+    return sc.adaptive_radii(arrays.sp_max_l2sq, s_k, q_l2sq, meta.c, meta.x_p,
+                             cs_prune=cs_prune, xp=jnp)
 
 
 def _merge_topk(top: TopK, scores, rows, k: int) -> TopK:
-    s = jnp.concatenate([top.scores, scores])
-    r = jnp.concatenate([top.rows, rows])
-    best_s, idx = jax.lax.top_k(s, k)
-    return TopK(scores=best_s, rows=r[idx])
+    s, r = sc.topk_merge(top.scores, top.rows, scores, rows, k, xp=jnp)
+    return TopK(scores=s, rows=r)
 
+
+# ---------------------------------------------------------------------------
+# Batched two-phase verification (DESIGN.md §3.2)
+# ---------------------------------------------------------------------------
+
+def _verify_batched(arrays: IndexArrays, meta: IndexMeta, queries, block_masks,
+                    tops: TopK, c_half, k: int, budget: int, use_pallas):
+    """One verification round for the whole query batch.
+
+    queries: (B, d); block_masks: (B, NB) per-query selected blocks;
+    tops: carried-in running top-k, (B, k) leaves; c_half: (B,) Condition-A
+    thresholds. Returns (tops', pages (B,), candidates (B,), done_a (B,),
+    lost (B,)) with the exact sequential-scan semantics (see module
+    docstring); ``lost`` flags queries whose selection did not fit the
+    ``budget``-block union tile.
+    """
+    n_batch = queries.shape[0]
+    page_rows = meta.page_rows
+    n_blocks = arrays.block_sp_lo.shape[0]
+    budget = min(budget, n_blocks)
+
+    # Union tile: blocks selected by ANY query, in layout order (the
+    # sequential-disk pattern the sub-partition layout is designed for).
+    union = jnp.any(block_masks, axis=0)                      # (NB,)
+    order = jnp.argsort(~union, stable=True)                  # union first
+    slots = order[:budget]                                    # (budget,)
+    slot_valid = jnp.arange(budget) < jnp.sum(union.astype(jnp.int32))
+    in_tile = jnp.zeros(n_blocks, bool).at[slots].set(slot_valid)
+
+    # Gather candidate rows once and score all queries in one kernel call.
+    rows = (slots[:, None] * page_rows + jnp.arange(page_rows)[None, :]).reshape(-1)
+    x_tile = jnp.take(arrays.x, rows, axis=0)                 # (R, d)
+    ids_tile = jnp.take(arrays.ids, rows)                     # (R,)
+    row_valid = (ids_tile >= 0) & jnp.repeat(slot_valid, page_rows)
+    scores = ops.mips_score(x_tile, queries, row_valid,
+                            use_pallas=use_pallas).T          # (B, R)
+
+    # Reconstruct the sequential Condition-A stop block from the scores:
+    # running k-th best >= c_half after block t  <=>  at least k rows
+    # (including the carried-in top) score >= c_half within blocks <= t.
+    sel_slots = block_masks[:, slots] & slot_valid[None, :]   # (B, budget)
+    row_sel = jnp.repeat(sel_slots, page_rows, axis=1)        # (B, R)
+    ge = (scores >= c_half[:, None]) & row_sel & row_valid[None, :]
+    cnt = ge.reshape(n_batch, budget, page_rows).sum(axis=2)  # (B, budget)
+    n0 = jnp.sum(tops.scores >= c_half[:, None], axis=1)      # carried-in hits
+    ex_cum = jnp.cumsum(cnt, axis=1) - cnt                    # exclusive cumsum
+    done_before = (n0[:, None] + ex_cum) >= k
+    live = sel_slots & ~done_before                           # logically-scanned
+    pages = jnp.sum(live.astype(jnp.int32), axis=1)
+
+    row_live = jnp.repeat(live, page_rows, axis=1) & row_valid[None, :]
+    cand = jnp.sum(row_live.astype(jnp.int32), axis=1)
+    done_a = (n0 + jnp.sum(jnp.where(live, cnt, 0), axis=1)) >= k
+
+    masked = jnp.where(row_live, scores, -jnp.inf)            # (B, R)
+    row_ids = jnp.where(row_live, rows[None, :], -1)
+    merged_s = jnp.concatenate([tops.scores, masked], axis=1)
+    merged_r = jnp.concatenate([tops.rows, row_ids], axis=1)
+    best_s, idx = jax.lax.top_k(merged_s, k)
+    best_r = jnp.take_along_axis(merged_r, idx, axis=1)
+
+    lost = jnp.any(block_masks & ~in_tile[None, :], axis=1)
+    return TopK(scores=best_s, rows=best_r), pages, cand, done_a, lost
+
+
+def _search_batch_batched(arrays, meta, queries, k, budget, budget2,
+                          norm_adaptive, cs_prune, use_pallas):
+    """Two-phase runtime: batched selection + one mips_score call per round."""
+    table = _group_table(arrays)
+    n_batch = queries.shape[0]
+    q_proj = queries @ arrays.a                               # (B, m)
+    q_l1 = jnp.sum(jnp.abs(queries), axis=1)
+    q_l2sq = jnp.sum(queries * queries, axis=1)
+    _, r0, probe_ok = jax.vmap(
+        lambda qp, ql1: quick_probe(table, qp, ql1, meta.c, meta.x_p)
+    )(q_proj, q_l1)
+
+    c_half = sc.condition_a_threshold(arrays.max_l2sq, q_l2sq, meta.c)  # (B,)
+    mask0 = jax.vmap(lambda qp, r: _select_blocks(arrays, qp, r))(q_proj, r0)
+    empty = TopK(scores=jnp.full((n_batch, k), -jnp.inf),
+                 rows=jnp.full((n_batch, k), -1, jnp.int32))
+    top, pages1, cand1, done_a, lost1 = _verify_batched(
+        arrays, meta, queries, mask0, empty, c_half, k, budget, use_pallas)
+    # Without this barrier XLA CPU re-materializes round-1 fusions inside the
+    # round-2 consumers (~2x wall clock); semantically an identity.
+    top, done_a, mask0 = jax.lax.optimization_barrier((top, done_a, mask0))
+
+    # Condition B with the Quick-Probe radius (Algorithm 3 line 12).
+    s_k = top.scores[:, k - 1]
+    cond_b = sc.condition_b(r0 * r0, s_k, arrays.max_l2sq, q_l2sq,
+                            meta.c, meta.x_p, xp=jnp)
+    r1 = sc.compensation_radius(s_k, arrays.max_l2sq, q_l2sq,
+                                meta.c, meta.x_p, xp=jnp)
+    need2 = ~(cond_b | done_a)
+
+    # Compensation round over blocks newly selected by r' (r' > r0 here).
+    if norm_adaptive:
+        r_comp = jax.vmap(
+            lambda sk, ql2: adaptive_radii(arrays, meta, sk, ql2, cs_prune)
+        )(s_k, q_l2sq)                                        # (B, S)
+        r_comp = jnp.where(need2[:, None], r_comp, -1.0)
+    else:
+        r_comp = jnp.where(need2, r1, -1.0)[:, None]          # (B, 1) -> bcast
+    mask1 = jax.vmap(lambda qp, r: _select_blocks(arrays, qp, r))(q_proj, r_comp)
+    mask1 = mask1 & ~mask0
+
+    # With an all-False mask1 (every query stopped by A/B in round 1 — the
+    # common case) the verification round is an identity on `top` with zero
+    # pages/candidates; skip the full tile gather + matmul it would burn.
+    def round2(args):
+        mask1, top = args
+        return _verify_batched(arrays, meta, queries, mask1, top, c_half, k,
+                               budget2, use_pallas)
+
+    def skip2(args):
+        _, top = args
+        zero = jnp.zeros(top.scores.shape[0], jnp.int32)
+        false = jnp.zeros(top.scores.shape[0], bool)
+        return top, zero, zero, false, false
+
+    top, pages2, cand2, _, lost2 = jax.lax.cond(
+        jnp.any(need2), round2, skip2, (mask1, top))
+
+    stats = SearchStats(
+        pages=pages1 + pages2,
+        candidates=cand1 + cand2,
+        probe_passed=probe_ok,
+        used_round2=need2,
+        radius0=r0,
+        radius1=jnp.where(need2, r1, 0.0),
+        exhausted=lost1 | (need2 & lost2),
+        rows=top.rows,
+    )
+    ids = jnp.where(top.rows >= 0, arrays.ids[jnp.maximum(top.rows, 0)], -1)
+    return ids, top.scores, stats
+
+
+# ---------------------------------------------------------------------------
+# Legacy scan verification (per-query lax.scan of per-block matvecs)
+# ---------------------------------------------------------------------------
 
 def _scan_blocks(arrays, meta, q, q_l2sq, block_mask, top: TopK, k: int, budget: int):
     """Budgeted scoring pass over the selected blocks (one while-round).
@@ -97,7 +256,7 @@ def _scan_blocks(arrays, meta, q, q_l2sq, block_mask, top: TopK, k: int, budget:
     page_rows = meta.page_rows
     order = jnp.argsort(~block_mask, stable=True)  # selected block ids first
     n_sel = jnp.sum(block_mask.astype(jnp.int32))
-    c_half = 0.5 * meta.c * (arrays.max_l2sq + q_l2sq)  # Condition A threshold on <o,q>
+    c_half = sc.condition_a_threshold(arrays.max_l2sq, q_l2sq, meta.c)
 
     def body(carry, t):
         top, pages, cand, done_a = carry
@@ -126,30 +285,9 @@ def _scan_blocks(arrays, meta, q, q_l2sq, block_mask, top: TopK, k: int, budget:
     return top, pages, cand, done_a
 
 
-@functools.partial(
-    jax.jit, static_argnames=("meta", "k", "budget", "budget2", "norm_adaptive", "cs_prune")
-)
-def search_batch(
-    arrays: IndexArrays,
-    meta: IndexMeta,
-    queries: jnp.ndarray,
-    k: int = 10,
-    budget: int = 64,
-    budget2: int = 64,
-    norm_adaptive: bool = False,
-    cs_prune: bool = False,
-):
-    """c-k-AMIP search for a batch of queries. queries: (B, d).
-
-    Returns (ids (B, k) original row ids, scores (B, k), SearchStats).
-    """
-    table = GroupTable(
-        code=arrays.g_code,
-        min_l1=arrays.g_min_l1,
-        rep_proj=arrays.g_rep_proj,
-        rep_row=arrays.g_rep_row,
-        count=arrays.g_count,
-    )
+def _search_batch_scan(arrays, meta, queries, k, budget, budget2,
+                       norm_adaptive, cs_prune):
+    table = _group_table(arrays)
 
     def one(q):
         q_proj = q @ arrays.a
@@ -165,9 +303,10 @@ def search_batch(
 
         # Condition B with the Quick-Probe radius (Algorithm 3 line 12).
         s_k = top.scores[k - 1]
-        denom = arrays.max_l2sq + q_l2sq - 2.0 * jnp.maximum(s_k, -1e30) / meta.c
-        cond_b = (denom <= 0.0) | (r0 * r0 >= meta.x_p * denom)
-        r1 = jnp.sqrt(jnp.maximum(meta.x_p * denom, 0.0))
+        cond_b = sc.condition_b(r0 * r0, s_k, arrays.max_l2sq, q_l2sq,
+                                meta.c, meta.x_p, xp=jnp)
+        r1 = sc.compensation_radius(s_k, arrays.max_l2sq, q_l2sq,
+                                    meta.c, meta.x_p, xp=jnp)
         need2 = ~(cond_b | done_a)
 
         # Compensation round over blocks newly selected by r' (r' > r0 here).
@@ -191,11 +330,46 @@ def search_batch(
             radius0=r0,
             radius1=jnp.where(need2, r1, 0.0),
             exhausted=exhausted,
+            rows=top.rows,
         )
         ids = jnp.where(top.rows >= 0, arrays.ids[jnp.maximum(top.rows, 0)], -1)
         return ids, top.scores, stats
 
     return jax.vmap(one)(queries)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("meta", "k", "budget", "budget2", "norm_adaptive",
+                     "cs_prune", "verification", "use_pallas"),
+)
+def search_batch(
+    arrays: IndexArrays,
+    meta: IndexMeta,
+    queries: jnp.ndarray,
+    k: int = 10,
+    budget: int = 64,
+    budget2: int = 64,
+    norm_adaptive: bool = False,
+    cs_prune: bool = False,
+    verification: str = "batched",
+    use_pallas: Optional[bool] = None,
+):
+    """c-k-AMIP search for a batch of queries. queries: (B, d).
+
+    Returns (ids (B, k) original row ids, scores (B, k), SearchStats).
+    ``verification`` selects the candidate-scoring backend (module docstring);
+    identical results at full budget, "batched" amortizes the whole batch
+    into one Pallas matmul per round (budget semantics differ when finite —
+    see module docstring).
+    """
+    if verification == "batched":
+        return _search_batch_batched(arrays, meta, queries, k, budget, budget2,
+                                     norm_adaptive, cs_prune, use_pallas)
+    if verification == "scan":
+        return _search_batch_scan(arrays, meta, queries, k, budget, budget2,
+                                  norm_adaptive, cs_prune)
+    raise ValueError(f"unknown verification backend: {verification!r}")
 
 
 @functools.partial(jax.jit, static_argnames=("meta", "k", "budget", "cs_prune"))
@@ -220,7 +394,6 @@ def search_batch_progressive(
     def one(q):
         q_proj = q @ arrays.a
         q_l2sq = jnp.sum(q * q)
-        q_norm = jnp.sqrt(q_l2sq)
 
         d_sp = jnp.sqrt(jnp.sum((arrays.sp_center - q_proj[None, :]) ** 2, axis=-1))
         gap_sp = d_sp - arrays.sp_radius  # distance to sub-partition surface
@@ -231,16 +404,12 @@ def search_batch_progressive(
         )
         block_gap = jnp.min(gathered, axis=1)  # (NB,)
         order = jnp.argsort(block_gap, stable=True)
-        c_half = 0.5 * meta.c * (arrays.max_l2sq + q_l2sq)
+        c_half = sc.condition_a_threshold(arrays.max_l2sq, q_l2sq, meta.c)
 
         def qualify(blk, s_k):
-            m2 = arrays.block_max_l2sq[blk]
-            denom = m2 + q_l2sq - 2.0 * jnp.maximum(s_k, -1e30) / meta.c
-            r_blk = jnp.sqrt(jnp.maximum(meta.x_p * denom, 0.0))
-            ok = block_gap[blk] <= r_blk
-            if cs_prune:
-                ok &= jnp.sqrt(m2) * q_norm >= s_k
-            return ok
+            r_blk = sc.adaptive_radii(arrays.block_max_l2sq[blk], s_k, q_l2sq,
+                                      meta.c, meta.x_p, cs_prune=cs_prune, xp=jnp)
+            return sc.gap_select(block_gap[blk], r_blk)
 
         def body(carry, t):
             top, pages, cand, done_a = carry
@@ -277,7 +446,7 @@ def search_batch_progressive(
             pages=pages, candidates=cand,
             probe_passed=jnp.bool_(False), used_round2=jnp.bool_(False),
             radius0=jnp.float32(0.0), radius1=jnp.float32(0.0),
-            exhausted=exhausted,
+            exhausted=exhausted, rows=top.rows,
         )
         ids = jnp.where(top.rows >= 0, arrays.ids[jnp.maximum(top.rows, 0)], -1)
         return ids, top.scores, stats

@@ -14,6 +14,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from . import search_common as sc
 from .chi2 import chi2_ppf_host
 from .idistance import ring_key_range
 from .index import ProMIPSIndex
@@ -33,10 +34,9 @@ class HostStats:
     _resident: set = field(default_factory=set)
 
     def touch_rows(self, rows: np.ndarray, page_rows: int):
-        for pg in np.unique(rows // page_rows):
-            if pg not in self._resident:
-                self._resident.add(int(pg))
-                self.pages += 1
+        fresh = set(np.unique(rows // page_rows).tolist()) - self._resident
+        self._resident |= fresh
+        self.pages += len(fresh)
 
 
 class HostSearcher:
@@ -63,19 +63,19 @@ class HostSearcher:
         self.proj = np.asarray(a.a)
         self._chi2_cache: dict[float, float] = {}
 
-    # -- shared helpers ----------------------------------------------------
+    # -- shared helpers (all math from search_common, numpy backend) --------
     def _x_p(self, p: float) -> float:
         if p not in self._chi2_cache:
             self._chi2_cache[p] = chi2_ppf_host(p, self.meta.m)
         return self._chi2_cache[p]
 
     def _condition_a(self, best_ip: float, q_l2sq: float, c: float) -> bool:
-        return self.max_l2sq + q_l2sq - 2.0 * best_ip / c <= 0.0
+        return bool(sc.condition_a(best_ip, self.max_l2sq, q_l2sq, c))
 
     def _condition_b(self, proj_d2: float, best_ip: float, q_l2sq: float,
                      c: float, x_p: float) -> bool:
-        denom = self.max_l2sq + q_l2sq - 2.0 * best_ip / c
-        return denom <= 0.0 or proj_d2 >= x_p * denom
+        return bool(sc.condition_b(proj_d2, best_ip, self.max_l2sq, q_l2sq,
+                                   c, x_p, xp=np))
 
     # -- Algorithm 2: Quick-Probe ------------------------------------------
     def quick_probe(self, q: np.ndarray, c: float, p: float, stats: HostStats):
@@ -118,7 +118,7 @@ class HostSearcher:
 
         ``norm_adaptive`` / ``cs_prune`` enable the beyond-paper
         per-sub-partition radii and Cauchy-Schwarz pruning (see
-        search_device.adaptive_radii for the guarantee argument); defaults
+        search_common.adaptive_radii for the guarantee argument); defaults
         reproduce the paper exactly.
         """
         meta = self.meta
@@ -137,7 +137,7 @@ class HostSearcher:
             nonlocal top_s, top_r
             d_sp = np.linalg.norm(self.sp_center - q_proj[None, :], axis=1)
             radius = np.broadcast_to(np.asarray(radius, np.float64), d_sp.shape)
-            sel = np.nonzero((d_sp <= radius + self.sp_radius) & (radius >= 0))[0]
+            sel = np.nonzero(sc.sphere_select(d_sp, self.sp_radius, radius))[0]
             done_a = False
             visited = set()
             for s in sel:
@@ -149,10 +149,7 @@ class HostSearcher:
                 stats.touch_rows(rows, meta.page_rows)
                 scores = self.x[lo:hi] @ q
                 stats.candidates += hi - lo
-                merged_s = np.concatenate([top_s, scores])
-                merged_r = np.concatenate([top_r, rows])
-                sel_k = np.argsort(-merged_s, kind="stable")[:k]
-                top_s, top_r = merged_s[sel_k], merged_r[sel_k]
+                top_s, top_r = sc.topk_merge(top_s, top_r, scores, rows, k, xp=np)
                 if self._condition_a(top_s[k - 1], q_l2sq, c):
                     done_a = True
                     break
@@ -168,15 +165,12 @@ class HostSearcher:
             else:
                 s_k = top_s[k - 1]
                 if norm_adaptive:
-                    denom = self.sp_max_l2sq + q_l2sq - 2.0 * max(s_k, -1e30) / c
-                    r1 = np.sqrt(np.maximum(x_p * denom, 0.0))
-                    if cs_prune:
-                        ok = np.sqrt(self.sp_max_l2sq) * np.sqrt(q_l2sq) >= s_k
-                        r1 = np.where(ok, r1, -1.0)
+                    r1 = sc.adaptive_radii(self.sp_max_l2sq, s_k, q_l2sq, c,
+                                           x_p, cs_prune=cs_prune, xp=np)
                     stats.radius1 = float(np.max(r1))
                 else:
-                    denom = self.max_l2sq + q_l2sq - 2.0 * s_k / c
-                    r1 = float(np.sqrt(max(x_p * denom, 0.0)))
+                    r1 = float(sc.compensation_radius(s_k, self.max_l2sq,
+                                                      q_l2sq, c, x_p, xp=np))
                     stats.radius1 = r1
                 stats.used_round2, stats.rounds = True, 2
                 done_a, _ = run_round(r1, visited)
@@ -197,7 +191,7 @@ class HostSearcher:
         disqualified at visit time (d_sp > r_sp(s_k) + radius_sp, or
         CS-pruned) stays disqualified because s_k only grows and radii only
         shrink. At termination every unvisited sp satisfies the per-sp
-        Condition B (see search_device.adaptive_radii), so
+        Condition B (see search_common.adaptive_radii), so
         P[o* missed] <= 1 - p exactly as in Theorem 2. Condition A still
         short-circuits deterministically.
         """
@@ -208,7 +202,6 @@ class HostSearcher:
         stats = HostStats()
         q = np.asarray(q, np.float32)
         q_l2sq = float(q @ q)
-        q_norm = float(np.sqrt(q_l2sq))
         q_proj = q @ self.proj
         stats.probe_passed = False  # progressive mode does not use Quick-Probe
 
@@ -219,21 +212,16 @@ class HostSearcher:
         for s in order:
             s_k = top_s[k - 1]
             m_sp = float(self.sp_max_l2sq[s])
-            if cs_prune and np.sqrt(m_sp) * q_norm < s_k:
-                continue
-            denom = m_sp + q_l2sq - 2.0 * max(s_k, -1e30) / c
-            r_sp = np.sqrt(max(x_p * denom, 0.0))
-            if d_sp[s] > r_sp + self.sp_radius[s]:
+            r_sp = sc.adaptive_radii(m_sp, s_k, q_l2sq, c, x_p,
+                                     cs_prune=cs_prune, xp=np)
+            if not sc.sphere_select(d_sp[s], self.sp_radius[s], r_sp):
                 continue
             lo, hi = int(self.sp_start[s]), int(self.sp_start[s + 1])
             rows = np.arange(lo, hi)
             stats.touch_rows(rows, meta.page_rows)
             scores = self.x[lo:hi] @ q
             stats.candidates += hi - lo
-            merged_s = np.concatenate([top_s, scores])
-            merged_r = np.concatenate([top_r, rows])
-            sel_k = np.argsort(-merged_s, kind="stable")[:k]
-            top_s, top_r = merged_s[sel_k], merged_r[sel_k]
+            top_s, top_r = sc.topk_merge(top_s, top_r, scores, rows, k, xp=np)
             if self._condition_a(top_s[k - 1], q_l2sq, c):
                 stats.stopped_by = "A"
                 break

@@ -4,14 +4,15 @@ pairs — k x n_shards values cross the wire instead of n (DESIGN.md §3).
 
 Build: contiguous row ranges -> per-shard build_index (ids are GLOBAL row
 ids), padded to common array shapes and stacked on a leading shard axis.
-Search: shard_map over the model axis; each shard runs the jit device-mode
-progressive search on its slice; a tiny all_gather + top_k merges.
+Search: shard_map over the model axis; each shard runs the unified search
+runtime (`core/runtime.py` — progressive frontier by default, or the
+two-phase batched-verification mode) on its slice; a tiny all_gather +
+top_k merges.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +21,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .index import IndexArrays, IndexMeta, build_index
-from .search_device import search_batch_progressive
+from .runtime import RuntimeConfig
+from .runtime import search as runtime_search
 
 
 class ShardedIndex(NamedTuple):
@@ -93,15 +95,27 @@ def sharded_search(
     axis: str = "model",
     budget: int = 64,
     cs_prune: bool = True,
+    runtime: Optional[RuntimeConfig] = None,
 ):
-    """Global c-k-AMIP over the sharded corpus. queries: (B, d) replicated."""
+    """Global c-k-AMIP over the sharded corpus. queries: (B, d) replicated.
+
+    ``runtime`` selects the per-shard search config (mode / verification
+    backend); the default is the progressive norm-adaptive frontier. Pass
+    e.g. ``RuntimeConfig(mode="two_phase", verification="batched",
+    norm_adaptive=True)`` to run the batched Pallas-verification path on
+    every shard.
+    """
     meta = sharded.meta
+    # ``budget``/``cs_prune`` are the legacy knobs for the default config; a
+    # user-supplied RuntimeConfig is taken as-is (only k is stamped in —
+    # budget=None keeps its documented "all blocks" meaning).
+    cfg = runtime if runtime is not None else RuntimeConfig(
+        mode="progressive", cs_prune=cs_prune, budget=budget)
+    cfg = dataclasses.replace(cfg, k=k)
 
     def local(arr_shard, q):
         arrays = jax.tree.map(lambda a: a[0], arr_shard)  # drop shard dim
-        ids, scores, stats = search_batch_progressive(
-            arrays, meta, q, k=k, budget=min(budget, meta.n_blocks),
-            cs_prune=cs_prune)
+        ids, scores, stats = runtime_search(arrays, meta, q, cfg)
         # gather per-shard winners; merge on every shard (cheap: k x shards)
         all_ids = jax.lax.all_gather(ids, axis)        # (S, B, k)
         all_scores = jax.lax.all_gather(scores, axis)  # (S, B, k)

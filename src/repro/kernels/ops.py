@@ -5,8 +5,15 @@ runs as traced jnp — bit-exact semantics, validated against ref.py); on a
 TPU backend the same calls lower to Mosaic. ``use_pallas=False`` routes to
 the pure-jnp oracle, which is what the dry-run lowers (compact HLO; the
 kernels are the TPU production path — see DESIGN.md §5).
+
+For the search hot path `mips_score` also accepts ``use_pallas=None``
+(backend-aware default): Pallas on TPU, the jnp oracle elsewhere —
+interpret mode is a correctness vehicle, an order of magnitude slower than
+the oracle on CPU, so production callers should not pay for it off-TPU.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +28,9 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def mips_score(x, q, valid, *, use_pallas: bool = True, **block_kwargs):
+def mips_score(x, q, valid, *, use_pallas: Optional[bool] = None, **block_kwargs):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
     if not use_pallas:
         return ref.mips_score_ref(x, q, valid)
     return _mips_score_pallas(x, q, valid, interpret=_interpret(), **block_kwargs)

@@ -11,14 +11,20 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def make_mesh_compat(shape, axes):
+    """`jax.make_mesh` across jax versions: newer jax wants explicit
+    ``axis_types`` (Auto) for shard_map meshes; jax <= 0.4.x has no
+    ``AxisType`` at all and its meshes are implicitly Auto."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 2):
@@ -27,4 +33,4 @@ def make_host_mesh(model_parallel: int = 2):
     mp = model_parallel
     while mp > 1 and n % mp:
         mp //= 2
-    return jax.make_mesh((n // mp, mp), ("data", "model"), axis_types=_auto(2))
+    return make_mesh_compat((n // mp, mp), ("data", "model"))

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.promips import ProMIPS
-from ..core.search_device import search_batch_progressive
+from ..core.runtime import RuntimeConfig
+from ..core.runtime import search as runtime_search
 from ..models import transformer as model_lib
 
 
@@ -37,7 +38,8 @@ class Request:
 class DecodeEngine:
     def __init__(self, params, cfg, *, batch_slots: int = 4, max_len: int = 512,
                  logits_mode: str = "exact", promips_kwargs: Optional[dict] = None,
-                 promips_budget: Optional[int] = None, eos_id: int = 0):
+                 promips_budget: Optional[int] = None, eos_id: int = 0,
+                 search_runtime: Optional[RuntimeConfig] = None):
         self.params, self.cfg = params, cfg
         self.b, self.max_len = batch_slots, max_len
         self.logits_mode = logits_mode
@@ -58,7 +60,16 @@ class DecodeEngine:
             kw = dict(m=8, c=0.9, p=0.9, norm_strata=4)
             kw.update(promips_kwargs or {})
             self.index = ProMIPS.build(emb, **kw)
-            self.promips_budget = promips_budget or self.index.meta.n_blocks
+            # decode-step batch goes through the unified two-phase runtime
+            # (batched Pallas verification over the B slots) by default; a
+            # user-supplied RuntimeConfig is taken as-is (only k is stamped
+            # in), matching sharded_search's contract — ``promips_budget``
+            # applies to the default config only.
+            if search_runtime is None:
+                search_runtime = RuntimeConfig(
+                    mode="two_phase", verification="batched",
+                    norm_adaptive=True, cs_prune=True, budget=promips_budget)
+            self.search_runtime = dataclasses.replace(search_runtime, k=4)
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
@@ -113,12 +124,14 @@ class DecodeEngine:
         if self.logits_mode == "promips":
             hidden, self.cache = self._decode_hidden(
                 self.params, self.cache, jnp.asarray(tokens))
-            ids, _, stats = search_batch_progressive(
+            ids, _, stats = runtime_search(
                 self.index.arrays, self.index.meta,
-                jnp.asarray(hidden, jnp.float32), k=4,
-                budget=min(self.promips_budget, self.index.meta.n_blocks))
+                jnp.asarray(hidden, jnp.float32), self.search_runtime)
             self.pages += int(np.sum(np.asarray(stats.pages)))
             nxt = np.asarray(ids)[:, 0]
+            # a slot starved by a finite promips_budget (stats.exhausted)
+            # returns id -1; end that sequence instead of decoding token -1
+            nxt = np.where(nxt >= 0, nxt, self.eos_id)
         else:
             logits, self.cache = self._decode(self.params, self.cache,
                                               jnp.asarray(tokens))

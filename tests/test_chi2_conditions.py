@@ -1,6 +1,8 @@
 """Chi-square machinery + Conditions A/B (paper Section IV, Theorems 1-2)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; skip cleanly offline
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -28,8 +28,8 @@ def test_int8_psum_shard_map():
         from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
         from repro.distributed.compression import int8_psum
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((8,), ("data",))
         x = jnp.arange(8 * 16, dtype=jnp.float32).reshape(8, 16) / 40.0
         f = shard_map(lambda s: int8_psum(s, "data"), mesh=mesh,
                       in_specs=P("data"), out_specs=P("data"), check_rep=False)
@@ -50,8 +50,8 @@ def test_sharded_promips_search():
         from repro.baselines.exact import exact_topk
         from repro.core import overall_ratio
         from repro.data.synthetic import mf_factors
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         x = mf_factors(4000, 48, 12, decay=0.3, seed=0)
         q = mf_factors(8, 48, 12, decay=0.3, seed=1)
         sh = build_sharded(x, 4, m=6, c=0.9, p=0.7, norm_strata=4)

@@ -1,6 +1,8 @@
 """iDistance layout (Section VI, Algorithm 4, Formula 6) + index invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; skip cleanly offline
 from hypothesis import given, settings, strategies as st
 
 from repro.core.idistance import build_idistance, kmeans_np, ring_key_range

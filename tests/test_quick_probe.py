@@ -2,6 +2,8 @@
 host/device agreement."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; skip cleanly offline
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -1,0 +1,115 @@
+"""Unified two-phase runtime: scan-vs-batched device parity, host/device
+agreement, and numpy-vs-jnp bit-exactness of the shared `search_common` core."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ProMIPS, RuntimeConfig, runtime_search
+from repro.core import search_common as sc
+
+
+@pytest.fixture(scope="module")
+def built(mf_corpus):
+    x, q = mf_corpus
+    pm = ProMIPS.build(x, m=8, c=0.9, p=0.5, norm_strata=4, page_bytes=2048)
+    return x, q, pm
+
+
+@pytest.mark.parametrize("norm_adaptive,cs_prune",
+                         [(False, False), (True, True)])
+def test_scan_vs_batched_parity(built, norm_adaptive, cs_prune):
+    """Old (per-query lax.scan) vs new (batched Pallas verification) device
+    search: identical ids, scores AND logical page/candidate accounting."""
+    x, q, pm = built
+    out_scan = pm.search(q, k=10, verification="scan",
+                         norm_adaptive=norm_adaptive, cs_prune=cs_prune)
+    out_bat = pm.search(q, k=10, verification="batched",
+                        norm_adaptive=norm_adaptive, cs_prune=cs_prune)
+    ids_s, scores_s, st_s = out_scan
+    ids_b, scores_b, st_b = out_bat
+    np.testing.assert_array_equal(np.asarray(ids_s), np.asarray(ids_b))
+    np.testing.assert_array_equal(np.asarray(scores_s), np.asarray(scores_b))
+    for field in ("pages", "candidates", "probe_passed", "used_round2",
+                  "exhausted", "rows"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st_s, field)), np.asarray(getattr(st_b, field)),
+            err_msg=f"stat {field} diverged between verification backends")
+
+
+def test_device_agrees_with_host_top1(built):
+    """Same index, same query: both device backends find the host top-1
+    (small corpus, full budget, paper-faithful settings)."""
+    x, q, pm = built
+    for verification in ("scan", "batched"):
+        ids_d, scores_d, _ = pm.search(q[:8], k=10, verification=verification)
+        ids_d = np.asarray(ids_d)
+        for i in range(8):
+            ids_h, scores_h, _ = pm.search_host(q[i], k=10)
+            assert ids_d[i, 0] == ids_h[0], (verification, i)
+
+
+def test_runtime_facade_modes(built):
+    """The runtime facade dispatches every mode and clamps budgets."""
+    x, q, pm = built
+    for cfg in (RuntimeConfig(k=5),
+                RuntimeConfig(k=5, verification="scan"),
+                RuntimeConfig(k=5, mode="progressive", cs_prune=True),
+                RuntimeConfig(k=5, budget=10**9, norm_adaptive=True)):
+        ids, scores, stats = runtime_search(pm.arrays, pm.meta, q[:4], cfg)
+        assert np.asarray(ids).shape == (4, 5)
+        assert np.all(np.diff(np.asarray(scores), axis=1) <= 1e-6)
+    with pytest.raises(ValueError):
+        runtime_search(pm.arrays, pm.meta, q[:2], RuntimeConfig(mode="nope"))
+
+
+def test_search_common_numpy_jnp_bitexact():
+    """The backend-neutral core returns bit-identical f32 on numpy and jnp."""
+    rng = np.random.RandomState(7)
+    n = 256
+    best_ip = rng.standard_normal(n).astype(np.float32) * 10
+    max_l2sq = np.float32(37.5)
+    q_l2sq = (rng.standard_normal(n).astype(np.float32) ** 2) * 20
+    local = (rng.standard_normal(n).astype(np.float32) ** 2) * 30
+    proj_d2 = (rng.standard_normal(n).astype(np.float32) ** 2) * 5
+    c, x_p = 0.9, 7.34
+
+    cases = {
+        "cond_a": (sc.condition_a(best_ip, max_l2sq, q_l2sq, c),
+                   sc.condition_a(jnp.asarray(best_ip), max_l2sq,
+                                  jnp.asarray(q_l2sq), c)),
+        "denom": (sc.condition_b_denominator(best_ip, max_l2sq, q_l2sq, c, xp=np),
+                  sc.condition_b_denominator(jnp.asarray(best_ip), max_l2sq,
+                                             jnp.asarray(q_l2sq), c, xp=jnp)),
+        "cond_b": (sc.condition_b(proj_d2, best_ip, max_l2sq, q_l2sq, c, x_p, xp=np),
+                   sc.condition_b(jnp.asarray(proj_d2), jnp.asarray(best_ip),
+                                  max_l2sq, jnp.asarray(q_l2sq), c, x_p, xp=jnp)),
+        "comp_r": (sc.compensation_radius(best_ip, max_l2sq, q_l2sq, c, x_p, xp=np),
+                   sc.compensation_radius(jnp.asarray(best_ip), max_l2sq,
+                                          jnp.asarray(q_l2sq), c, x_p, xp=jnp)),
+        "adaptive": (sc.adaptive_radii(local, best_ip, q_l2sq, c, x_p,
+                                       cs_prune=True, xp=np),
+                     sc.adaptive_radii(jnp.asarray(local), jnp.asarray(best_ip),
+                                       jnp.asarray(q_l2sq), c, x_p,
+                                       cs_prune=True, xp=jnp)),
+        "sphere": (sc.sphere_select(proj_d2, local, best_ip),
+                   sc.sphere_select(jnp.asarray(proj_d2), jnp.asarray(local),
+                                    jnp.asarray(best_ip))),
+    }
+    for name, (np_out, jnp_out) in cases.items():
+        np.testing.assert_array_equal(
+            np.asarray(np_out, dtype=np.asarray(jnp_out).dtype),
+            np.asarray(jnp_out), err_msg=f"{name}: numpy vs jnp mismatch")
+
+
+def test_topk_merge_backends_agree():
+    rng = np.random.RandomState(3)
+    top_s = np.sort(rng.standard_normal(10).astype(np.float32))[::-1].copy()
+    top_r = np.arange(10, dtype=np.int32)
+    scores = rng.standard_normal(40).astype(np.float32)
+    scores[5] = top_s[0]  # force a tie across the boundary
+    rows = np.arange(100, 140, dtype=np.int32)
+    s_np, r_np = sc.topk_merge(top_s, top_r, scores, rows, 10, xp=np)
+    s_j, r_j = sc.topk_merge(jnp.asarray(top_s), jnp.asarray(top_r),
+                             jnp.asarray(scores), jnp.asarray(rows), 10, xp=jnp)
+    np.testing.assert_array_equal(s_np, np.asarray(s_j))
+    np.testing.assert_array_equal(r_np, np.asarray(r_j))

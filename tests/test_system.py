@@ -37,8 +37,8 @@ def test_dryrun_cell_builder_small_mesh():
         import jax
         from repro.configs import get_config, SHAPES_BY_NAME
         from repro.launch import specs as S
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 2), ("data", "model"))
         for arch, shape in [("tinyllama-1.1b", "train_4k"),
                             ("xlstm-1.3b", "long_500k"),
                             ("whisper-base", "decode_32k")]:
