@@ -28,6 +28,7 @@ BENCHES = [
     ("ablation_beyond_paper", F.ablation_beyond_paper),
     ("search_runtime", F.bench_search_runtime),
     ("device_throughput", F.bench_device_throughput),
+    ("stream_churn", lambda: F.bench_stream(quick=False)),
 ]
 
 
@@ -38,10 +39,17 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="fast smoke: host-vs-scan-vs-batched runtime "
                          "comparison only (writes BENCH_search.json)")
+    ap.add_argument("--stream", action="store_true",
+                    help="streaming-index smoke: insert throughput + search "
+                         "latency vs delta fraction (writes BENCH_stream.json)")
     args = ap.parse_args()
 
-    benches = ([("search_runtime", lambda: F.bench_search_runtime(quick=True))]
-               if args.quick else BENCHES)
+    if args.quick:
+        benches = [("search_runtime", lambda: F.bench_search_runtime(quick=True))]
+    elif args.stream:
+        benches = [("stream_churn", lambda: F.bench_stream(quick=True))]
+    else:
+        benches = BENCHES
     os.makedirs(args.out, exist_ok=True)
     print("name,us_per_call,derived")
     for name, fn in benches:

@@ -7,11 +7,20 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests =="
-python -m pytest -q
+echo "== tier-1 tests (minus the stream tier, run separately below) =="
+python -m pytest -q --ignore=tests/test_stream.py
+
+echo "== streaming-index tier (insert/delete/compact paths) =="
+python -m pytest -q tests/test_stream.py
 
 echo "== benchmark smoke (host vs scan vs batched runtime) =="
 python -m benchmarks.run --quick --out results/bench
 
+echo "== stream smoke (insert throughput + latency vs delta fraction) =="
+python -m benchmarks.run --stream --out results/bench
+
 echo "== BENCH_search.json =="
 cat BENCH_search.json
+
+echo "== BENCH_stream.json =="
+cat BENCH_stream.json

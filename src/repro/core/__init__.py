@@ -21,7 +21,7 @@ from .quick_probe import (
     quick_probe,
     unpack_bits,
 )
-from .runtime import RuntimeConfig
+from .runtime import RuntimeConfig, search_segments
 from .runtime import search as runtime_search
 from .search_device import SearchStats, search_batch, search_batch_progressive
 from .search_host import HostSearcher, HostStats
@@ -35,7 +35,7 @@ __all__ = [
     "GroupTable", "build_group_table", "group_lower_bounds",
     "pack_codes", "pack_codes_np", "quick_probe", "unpack_bits",
     "SearchStats", "search_batch", "search_batch_progressive",
-    "RuntimeConfig", "runtime_search",
+    "RuntimeConfig", "runtime_search", "search_segments",
     "HostSearcher", "HostStats",
     "overall_ratio", "recall_at_k",
 ]

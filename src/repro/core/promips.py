@@ -27,8 +27,12 @@ class ProMIPS:
 
     # -- construction -------------------------------------------------------
     @classmethod
-    def build(cls, x: np.ndarray, **kwargs) -> "ProMIPS":
-        return cls(build_index(x, **kwargs))
+    def build(cls, x: np.ndarray, *, seed: int = 0, **kwargs) -> "ProMIPS":
+        """Build the index. ``seed`` is threaded explicitly through
+        `build_index` -> `build_idistance` -> `kmeans_np` (and the projection
+        draw), so the same rows + seed give a bit-identical index — the
+        contract streaming compaction relies on for reproducible rebuilds."""
+        return cls(build_index(x, seed=seed, **kwargs))
 
     @property
     def meta(self) -> IndexMeta:

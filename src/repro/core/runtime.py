@@ -20,12 +20,15 @@ All modes return the same (ids (B, k), scores (B, k), SearchStats) triple.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 from dataclasses import dataclass
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels import ops
 from .index import IndexArrays, IndexMeta
 from .search_device import SearchStats, search_batch, search_batch_progressive
 
@@ -88,4 +91,83 @@ def search(arrays: IndexArrays, meta: IndexMeta, queries,
     return ids, _rescore(arrays.x, stats.rows, q), stats
 
 
-__all__ = ["RuntimeConfig", "SearchStats", "search"]
+# ---------------------------------------------------------------------------
+# Segment-aware entry (streaming index, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def next_pow2(t: int) -> int:
+    """Shared jit-shape-bucketing quantizer: the segment over-fetch here and
+    the snapshot delta-prefix in `stream/mutable.py` both use it, keeping the
+    compiled-shape strategy in one place."""
+    return 1 << max(0, int(t) - 1).bit_length()
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas"))
+def _merge_segments(base_alive, rows, base_ids, base_scores, delta_x,
+                    delta_gids, delta_valid, queries, k, use_pallas):
+    """Merge base top-k_base with the exact-scored delta segment.
+
+    ``base_scores`` are the `_rescore`d exact inner products `search` already
+    computed; here tombstoned rows are masked to -inf. Every delta row is
+    scored exactly in one `ops.mips_score` call (the same verification kernel
+    the batched two-phase runtime uses). One `lax.top_k` over the
+    concatenation is the same merge rule as `search_common.topk_merge`
+    (ties break toward the base entry).
+    """
+    alive = (rows >= 0) & jnp.take(base_alive, jnp.maximum(rows, 0), axis=0)
+    b_scores = jnp.where(alive, base_scores, -jnp.inf)
+    b_ids = jnp.where(alive, base_ids, -1)
+
+    d_scores = ops.mips_score(delta_x, queries, delta_valid,
+                              use_pallas=use_pallas).T        # (B, cap)
+    d_scores = jnp.where(delta_valid[None, :], d_scores, -jnp.inf)
+    d_ids = jnp.broadcast_to(jnp.where(delta_valid, delta_gids, -1),
+                             d_scores.shape)
+
+    merged_s = jnp.concatenate([b_scores, d_scores], axis=1)
+    merged_i = jnp.concatenate([b_ids, d_ids], axis=1)
+    best_s, pos = jax.lax.top_k(merged_s, k)
+    return jnp.take_along_axis(merged_i, pos, axis=1), best_s
+
+
+def search_segments(snap, queries, cfg: RuntimeConfig = RuntimeConfig()):
+    """Batched c-k-AMIP search over a streaming `stream.segments.Snapshot`.
+
+    Runs the configured base search over the immutable base segment —
+    over-fetching ``k + next_pow2(n_base_dead)`` results so tombstoned rows
+    cannot crowd live ones out of the top-k (the quantization bounds jit
+    recompiles to O(log n) distinct shapes between compactions) — then
+    merges in the delta segment's exact scores. On a ``clean`` snapshot
+    (no tombstones, empty delta) this is EXACTLY `search` on the base
+    arrays: bit-identical ids and scores to a cold-built index.
+
+    Returns (global ids (B, k), scores (B, k), StreamStats).
+    """
+    from ..stream.segments import StreamStats  # deferred: stream imports us
+
+    q = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
+    meta = snap.meta
+    if snap.clean:
+        ids, scores, stats = search(snap.arrays, meta, q, cfg)
+        return ids, scores, StreamStats(pages=stats.pages,
+                                        candidates=stats.candidates,
+                                        exhausted=stats.exhausted, base=stats)
+
+    k_base = min(cfg.k + (next_pow2(snap.n_base_dead) if snap.n_base_dead
+                          else 0), meta.n_pad)
+    ids_b, scores_b, stats = search(snap.arrays, meta, q,
+                                    dataclasses.replace(cfg, k=k_base))
+    ids, scores = _merge_segments(snap.base_alive, stats.rows, ids_b, scores_b,
+                                  snap.delta_x, snap.delta_gids,
+                                  snap.delta_valid, q, cfg.k, cfg.use_pallas)
+    delta_pages = -(-snap.delta_count // meta.page_rows)  # logical delta sweep
+    return ids, scores, StreamStats(
+        pages=stats.pages + jnp.int32(delta_pages),
+        candidates=stats.candidates + jnp.sum(snap.delta_valid.astype(jnp.int32)),
+        exhausted=stats.exhausted,
+        base=stats,
+    )
+
+
+__all__ = ["RuntimeConfig", "SearchStats", "next_pow2", "search",
+           "search_segments"]

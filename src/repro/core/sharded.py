@@ -137,6 +137,84 @@ def sharded_search(
     return fn(sharded.arrays, jnp.asarray(queries, jnp.float32))
 
 
+class MutableShardedProMIPS:
+    """Pod-scale streaming index: one `stream.MutableProMIPS` per shard,
+    writes routed by contiguous global-ID range (DESIGN.md §8).
+
+    The initial corpus is split into contiguous row ranges exactly like
+    `build_sharded`; each shard owns its range's ids plus a private delta
+    segment and tombstone bitmap, so churn on one range never touches the
+    other shards' immutable bases. Ids past the initial corpus route to the
+    last shard (the append range). Search fans out to the per-shard
+    segment-merged runtime and merges k x n_shards (id, score) pairs — the
+    same wire economics as `sharded_search`.
+    """
+
+    def __init__(self, x: np.ndarray, n_shards: int, *,
+                 delta_capacity: Optional[int] = None,
+                 auto_compact: bool = False, **build_kwargs):
+        from ..stream.mutable import MutableProMIPS
+
+        n = x.shape[0]
+        self.bounds = np.linspace(0, n, n_shards + 1).astype(int)
+        self.shards = [
+            MutableProMIPS(x[lo:hi], ids=np.arange(lo, hi),
+                           delta_capacity=delta_capacity,
+                           auto_compact=auto_compact, **build_kwargs)
+            for lo, hi in zip(self.bounds[:-1], self.bounds[1:])
+        ]
+
+    @property
+    def n_alive(self) -> int:
+        return sum(s.n_alive for s in self.shards)
+
+    def _route(self, gids: np.ndarray) -> np.ndarray:
+        shard = np.searchsorted(self.bounds, gids, side="right") - 1
+        return np.clip(shard, 0, len(self.shards) - 1)
+
+    def _by_shard(self, gids):
+        gids = np.atleast_1d(np.asarray(gids, np.int64))
+        shard = self._route(gids)
+        for s in np.unique(shard):
+            yield int(s), np.nonzero(shard == s)[0], gids
+
+    def insert(self, ids, rows) -> None:
+        rows = np.atleast_2d(np.asarray(rows, np.float32))
+        for s, sel, gids in self._by_shard(ids):
+            self.shards[s].insert(gids[sel], rows[sel])
+
+    def delete(self, ids) -> None:
+        for s, sel, gids in self._by_shard(ids):
+            self.shards[s].delete(gids[sel])
+
+    def update(self, ids, rows) -> None:
+        rows = np.atleast_2d(np.asarray(rows, np.float32))
+        for s, sel, gids in self._by_shard(ids):
+            self.shards[s].update(gids[sel], rows[sel])
+
+    def compact(self) -> None:
+        for s in self.shards:
+            s.compact()
+
+    def search(self, queries, k: int = 10,
+               runtime: Optional[RuntimeConfig] = None):
+        """Global top-k under churn: per-shard segment-merged search, then a
+        k x n_shards host merge (ties break toward the lower shard, matching
+        `sharded_search`'s lowest-index-wins top_k). All shard searches are
+        dispatched before any result is pulled to host, so the per-shard
+        computations overlap under JAX's async dispatch."""
+        launched = [shard.search(queries, k=k, runtime=runtime)
+                    for shard in self.shards]
+        ids_all = [np.asarray(ids) for ids, _, _ in launched]
+        scores_all = [np.asarray(scores) for _, scores, _ in launched]
+        pages = sum(int(np.sum(np.asarray(st.pages))) for _, _, st in launched)
+        flat_i = np.concatenate(ids_all, axis=1)
+        flat_s = np.concatenate(scores_all, axis=1)
+        pos = np.argsort(-flat_s, axis=1, kind="stable")[:, :k]
+        return (np.take_along_axis(flat_i, pos, axis=1),
+                np.take_along_axis(flat_s, pos, axis=1), pages)
+
+
 def device_put_sharded_index(sharded: ShardedIndex, mesh: Mesh, axis: str = "model"):
     arrays = jax.tree.map(
         lambda a: jax.device_put(jnp.asarray(a), NamedSharding(mesh, P(axis))),

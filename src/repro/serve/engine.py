@@ -11,6 +11,12 @@ paper's Fig. 7/8. `logits_mode="exact"` is the baseline.
 Continuous batching: fixed B slots; finished sequences free their slot and
 a queued request is admitted with a single-request prefill scattered into
 the batch cache at the slot index.
+
+The embedding index is a streaming `MutableProMIPS` (DESIGN.md §8):
+`update(ids, rows)` / `delete(ids)` track output-embedding weight refreshes
+and vocabulary retirements mid-traffic — updated rows land in the delta
+segment (scored exactly), stale rows are tombstoned, and background
+compaction folds the churn back into the immutable base off the decode path.
 """
 from __future__ import annotations
 
@@ -21,10 +27,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.promips import ProMIPS
 from ..core.runtime import RuntimeConfig
-from ..core.runtime import search as runtime_search
 from ..models import transformer as model_lib
+from ..stream.mutable import MutableProMIPS
 
 
 @dataclasses.dataclass
@@ -57,9 +62,12 @@ class DecodeEngine:
             lambda p, c, t: model_lib.decode_step(p, cfg, c, t, return_hidden=True))
         if logits_mode == "promips":
             emb = np.asarray(params["embed"], np.float32)[: cfg.vocab]
-            kw = dict(m=8, c=0.9, p=0.9, norm_strata=4)
+            kw = dict(m=8, c=0.9, p=0.9, norm_strata=4, seed=0)
             kw.update(promips_kwargs or {})
-            self.index = ProMIPS.build(emb, **kw)
+            # streaming index: row id == vocab id; update()/delete() absorb
+            # weight refreshes, auto-compaction runs off the decode path
+            self.index = MutableProMIPS(emb, auto_compact=True, **kw)
+            self._retired = np.zeros(cfg.vocab, bool)
             # decode-step batch goes through the unified two-phase runtime
             # (batched Pallas verification over the B slots) by default; a
             # user-supplied RuntimeConfig is taken as-is (only k is stamped
@@ -70,6 +78,42 @@ class DecodeEngine:
                     mode="two_phase", verification="batched",
                     norm_adaptive=True, cs_prune=True, budget=promips_budget)
             self.search_runtime = dataclasses.replace(search_runtime, k=4)
+
+    # -- embedding mutation (streaming index, DESIGN.md §8) ------------------
+    def update(self, ids, rows) -> None:
+        """Refresh output-embedding rows mid-traffic (e.g. a trainer pushed
+        new weights for some vocab ids). The model's embed table is patched
+        in place; in promips mode the refreshed rows move to the index's
+        delta segment and are scored exactly from the next decode step."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        rows = np.atleast_2d(np.asarray(rows, np.float32))
+        if (ids < 0).any() or (ids >= self.cfg.vocab).any():
+            raise ValueError("update ids must be valid vocab ids")
+        d_emb = self.params["embed"].shape[-1]
+        if rows.shape != (len(ids), d_emb):
+            raise ValueError(f"rows must be ({len(ids)}, {d_emb}), "
+                             f"got {rows.shape}")
+        if self.logits_mode == "promips":
+            # index first: it validates aliveness, so a rejected refresh
+            # (e.g. of a retired id) leaves the embed table untouched
+            self.index.update(ids, rows)
+        self.params = dict(self.params)
+        self.params["embed"] = self.params["embed"].at[ids].set(
+            rows.astype(self.params["embed"].dtype))
+
+    def delete(self, ids) -> None:
+        """Retire vocab ids from decoding: tombstoned in the embedding index,
+        so approximate greedy search can never emit them again (promips mode
+        only — exact mode has no index to mask)."""
+        if self.logits_mode != "promips":
+            raise ValueError("delete() requires logits_mode='promips'")
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        self.index.delete(ids)
+        self._retired[ids] = True  # admission prefill masks these too
+
+    def join_compaction(self, timeout: Optional[float] = None) -> None:
+        if self.logits_mode == "promips":
+            self.index.join_compaction(timeout)
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
@@ -107,7 +151,14 @@ class DecodeEngine:
                 return full
 
             self.cache = jax.tree.map(insert, self.cache, cache1)
-            req.out_tokens.append(int(np.argmax(np.asarray(logits[0]))))
+            lg = np.array(logits[0], np.float32)  # copy: jax buffers are RO
+            lg[self.cfg.vocab:] = -np.inf  # logits cover vocab_padded rows;
+            # the argmax must only land on a real vocab id
+            if self.logits_mode == "promips":
+                # retired vocab ids are tombstoned in the index; keep the
+                # dense prefill argmax consistent with the decode path
+                lg[: self.cfg.vocab][self._retired] = -np.inf
+            req.out_tokens.append(int(np.argmax(lg)))
             self.active[slot] = True
             self.requests[slot] = req
 
@@ -124,9 +175,9 @@ class DecodeEngine:
         if self.logits_mode == "promips":
             hidden, self.cache = self._decode_hidden(
                 self.params, self.cache, jnp.asarray(tokens))
-            ids, _, stats = runtime_search(
-                self.index.arrays, self.index.meta,
-                jnp.asarray(hidden, jnp.float32), self.search_runtime)
+            ids, _, stats = self.index.search(
+                jnp.asarray(hidden, jnp.float32), k=self.search_runtime.k,
+                runtime=self.search_runtime)
             self.pages += int(np.sum(np.asarray(stats.pages)))
             nxt = np.asarray(ids)[:, 0]
             # a slot starved by a finite promips_budget (stats.exhausted)
@@ -135,7 +186,9 @@ class DecodeEngine:
         else:
             logits, self.cache = self._decode(self.params, self.cache,
                                               jnp.asarray(tokens))
-            nxt = np.argmax(np.asarray(logits), axis=-1)
+            lg = np.array(logits, np.float32)
+            lg[..., self.cfg.vocab:] = -np.inf  # mask vocab_padded tail
+            nxt = np.argmax(lg, axis=-1)
             self.pages += self.cfg.vocab_padded * self.cfg.d_model * 4 // 4096 \
                 * int(self.active.sum()) // max(self.b, 1)
         self.steps += 1

@@ -1,0 +1,115 @@
+"""Compaction: fold delta + tombstones back into a fresh immutable base.
+
+The rebuild reuses `core/index.build_index` verbatim over the SURVIVING rows
+in canonical (ascending global id) order, with the stream's stored build
+kwargs — including the explicit seed — so a compacted base is bit-identical
+to a cold `build_index` over the same rows (the determinism + parity tests
+in tests/test_stream.py assert this).
+
+`Compactor` runs the rebuild on a background thread, off the search path:
+the stream is only locked twice — a freeze (copy out survivors + open the
+op log) and an install (swap the base, reset the delta, replay the ops that
+arrived while the rebuild ran). Searches keep hitting the old snapshot the
+whole time; writers never block on the k-means.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from ..core.index import ProMIPSIndex, build_index
+
+
+@dataclass(frozen=True)
+class CompactionConfig:
+    """Trigger math (DESIGN.md §8): compact once the churn fraction
+    (delta watermark + base tombstones, over base size + delta watermark)
+    exceeds ``threshold``. The O(n log n) rebuild is then amortized over at
+    least ``threshold/(1-threshold) * n`` absorbed writes."""
+
+    threshold: float = 0.3
+
+
+def rebuild_base(gids: np.ndarray, rows: np.ndarray, build_kwargs: dict) -> ProMIPSIndex:
+    """Fresh base over the surviving rows, ids stamped GLOBAL.
+
+    Rows are sorted into ascending-gid canonical order first, so any two
+    rebuilds over the same surviving set (in any presentation order) are
+    bit-identical.
+    """
+    order = np.argsort(gids, kind="stable")
+    g = np.asarray(gids)[order]
+    idx = build_index(np.ascontiguousarray(rows[order], np.float32), **build_kwargs)
+    local = idx.arrays.ids
+    global_ids = np.where(local >= 0, g[np.maximum(local, 0)], -1).astype(np.int32)
+    return ProMIPSIndex(arrays=idx.arrays._replace(ids=global_ids),
+                        meta=idx.meta, layout=idx.layout)
+
+
+class Compactor:
+    """Background-compaction driver for one `MutableProMIPS`."""
+
+    def __init__(self, cfg: CompactionConfig = CompactionConfig()):
+        self.cfg = cfg
+        self._thread: Optional[threading.Thread] = None
+        self._join_lock = threading.Lock()   # serializes concurrent joiners
+        self.runs = 0
+        self.error: Optional[BaseException] = None
+
+    @property
+    def in_flight(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def maybe_trigger(self, stream) -> bool:
+        """Start a background rebuild if churn crossed the threshold. A
+        stored failure disables auto-retriggering (one failing O(n log n)
+        rebuild per write would be a storm) until `join()` surfaces and
+        clears the error."""
+        if (self.in_flight or self.error is not None
+                or stream.churn_fraction <= self.cfg.threshold):
+            return False
+        self.start(stream)
+        return True
+
+    def start(self, stream) -> None:
+        if self.in_flight:
+            raise RuntimeError("compaction already in flight")
+        gids, rows = stream._freeze_for_compaction()
+
+        self.error = None
+
+        def run():
+            try:
+                new_base = rebuild_base(gids, rows, stream.build_kwargs)
+                stream._install_compacted(new_base)
+                self.runs += 1
+            except BaseException as e:  # noqa: BLE001 — must not wedge the stream
+                # the freeze only COPIED state and ops were applied live, so
+                # abandoning = closing the op log; writes stay intact and the
+                # next trigger retries. The error surfaces on join().
+                self.error = e
+                stream._abandon_compaction()
+
+        self._thread = threading.Thread(target=run, name="promips-compaction",
+                                        daemon=True)
+        self._thread.start()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        """Safe under concurrent callers (e.g. two writers both waiting on a
+        full delta): the thread handle is snapshotted under a lock."""
+        with self._join_lock:
+            t = self._thread
+            if t is not None:
+                t.join(timeout)
+                if t.is_alive():
+                    raise TimeoutError("compaction did not finish in time")
+                self._thread = None
+            if self.error is not None:
+                err, self.error = self.error, None
+                raise RuntimeError("background compaction failed") from err
+
+
+__all__ = ["CompactionConfig", "Compactor", "rebuild_base"]

@@ -1,0 +1,342 @@
+"""MutableProMIPS: a ProMIPS index that absorbs inserts/updates/deletes.
+
+Layout (DESIGN.md §8): one immutable BASE segment (a `build_index` product
+whose ids are stamped GLOBAL and whose probability guarantees are untouched)
+plus an append-only DELTA segment of raw rows scored exactly at search time,
+plus tombstone bitmaps over both. Searches run against an epoch-versioned
+`Snapshot`; writers mutate host state under a lock and bump the epoch, so an
+in-flight search never observes a half-applied write. Past a configurable
+churn fraction, compaction rebuilds the base off the search path (seeded,
+deterministic) and atomically swaps it in.
+
+>>> st = MutableProMIPS(x, m=8, seed=0)
+>>> st.insert(new_ids, new_rows)        # exact-scored from the next search
+>>> st.delete(stale_ids)                # masked to -inf from the next search
+>>> ids, scores, stats = st.search(queries, k=10)
+>>> st.compact()                        # fold delta+tombstones into the base
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.index import IndexMeta, ProMIPSIndex
+from ..core.runtime import RuntimeConfig, next_pow2, search_segments
+from .compaction import CompactionConfig, Compactor, rebuild_base
+from .segments import DeltaSegment, Snapshot
+
+
+class MutableProMIPS:
+    """Mutable index = base segment + delta segment + tombstones."""
+
+    def __init__(self, x: np.ndarray, ids: Optional[np.ndarray] = None, *,
+                 delta_capacity: Optional[int] = None,
+                 compaction: CompactionConfig = CompactionConfig(),
+                 auto_compact: bool = False,
+                 **build_kwargs):
+        """``build_kwargs`` go to `core/index.build_index` verbatim (m, c, p,
+        page_bytes, seed, ...) and are REUSED by every compaction rebuild —
+        pass an explicit ``seed`` for reproducible rebuilds (default 0)."""
+        x = np.ascontiguousarray(x, np.float32)
+        n, d = x.shape
+        gids = (np.arange(n, dtype=np.int64) if ids is None
+                else np.asarray(ids, np.int64))
+        self._check_gids(gids)
+        build_kwargs.setdefault("seed", 0)
+        self.build_kwargs = dict(build_kwargs)
+        self.d = d
+        self._lock = threading.RLock()
+        self._oplog: Optional[list] = None   # open while a rebuild is in flight
+        self._defer_trigger = False          # True inside update()'s two halves
+        self._delta_capacity = (int(delta_capacity) if delta_capacity
+                                else max(64, n // 2))
+        self._set_base(rebuild_base(gids, x, self.build_kwargs))
+        self._reset_delta()
+        self._epoch = 0
+        self._snap: Optional[Snapshot] = None
+        self._next_id = int(gids.max()) + 1 if n else 0
+        self.compactor = Compactor(compaction) if auto_compact else None
+
+    # -- state plumbing ------------------------------------------------------
+    def _set_base(self, base: ProMIPSIndex) -> None:
+        self._base = base
+        self._base_dev = None                     # device copy built lazily
+        self._base_alive = base.arrays.ids >= 0   # (n_pad,) — padding is dead
+        self._n_base_dead = 0
+        self._row_of = {int(g): r for r, g in enumerate(base.arrays.ids) if g >= 0}
+
+    def _reset_delta(self) -> None:
+        self._delta = DeltaSegment(self._delta_capacity, self.d)
+        self._slot_of: dict[int, int] = {}
+
+    @property
+    def meta(self) -> IndexMeta:
+        return self._base.meta
+
+    @property
+    def n_alive(self) -> int:
+        return (self.meta.n - self._n_base_dead) + self._delta.n_alive
+
+    @property
+    def delta_capacity(self) -> int:
+        return self._delta.capacity
+
+    @property
+    def delta_fraction(self) -> float:
+        """Live delta rows over live rows — what the search path pays extra."""
+        return self._delta.n_alive / max(1, self.n_alive)
+
+    @property
+    def churn_fraction(self) -> float:
+        """Absorbed writes over base size — the compaction trigger metric
+        (counts tombstoned delta slots too: they cost buffer space and the
+        base tombstones cost over-fetch, and only compaction reclaims them)."""
+        return ((self._delta.count + self._n_base_dead)
+                / max(1, self.meta.n + self._delta.count))
+
+    def alive_items(self) -> tuple[np.ndarray, np.ndarray]:
+        """(gids, rows) of every live row — base survivors, then live delta
+        entries in append order. The supported way to enumerate live rows
+        (the exact-search oracle in tests, the example's catalog dump, and
+        compaction's freeze all use it)."""
+        with self._lock:
+            live = np.nonzero(self._base_alive)[0]
+            bg = self._base.arrays.ids[live].astype(np.int64)
+            bx = self._base.arrays.x[live]
+            dg, dx = self._delta.survivors()
+            return np.concatenate([bg, dg]), np.concatenate([bx, dx])
+
+    def _is_alive(self, gid: int) -> bool:
+        slot = self._slot_of.get(gid)
+        if slot is not None and self._delta.alive[slot]:
+            return True
+        row = self._row_of.get(gid)
+        return row is not None and bool(self._base_alive[row])
+
+    def _log(self, op) -> None:
+        if self._oplog is not None:
+            self._oplog.append(op)
+
+    def _dirty(self) -> None:
+        self._epoch += 1
+        self._snap = None
+        if (self.compactor is not None and self._oplog is None
+                and not self._defer_trigger):
+            self.compactor.maybe_trigger(self)
+
+    # -- writes --------------------------------------------------------------
+    @staticmethod
+    def _check_gids(gids: np.ndarray) -> None:
+        if len(np.unique(gids)) != len(gids):
+            raise ValueError("duplicate ids within one call")
+        if len(gids) and (gids.min() < 0 or gids.max() >= 2 ** 31):
+            raise ValueError("ids must fit int32 (device arrays are int32)")
+
+    def insert(self, ids, rows, _wait_ok: bool = True) -> None:
+        """Append new rows. ids must not be alive (use `update` to replace).
+
+        If the delta is full while a background rebuild is in flight, the
+        rebuild is already reclaiming the space — the writer waits for the
+        install (outside the lock) and retries instead of failing.
+        ``_wait_ok=False`` (internal, used under update()'s lock where
+        waiting would deadlock against the install) falls back to raising.
+        """
+        gids = np.atleast_1d(np.asarray(ids, np.int64))
+        rows = np.atleast_2d(np.asarray(rows, np.float32))
+        self._check_gids(gids)
+        if rows.shape != (len(gids), self.d):
+            raise ValueError(f"rows must be ({len(gids)}, {self.d}), "
+                             f"got {rows.shape}")
+        if len(gids) > self._delta.capacity:
+            raise ValueError(f"batch of {len(gids)} rows exceeds delta "
+                             f"capacity {self._delta.capacity}")
+        retried = False
+        while True:
+            with self._lock:
+                for g in gids:
+                    if self._is_alive(int(g)):
+                        raise ValueError(f"id {int(g)} already alive; use update()")
+                full = self._delta.count + len(gids) > self._delta.capacity
+                if not full or self._oplog is None:
+                    if full:
+                        self.compact()
+                    slots = self._delta.append(gids, rows)
+                    for g, s in zip(gids, slots):
+                        self._slot_of[int(g)] = int(s)
+                    self._next_id = max(self._next_id, int(gids.max()) + 1)
+                    self._log(("insert", gids.copy(), rows.copy()))
+                    self._dirty()
+                    return
+            if not _wait_ok or self.compactor is None:
+                raise RuntimeError("delta full while compaction in flight")
+            if self.compactor.in_flight:
+                self.compactor.join()   # install/abandon closes the op log
+            elif retried:
+                # op log open with no rebuild to wait for: wedged (external
+                # Compactor misuse) — raising beats spinning. The extra retry
+                # covers an install landing between the lock and this check.
+                raise RuntimeError("delta full while compaction in flight")
+            retried = True
+
+    def add(self, rows) -> np.ndarray:
+        """Insert rows under freshly-assigned ids; returns them."""
+        rows = np.atleast_2d(np.asarray(rows, np.float32))
+        if (self.compactor is not None and self.compactor.in_flight
+                and self._delta.count + len(rows) > self._delta.capacity):
+            self.compactor.join()  # outside the lock, as in update()
+        with self._lock:
+            gids = np.arange(self._next_id, self._next_id + len(rows), dtype=np.int64)
+            self.insert(gids, rows, _wait_ok=False)
+        return gids
+
+    def delete(self, ids) -> None:
+        """Tombstone rows; physical reclamation happens at compaction.
+        Validates every id (and uniqueness) up front, so a bad call
+        mutates nothing."""
+        gids = np.atleast_1d(np.asarray(ids, np.int64))
+        self._check_gids(gids)
+        with self._lock:
+            for g in gids:
+                if not self._is_alive(int(g)):
+                    raise KeyError(f"id {int(g)} is not alive")
+            for g in gids:
+                g = int(g)
+                slot = self._slot_of.get(g)
+                if slot is not None and self._delta.alive[slot]:
+                    self._delta.alive[slot] = False
+                    del self._slot_of[g]
+                else:
+                    self._base_alive[self._row_of[g]] = False
+                    self._n_base_dead += 1
+            self._log(("delete", gids.copy()))
+            self._dirty()
+
+    def update(self, ids, rows) -> None:
+        """Replace the rows of live ids (tombstone old + append new).
+        Capacity and shape are checked BEFORE the tombstoning, so a doomed
+        insert half cannot leave rows deleted with no replacement appended.
+        (If the batch fits the capacity but not the current free space, the
+        insert half self-compacts — the just-tombstoned old rows are
+        reclaimed and the replacements land in a fresh delta.)"""
+        gids = np.atleast_1d(np.asarray(ids, np.int64))
+        rows = np.atleast_2d(np.asarray(rows, np.float32))
+        self._check_gids(gids)
+        if rows.shape != (len(gids), self.d):
+            raise ValueError(f"rows must be ({len(gids)}, {self.d}), "
+                             f"got {rows.shape}")
+        if len(gids) > self._delta.capacity:
+            raise ValueError(f"update of {len(gids)} rows exceeds delta "
+                             f"capacity {self._delta.capacity}")
+        if (self.compactor is not None and self.compactor.in_flight
+                and self._delta.count + len(gids) > self._delta.capacity):
+            # wait for the in-flight rebuild BEFORE taking the lock (the
+            # install needs it); afterwards the delta has room again
+            self.compactor.join()
+        with self._lock:
+            if (self._oplog is not None
+                    and self._delta.count + len(gids) > self._delta.capacity):
+                raise RuntimeError("delta full while compaction in flight")
+            # defer the auto-compaction trigger: the delete half must not
+            # open the op log mid-update (it would doom the insert half's
+            # capacity re-check and leave the rows tombstoned)
+            self._defer_trigger = True
+            try:
+                self.delete(gids)
+                self.insert(gids, rows, _wait_ok=False)
+            finally:
+                self._defer_trigger = False
+            if self.compactor is not None and self._oplog is None:
+                self.compactor.maybe_trigger(self)
+
+    # -- snapshot + search ---------------------------------------------------
+    def snapshot(self) -> Snapshot:
+        """The current `(base, delta_watermark, tombstone_epoch)` triple as
+        immutable device arrays; cached until the next write."""
+        with self._lock:
+            if self._snap is not None:
+                return self._snap
+            if self._base_dev is None:
+                self._base_dev = jax.tree.map(jnp.asarray, self._base.arrays)
+            d = self._delta
+            # ship/score only a pow2-quantized prefix of the delta buffers:
+            # O(log capacity) distinct compiled shapes between compactions,
+            # and an empty/small delta doesn't pay for the full preallocation
+            cap_q = min(d.capacity, next_pow2(max(d.count, 64)))
+            self._snap = Snapshot(
+                arrays=self._base_dev,
+                meta=self._base.meta,
+                base_alive=jnp.asarray(self._base_alive.copy()),
+                delta_x=jnp.asarray(d.x[:cap_q].copy()),
+                delta_gids=jnp.asarray(d.gids[:cap_q].astype(np.int32)),
+                delta_valid=jnp.asarray(d.alive[:cap_q].copy()),
+                epoch=self._epoch,
+                delta_count=d.count,
+                n_base_dead=self._n_base_dead,
+                clean=(self._n_base_dead == 0 and d.count == 0),
+            )
+            return self._snap
+
+    def search(self, queries, k: int = 10,
+               runtime: Optional[RuntimeConfig] = None):
+        """Segment-merged c-k-AMIP search over the live rows. Returns
+        (ids (B, k) GLOBAL, scores (B, k), StreamStats). A user-supplied
+        RuntimeConfig is taken as-is (only k is stamped in), matching the
+        sharded/serve contract."""
+        cfg = runtime if runtime is not None else RuntimeConfig()
+        cfg = dataclasses.replace(cfg, k=k)
+        return search_segments(self.snapshot(), queries, cfg)
+
+    # -- compaction ----------------------------------------------------------
+    def _freeze_for_compaction(self) -> tuple[np.ndarray, np.ndarray]:
+        """Copy out the surviving rows and open the op log (writes from here
+        to `_install_compacted` are replayed onto the new base)."""
+        with self._lock:
+            if self._oplog is not None:
+                raise RuntimeError("compaction already in flight")
+            gids, rows = self.alive_items()
+            self._oplog = []
+            return gids, rows
+
+    def _install_compacted(self, new_base: ProMIPSIndex) -> None:
+        """Atomically swap in the rebuilt base, reset the delta, and replay
+        the writes that landed while the rebuild ran."""
+        with self._lock:
+            ops, self._oplog = self._oplog, None
+            self._set_base(new_base)
+            self._reset_delta()
+            self._epoch += 1
+            self._snap = None
+            for op in ops:
+                if op[0] == "insert":
+                    self.insert(op[1], op[2])
+                else:
+                    self.delete(op[1])
+
+    def _abandon_compaction(self) -> None:
+        """Close the op log without swapping (failed rebuild). The freeze only
+        copied state and logged ops were ALSO applied live, so discarding the
+        log loses nothing; the next trigger simply retries."""
+        with self._lock:
+            self._oplog = None
+
+    def compact(self) -> None:
+        """Synchronous compaction (the background path is `self.compactor`)."""
+        gids, rows = self._freeze_for_compaction()
+        try:
+            new_base = rebuild_base(gids, rows, self.build_kwargs)
+        except BaseException:
+            self._abandon_compaction()
+            raise
+        self._install_compacted(new_base)
+
+    def join_compaction(self, timeout: Optional[float] = None) -> None:
+        if self.compactor is not None:
+            self.compactor.join(timeout)
+
+
+__all__ = ["MutableProMIPS"]

@@ -1,0 +1,107 @@
+"""Segment primitives for the mutable ProMIPS index (DESIGN.md §8).
+
+A streaming index is (base segment, delta segment, tombstones):
+
+  base   — one immutable `core/index.py` build product. Row-indexed state
+           (the tombstone bitmap) addresses the base's padded sorted layout.
+  delta  — an append-only buffer of raw rows: preallocated host arrays plus
+           a fill watermark (``count``). Delta rows are NOT projected into
+           the iDistance layout; they are scored exactly at search time via
+           the same `kernels/ops.mips_score` verification kernel the batched
+           two-phase runtime uses, so no probability-guarantee bookkeeping
+           is needed for them.
+  tombstones — boolean "alive" bitmaps over both segments. A deleted (or
+           updated-away) row stays physically present until compaction; its
+           score is masked to -inf at rescore time.
+
+`Snapshot` freezes one `(base, delta_watermark, tombstone_epoch)` triple as
+device arrays with STATIC shapes (full delta capacity + a dynamic validity
+mask), so every epoch reuses one compiled search graph and in-flight
+searches are immune to concurrent writers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple
+
+import numpy as np
+
+from ..core.index import IndexArrays, IndexMeta
+from ..core.search_device import SearchStats
+
+
+class StreamStats(NamedTuple):
+    """Per-query stats for a segment-merged search."""
+
+    pages: np.ndarray       # logical pages: base two-phase + delta sweep
+    candidates: np.ndarray  # verified rows: base candidates + live delta rows
+    exhausted: np.ndarray   # base budget exhausted (delta is always exact)
+    base: SearchStats       # untouched stats of the base two-phase search
+
+
+class DeltaSegment:
+    """Append-only row buffer: preallocated arrays + fill watermark.
+
+    Slots [0, count) are filled; `alive` marks which of them still count
+    (an updated/deleted delta row is tombstoned in place, not reclaimed —
+    reclamation is compaction's job).
+    """
+
+    def __init__(self, capacity: int, d: int):
+        self.capacity = int(capacity)
+        self.d = int(d)
+        self.x = np.zeros((self.capacity, d), np.float32)
+        self.gids = np.full(self.capacity, -1, np.int64)
+        self.alive = np.zeros(self.capacity, bool)
+        self.count = 0  # fill watermark
+
+    @property
+    def full(self) -> bool:
+        return self.count >= self.capacity
+
+    @property
+    def n_alive(self) -> int:
+        return int(self.alive[: self.count].sum())
+
+    def append(self, gids: np.ndarray, rows: np.ndarray) -> np.ndarray:
+        """Bulk append; returns the slots written. Caller checks capacity."""
+        n = len(gids)
+        if self.count + n > self.capacity:
+            raise ValueError(
+                f"delta segment full: {self.count}+{n} > {self.capacity} "
+                "(compact first or grow delta_capacity)")
+        slots = np.arange(self.count, self.count + n)
+        self.x[slots] = rows
+        self.gids[slots] = gids
+        self.alive[slots] = True
+        self.count += n
+        return slots
+
+    def survivors(self):
+        """(gids, rows) of live delta entries, in append order."""
+        live = np.nonzero(self.alive[: self.count])[0]
+        return self.gids[live], self.x[live]
+
+
+@dataclass(frozen=True)
+class Snapshot:
+    """One consistent, device-resident view of the mutable index.
+
+    Searches launched against a snapshot keep returning answers for its
+    epoch even while writers append / tombstone / compact — writers never
+    mutate a published snapshot's arrays.
+    """
+
+    arrays: IndexArrays      # base segment (device), ids already GLOBAL
+    meta: IndexMeta
+    base_alive: object       # (n_pad,) bool — False = tombstoned/padding
+    delta_x: object          # (cap, d) f32 — full capacity, static shape
+    delta_gids: object       # (cap,) int32 — -1 for unfilled/invalid
+    delta_valid: object      # (cap,) bool — below watermark AND alive
+    epoch: int               # tombstone/write epoch this snapshot froze
+    delta_count: int         # fill watermark at freeze time
+    n_base_dead: int         # base tombstones at freeze time (over-fetch k)
+    clean: bool = field(default=False)  # no tombstones, empty delta
+
+
+__all__ = ["DeltaSegment", "Snapshot", "StreamStats"]

@@ -1,5 +1,6 @@
 """Serving engine: continuous batching + ProMIPS-vs-exact greedy agreement."""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -48,3 +49,166 @@ def test_promips_greedy_matches_exact(small_model):
 
     agree = sum(a.out_tokens == b.out_tokens for a, b in zip(reqs_e, reqs_p))
     assert agree >= 2, [(a.out_tokens, b.out_tokens) for a, b in zip(reqs_e, reqs_p)]
+
+
+# -- continuous-batching internals (scripted decode: the fake replaces the
+# jit'd decode step so token emission — and therefore slot lifecycle — is
+# fully deterministic; admission prefill still runs the real model) ----------
+
+def _scripted_decode(eng, vocab, eos_for=None):
+    """Every slot decodes token 5 forever, except ``eos_for`` = {slot: call#}
+    which emits the engine's eos at that decode call."""
+    state = {"calls": 0}
+
+    def fake(params, cache, tokens):
+        logits = np.zeros((eng.b, vocab), np.float32)
+        logits[:, 5] = 1.0
+        for slot, at_call in (eos_for or {}).items():
+            if state["calls"] == at_call:
+                logits[slot, :] = 0.0
+                logits[slot, eng.eos_id] = 1.0
+        state["calls"] += 1
+        return jnp.asarray(logits), cache
+
+    eng._decode = fake
+    return state
+
+
+def test_slot_release_on_eos(small_model):
+    cfg, params = small_model
+    eng = DecodeEngine(params, cfg, batch_slots=2, max_len=64)
+    _scripted_decode(eng, cfg.vocab, eos_for={0: 1})  # slot 0 ends 2nd decode
+    rng = np.random.RandomState(0)
+    reqs = [eng.submit(rng.randint(1, cfg.vocab, size=6), max_new_tokens=50)
+            for _ in range(2)]
+
+    eng.step()  # admit both; decode call 0
+    assert eng.active.tolist() == [True, True]
+    assert reqs[0].slot == 0 and reqs[1].slot == 1
+    eng.step()  # decode call 1: slot 0 emits EOS
+    assert eng.active.tolist() == [False, True]
+    assert eng.requests[0] is None, "EOS slot must be released"
+    assert reqs[0].out_tokens[-1] == eng.eos_id
+    assert eng.requests[1] is reqs[1], "other slot keeps running"
+
+
+def test_queued_admission_single_slot_prefill(small_model):
+    cfg, params = small_model
+    eng = DecodeEngine(params, cfg, batch_slots=2, max_len=64)
+    _scripted_decode(eng, cfg.vocab, eos_for={0: 1})
+    rng = np.random.RandomState(1)
+    reqs = [eng.submit(rng.randint(1, cfg.vocab, size=6), max_new_tokens=50)
+            for _ in range(3)]
+
+    eng.step()
+    assert len(eng.queue) == 1 and reqs[2].slot == -1
+    eng.step()  # slot 0 freed by EOS
+    eng.step()  # queued request admitted into the freed slot via 1-row prefill
+    assert reqs[2].slot == 0 and eng.requests[0] is reqs[2]
+    assert not eng.queue
+    assert len(reqs[2].out_tokens) >= 1, "admission prefill emits a token"
+    assert eng.active.tolist() == [True, True]
+
+
+def test_page_accounting_multi_request(small_model):
+    """Exact-mode page counter follows the documented per-step formula over
+    a multi-request run with slot turnover."""
+    cfg, params = small_model
+    b = 2
+    eng = DecodeEngine(params, cfg, batch_slots=b, max_len=64)
+    _scripted_decode(eng, cfg.vocab)  # nobody hits EOS; lengths drive exits
+    rng = np.random.RandomState(2)
+    reqs = [eng.submit(rng.randint(1, cfg.vocab, size=6), max_new_tokens=4)
+            for _ in range(3)]
+
+    per_step = lambda active: (cfg.vocab_padded * cfg.d_model * 4 // 4096
+                               * active // b)
+    expected = 0
+    while eng.queue or eng.active.any():
+        eng._admit()
+        active = int(eng.active.sum())
+        if not eng.step():
+            break
+        expected += per_step(active)
+    assert eng.pages == expected and eng.pages > 0
+    assert all(len(r.out_tokens) == 4 for r in reqs)
+
+
+def test_engine_delete_retires_vocab_ids(small_model):
+    """delete() tombstones vocab ids in the streaming embedding index, so
+    approximate greedy decoding can never emit them again (DESIGN.md §8)."""
+    cfg, params = small_model
+    eng = DecodeEngine(params, cfg, batch_slots=2, max_len=64,
+                       logits_mode="promips",
+                       promips_kwargs=dict(m=8, c=0.95, p=0.95))
+    rng = np.random.RandomState(3)
+    prompt = rng.randint(1, cfg.vocab, size=6)
+    r1 = eng.submit(prompt, max_new_tokens=5)
+    eng.run()
+    banned = {t for t in r1.out_tokens if t != eng.eos_id}
+    assert banned, "need at least one non-eos decoded token to retire"
+
+    eng.delete(sorted(banned))
+    r2 = eng.submit(prompt, max_new_tokens=5)
+    eng.run()
+    assert not (set(r2.out_tokens) & banned), \
+        "retired vocab ids must never be decoded again"
+
+
+def test_engine_delete_with_unpadded_vocab(small_model):
+    """Regression: prefill logits cover vocab_padded rows; the retired-id
+    mask must still apply when vocab is not a multiple of 512."""
+    import dataclasses
+    cfg, _ = small_model
+    cfg = dataclasses.replace(cfg, vocab=600)  # vocab_padded = 1024
+    assert cfg.vocab_padded != cfg.vocab
+    params = T.init_params(jax.random.PRNGKey(2), cfg)
+    eng = DecodeEngine(params, cfg, batch_slots=2, max_len=64,
+                       logits_mode="promips",
+                       promips_kwargs=dict(m=8, c=0.95, p=0.95))
+    rng = np.random.RandomState(5)
+    prompt = rng.randint(1, cfg.vocab, size=6)
+    r1 = eng.submit(prompt, max_new_tokens=4)
+    eng.run()
+    assert all(t < cfg.vocab for t in r1.out_tokens)
+    banned = {t for t in r1.out_tokens if t != eng.eos_id}
+    eng.delete(sorted(banned))
+    r2 = eng.submit(prompt, max_new_tokens=4)
+    eng.run()  # must not crash in _admit's prefill masking
+    assert not (set(r2.out_tokens) & banned)
+    assert all(t < cfg.vocab for t in r2.out_tokens)
+
+    # exact mode must also never emit an id from the vocab_padded tail
+    eng_e = DecodeEngine(params, cfg, batch_slots=2, max_len=64)
+    r3 = eng_e.submit(prompt, max_new_tokens=4)
+    eng_e.run()
+    assert all(t < cfg.vocab for t in r3.out_tokens)
+
+
+def test_engine_update_refreshes_embeddings(small_model):
+    """update() routes refreshed rows into the delta segment: the next decode
+    step scores them exactly, so a boosted copy of the winning embedding wins."""
+    cfg, params = small_model
+    eng = DecodeEngine(params, cfg, batch_slots=2, max_len=64,
+                       logits_mode="promips",
+                       promips_kwargs=dict(m=8, c=0.95, p=0.95))
+    rng = np.random.RandomState(4)
+    prompt = rng.randint(1, cfg.vocab, size=6)
+    r1 = eng.submit(prompt, max_new_tokens=3)
+    eng.run()
+    winners = [t for t in r1.out_tokens[1:] if t != eng.eos_id]
+    assert winners, "need a decoded winner to clone"
+    t_win = winners[0]
+
+    boosted = next(i for i in range(1, cfg.vocab)
+                   if i != t_win and i not in r1.out_tokens)
+    w = np.asarray(eng.params["embed"][t_win], np.float32)
+    eng.update([boosted], 50.0 * w[None, :])
+    assert np.allclose(np.asarray(eng.params["embed"][boosted], np.float32),
+                       50.0 * w, atol=1e-1)
+
+    r2 = eng.submit(prompt, max_new_tokens=3)
+    eng.run()
+    eng.join_compaction()
+    assert boosted in r2.out_tokens, \
+        "refreshed delta row must be searchable from the next decode step"

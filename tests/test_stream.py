@@ -1,0 +1,333 @@
+"""Streaming index subsystem (DESIGN.md §8): delta segments, tombstones,
+snapshot consistency, compaction parity, seeded-build determinism."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines.exact import exact_topk
+from repro.core.index import IndexArrays, build_index
+from repro.core.promips import ProMIPS
+from repro.core.runtime import RuntimeConfig, search, search_segments
+from repro.core.sharded import MutableShardedProMIPS
+from repro.stream import MutableProMIPS
+from repro.stream.compaction import rebuild_base
+
+BUILD = dict(m=8, seed=7)
+K = 10
+
+
+def _corpus(n=1200, d=24, seed=0):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n, d).astype(np.float32) * (1 + rng.rand(n, 1).astype(np.float32))
+    q = rng.randn(6, d).astype(np.float32)
+    return x, q
+
+
+def _alive_state(st: MutableProMIPS):
+    """(gids, rows) reconstructed from the SNAPSHOT arrays — an oracle
+    independent of `MutableProMIPS.alive_items()` (host bookkeeping): it
+    reads what the device search actually sees. A dedicated test asserts
+    the two agree."""
+    snap = st.snapshot()
+    ba = np.asarray(snap.base_alive)
+    bi = np.asarray(snap.arrays.ids)
+    bx = np.asarray(snap.arrays.x)
+    dv = np.asarray(snap.delta_valid)
+    return (np.concatenate([bi[ba], np.asarray(snap.delta_gids)[dv]]),
+            np.concatenate([bx[ba], np.asarray(snap.delta_x)[dv]]))
+
+
+def _exact_ref(st, q, k=K):
+    gids, rows = _alive_state(st)
+    pos, scores = exact_topk(rows, q, k)
+    return gids[pos], scores
+
+
+def test_clean_stream_equals_static_index():
+    """A write-free stream is bit-identical to the plain runtime search."""
+    x, q = _corpus()
+    st = MutableProMIPS(x, **BUILD)
+    ids, scores, stats = st.search(q, k=K)
+
+    ref = build_index(x, **BUILD)
+    arrays = jax.tree.map(jnp.asarray, ref.arrays)
+    rid, rsc, _ = search(arrays, ref.meta, q, RuntimeConfig(k=K))
+    assert np.array_equal(np.asarray(ids), np.asarray(rid))
+    assert np.array_equal(np.asarray(scores), np.asarray(rsc))
+
+
+def test_delta_rows_scored_exactly():
+    """Inserted rows merge into the top-k with EXACT inner products."""
+    x, q = _corpus()
+    st = MutableProMIPS(x, **BUILD)
+    rng = np.random.RandomState(1)
+    new = rng.randn(40, x.shape[1]).astype(np.float32) * 3  # big norms: must win
+    gids = np.arange(10_000, 10_040)
+    st.insert(gids, new)
+
+    ids, scores, _ = st.search(q, k=K)
+    ids, scores = np.asarray(ids), np.asarray(scores)
+    for b in range(len(q)):
+        for j in range(K):
+            g = ids[b, j]
+            if g >= 10_000:
+                want = float(new[g - 10_000] @ q[b])
+                assert scores[b, j] == pytest.approx(want, rel=1e-5)
+    assert (ids >= 10_000).any(), "high-norm delta rows should reach the top-k"
+
+
+def test_tombstones_mask_deleted_rows():
+    x, q = _corpus()
+    st = MutableProMIPS(x, **BUILD)
+    first, _, _ = st.search(q, k=K)
+    victims = np.unique(np.asarray(first)[:, :3].ravel())
+    st.delete(victims)
+
+    ids, scores, _ = st.search(q, k=K)
+    assert not np.isin(np.asarray(ids), victims).any()
+    eids, escores = _exact_ref(st, q)
+    rec = np.mean([len(set(np.asarray(ids)[b]) & set(eids[b])) / K
+                   for b in range(len(q))])
+    assert rec == 1.0
+    np.testing.assert_allclose(np.sort(np.asarray(scores), axis=1),
+                               np.sort(escores, axis=1), rtol=1e-5)
+
+
+def test_update_moves_row_to_delta():
+    x, q = _corpus()
+    st = MutableProMIPS(x, **BUILD)
+    st.update([0, 1], 5.0 * np.ones((2, x.shape[1]), np.float32))
+    ids, scores, _ = st.search(q, k=K)
+    ids, scores = np.asarray(ids), np.asarray(scores)
+    for b in range(len(q)):
+        for j in range(K):
+            if ids[b, j] in (0, 1):
+                assert scores[b, j] == pytest.approx(float(5.0 * q[b].sum()), rel=1e-4)
+    assert st.n_alive == x.shape[0]
+
+
+def test_alive_items_matches_snapshot_view():
+    """Host bookkeeping (alive_items) and the published snapshot arrays
+    agree row-for-row after arbitrary churn."""
+    x, _ = _corpus(n=300, d=16, seed=20)
+    st = MutableProMIPS(x, **BUILD)
+    rng = np.random.RandomState(21)
+    _random_ops(st, rng, rounds=8, id_base=40_000)
+    ag, ar = st.alive_items()
+    sg, sr = _alive_state(st)
+    assert np.array_equal(ag, sg)
+    assert np.array_equal(ar, sr)
+
+
+def test_snapshot_isolation_under_writes():
+    """An in-flight search (old snapshot) is immune to concurrent writes."""
+    x, q = _corpus()
+    st = MutableProMIPS(x, **BUILD)
+    snap0 = st.snapshot()
+    top0, _, _ = search_segments(snap0, q, RuntimeConfig(k=K))
+    victim = int(np.asarray(top0)[0, 0])
+
+    st.delete([victim])
+    again, _, _ = search_segments(snap0, q, RuntimeConfig(k=K))
+    assert np.array_equal(np.asarray(again), np.asarray(top0)), \
+        "old snapshot must keep answering for its epoch"
+    fresh, _, _ = st.search(q, k=K)
+    assert victim not in set(np.asarray(fresh)[0])
+    assert st.snapshot().epoch > snap0.epoch
+
+
+def _random_ops(st, rng, rounds, id_base):
+    """Random interleaving of insert/delete/update against live state."""
+    alive = set(np.asarray(st._base.arrays.ids))
+    alive.discard(-1)
+    nxt = id_base
+    for _ in range(rounds):
+        op = rng.choice(["insert", "delete", "update"])
+        if op == "insert":
+            cnt = rng.randint(1, 12)
+            gids = np.arange(nxt, nxt + cnt)
+            nxt += cnt
+            st.insert(gids, rng.randn(cnt, st.d).astype(np.float32))
+            alive.update(gids.tolist())
+        elif op == "delete" and alive:
+            victims = rng.choice(sorted(alive), size=min(8, len(alive)),
+                                 replace=False)
+            st.delete(victims)
+            alive.difference_update(victims.tolist())
+        elif alive:
+            targets = rng.choice(sorted(alive), size=min(4, len(alive)),
+                                 replace=False)
+            st.update(targets, rng.randn(len(targets), st.d).astype(np.float32))
+    return alive
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_parity_after_churn_and_compaction(seed):
+    """Acceptance: any interleaving of inserts/deletes/updates followed by
+    compaction returns IDENTICAL (ids, scores) to a fresh build over the
+    surviving rows; pre-compaction recall over the same state is exact-top-k
+    against the alive oracle (delta scored exactly)."""
+    x, q = _corpus(n=700, d=16, seed=seed)
+    st = MutableProMIPS(x, **BUILD)
+    rng = np.random.RandomState(100 + seed)
+    _random_ops(st, rng, rounds=12, id_base=50_000)
+
+    # pre-compaction: merged results recall the exact top-k over alive rows
+    ids_pre, scores_pre, _ = st.search(q, k=K)
+    eids, escores = _exact_ref(st, q)
+    rec = np.mean([len(set(np.asarray(ids_pre)[b]) & set(eids[b])) / K
+                   for b in range(len(q))])
+    assert rec == 1.0
+    gids, rows = _alive_state(st)
+
+    # post-compaction: bit-identical to the cold build over the survivors
+    st.compact()
+    assert st.churn_fraction == 0.0 and st.n_alive == len(gids)
+    ids_post, scores_post, _ = st.search(q, k=K)
+    fresh = rebuild_base(gids, rows, dict(BUILD))
+    fid, fsc, _ = search(jax.tree.map(jnp.asarray, fresh.arrays), fresh.meta,
+                         q, RuntimeConfig(k=K))
+    assert np.array_equal(np.asarray(ids_post), np.asarray(fid))
+    assert np.array_equal(np.asarray(scores_post), np.asarray(fsc))
+
+
+def test_background_compaction_absorbs_concurrent_writes():
+    """Writes landing while the rebuild runs are replayed onto the new base."""
+    x, q = _corpus(n=600, d=16, seed=3)
+    st = MutableProMIPS(x, auto_compact=True,
+                        **BUILD)
+    rng = np.random.RandomState(9)
+    alive = _random_ops(st, rng, rounds=30, id_base=80_000)
+    # keep writing regardless of whether the trigger already fired
+    extra = np.arange(90_000, 90_020)
+    st.insert(extra, rng.randn(20, st.d).astype(np.float32))
+    alive.update(extra.tolist())
+    st.join_compaction(timeout=120)
+
+    gids, _ = _alive_state(st)
+    assert set(gids.tolist()) == alive
+    ids, _, _ = st.search(q, k=K)
+    eids, _ = _exact_ref(st, q)
+    rec = np.mean([len(set(np.asarray(ids)[b]) & set(eids[b])) / K
+                   for b in range(len(q))])
+    assert rec == 1.0
+
+
+def test_delta_overflow_triggers_synchronous_compact():
+    x, q = _corpus(n=400, d=16, seed=4)
+    st = MutableProMIPS(x, delta_capacity=32, **BUILD)
+    rng = np.random.RandomState(5)
+    for i in range(4):  # 4 x 20 rows > capacity 32 -> must self-compact
+        st.insert(np.arange(70_000 + i * 20, 70_000 + (i + 1) * 20),
+                  rng.randn(20, st.d).astype(np.float32))
+    assert st.n_alive == 400 + 80
+    ids, _, _ = st.search(q, k=K)
+    eids, _ = _exact_ref(st, q)
+    assert len(set(np.asarray(ids)[0]) & set(eids[0])) == K
+
+
+def test_write_validation():
+    x, _ = _corpus(n=200, d=16, seed=6)
+    st = MutableProMIPS(x, delta_capacity=64, **BUILD)
+    with pytest.raises(ValueError):
+        st.insert([0], np.zeros((1, 16), np.float32))  # id 0 already alive
+    with pytest.raises(KeyError):
+        st.delete([999_999])
+    st.delete([3])
+    with pytest.raises(KeyError):
+        st.delete([3])  # double delete
+    gids = st.add(np.ones((2, 16), np.float32))
+    assert gids.tolist() == [200, 201]
+    assert st.n_alive == 201
+
+    with pytest.raises(ValueError):
+        st.insert([300, 300], np.zeros((2, 16), np.float32))  # dup in call
+    with pytest.raises(ValueError):
+        st.delete([200, 200])  # dup in call — must mutate nothing
+    assert st.n_alive == 201
+    with pytest.raises(ValueError):
+        st.insert([2 ** 31], np.zeros((1, 16), np.float32))  # int32 overflow
+    with pytest.raises(ValueError):  # batch larger than the delta itself
+        st.update(np.arange(10, 80),
+                  np.zeros((70, 16), np.float32))
+    assert st._is_alive(10), "oversized update must not tombstone anything"
+    # update bigger than the FREE delta space but within capacity: the insert
+    # half self-compacts and the replacements land — nothing is lost
+    st.insert(np.arange(300, 350), np.ones((50, 16), np.float32))
+    st.update(np.arange(300, 340), 2 * np.ones((40, 16), np.float32))
+    assert st.n_alive == 251
+
+
+def test_sharded_mutable_churn():
+    """Per-shard deltas: writes routed by contiguous ID range keep the pod
+    path's global top-k correct under churn."""
+    x, q = _corpus(n=800, d=16, seed=8)
+    sh = MutableShardedProMIPS(x, 2, **BUILD)
+    assert [s.meta.n for s in sh.shards] == [400, 400]
+    rng = np.random.RandomState(11)
+
+    sh.delete(np.arange(0, 30))            # shard 0 range
+    sh.delete(np.arange(500, 520))         # shard 1 range
+    new = rng.randn(40, 16).astype(np.float32) * 2.5
+    sh.insert(np.arange(2_000, 2_040), new)  # past the corpus: last shard
+    assert sh.shards[1]._delta.count == 40 and sh.shards[0]._delta.count == 0
+    sh.update(np.arange(100, 104), rng.randn(4, 16).astype(np.float32))
+    assert sh.n_alive == 800 - 50 + 40
+
+    def oracle():
+        gid_all, row_all = [], []
+        for s in sh.shards:
+            g, r = _alive_state(s)
+            gid_all.append(g)
+            row_all.append(r)
+        g, r = np.concatenate(gid_all), np.concatenate(row_all)
+        pos, sc = exact_topk(r, q, K)
+        return g[pos], sc
+
+    ids, scores, pages = sh.search(q, k=K)
+    eids, escores = oracle()
+    rec = np.mean([len(set(ids[b]) & set(eids[b])) / K for b in range(len(q))])
+    assert rec == 1.0 and pages > 0
+
+    sh.compact()
+    ids2, scores2, _ = sh.search(q, k=K)
+    eids2, escores2 = oracle()
+    rec2 = np.mean([len(set(ids2[b]) & set(eids2[b])) / K for b in range(len(q))])
+    assert rec2 == 1.0
+    np.testing.assert_allclose(np.sort(scores2, 1), np.sort(escores2, 1), rtol=1e-5)
+
+
+# -- seeded-build determinism (the contract compaction rebuilds rely on) -----
+
+def test_build_determinism_same_seed_bit_identical():
+    x, _ = _corpus(n=900, d=24, seed=12)
+    a = build_index(x, m=8, seed=13, norm_strata=2)
+    b = build_index(x, m=8, seed=13, norm_strata=2)
+    for field in IndexArrays._fields:
+        assert np.array_equal(np.asarray(getattr(a.arrays, field)),
+                              np.asarray(getattr(b.arrays, field))), field
+    assert a.meta == b.meta
+
+    pm1 = ProMIPS.build(x, m=8, seed=13)
+    pm2 = ProMIPS.build(x, m=8, seed=13)
+    assert np.array_equal(pm1.index.arrays.p, pm2.index.arrays.p)
+
+    c = build_index(x, m=8, seed=14)
+    assert not np.array_equal(a.arrays.p, c.arrays.p), \
+        "different seed should draw a different projection"
+
+
+def test_rebuild_base_order_invariant():
+    """rebuild_base canonicalizes row order, so any presentation order of the
+    same surviving set compacts to a bit-identical base."""
+    x, _ = _corpus(n=500, d=16, seed=14)
+    gids = np.arange(500)
+    perm = np.random.RandomState(15).permutation(500)
+    a = rebuild_base(gids, x, dict(BUILD))
+    b = rebuild_base(gids[perm], x[perm], dict(BUILD))
+    for field in IndexArrays._fields:
+        assert np.array_equal(np.asarray(getattr(a.arrays, field)),
+                              np.asarray(getattr(b.arrays, field))), field
