@@ -1,4 +1,9 @@
-"""Shared benchmark plumbing: datasets, method registry, measurement."""
+"""Shared benchmark plumbing: datasets, registry-driven builds, measurement.
+
+All method construction goes through the unified `repro.api` facade — a
+benchmark names a registry backend plus options, never a concrete class, so
+adding a method to the sweep is a registry entry (DESIGN.md §9).
+"""
 from __future__ import annotations
 
 import os
@@ -11,8 +16,8 @@ SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
-from repro.baselines import ExactMIPS, H2ALSH, PQBased, RangeLSH  # noqa: E402
-from repro.core import ProMIPS, overall_ratio, recall_at_k  # noqa: E402
+from repro import api  # noqa: E402
+from repro.core import overall_ratio, recall_at_k  # noqa: E402
 from repro.data.synthetic import DATASETS, paper_dataset, paper_queries  # noqa: E402
 
 # CPU-budget sizes for the harness (full proxy sizes live in data/synthetic.py;
@@ -26,6 +31,20 @@ BENCH_SETS = {
 N_QUERIES = 20
 SEEK_US = 50.0  # modeled 4 KB random-read latency for 'total time' (Fig 9)
 
+# The accuracy-figure sweep: label -> (backend, build opts). "promips+" is
+# the beyond-paper progressive/norm-adaptive configuration of the same
+# backend; everything is a registry lookup, no per-method code paths. The
+# ProMIPS entries select search_path="host" — the paper-faithful sequential
+# search whose resident-4KB-page accounting IS the figures' metric
+# (device-runtime latency has its own bench: run.py --quick / --api).
+METHOD_SPECS = {
+    "promips": ("promips", dict(search_path="host")),
+    "promips+": ("promips", dict(mode="progressive", search_path="host")),
+    "h2alsh": ("h2alsh", {}),
+    "rangelsh": ("rangelsh", {}),
+    "pq": ("pq", dict(n_cells=32)),
+}
+
 _cache = {}
 
 
@@ -38,46 +57,37 @@ def load(name):
     return _cache[name]
 
 
-def build_promips(name, c=0.9, p=0.5, progressive=True, **kw):
+def build_method(name, label, c=0.9, p0=0.5, **extra):
+    """Build one sweep method on one dataset through the facade."""
+    backend, opts = METHOD_SPECS[label]
+    return build_backend(name, backend, c=c, p0=p0, **dict(opts, **extra))
+
+
+def build_backend(name, backend, c=0.9, p0=0.5, k=10, **opts):
+    """`api.build` with the dataset's page size / paper m wired in."""
     x, _ = load(name)
     spec = BENCH_SETS[name]
-    t0 = time.time()
-    pm = ProMIPS.build(x, m=spec["m"], c=c, p=p, page_bytes=spec["page_bytes"],
-                       norm_strata=4 if progressive else 1, **kw)
-    pm.build_seconds = time.time() - t0
-    return pm
+    if backend == "promips":
+        opts.setdefault("m", spec["m"])
+    return api.build(x, backend=backend,
+                     guarantee=api.GuaranteeConfig(c=c, p0=p0, k=k),
+                     page_bytes=spec["page_bytes"], seed=0, **opts)
 
 
-def build_baseline(name, cls, **kw):
-    x, _ = load(name)
-    spec = BENCH_SETS[name]
-    m = cls(page_bytes=spec["page_bytes"], **kw)
-    m.build(x)
-    return m
-
-
-def promips_searcher(pm, progressive, k):
-    if progressive:
-        return lambda q: pm.search_host_progressive(q, k=k)
-    return lambda q: pm.search_host(q, k=k)
-
-
-def evaluate(search_fn, name, k):
-    """Run all queries; returns metrics dict (ratio, recall, pages, cpu_us)."""
+def evaluate(searcher, name, k):
+    """Per-query facade search; returns metrics dict (ratio, recall, pages,
+    cpu_us). Uniform across every backend: one `SearchResult` contract."""
     x, queries = load(name)
     from repro.baselines.exact import exact_topk
     eids, escores = exact_topk(x, queries, k)
+    searcher.search(queries[0], k=k)  # warm-up: jit compile / lazy host state
     ratios, recalls, pages, times = [], [], [], []
     for i in range(len(queries)):
-        t0 = time.perf_counter()
-        out = search_fn(queries[i])
-        dt = time.perf_counter() - t0
-        ids, scores, st = out
-        pg = st.pages if hasattr(st, "pages") else st["pages"]
-        ratios.append(overall_ratio(np.asarray(scores), escores[i]))
-        recalls.append(recall_at_k(np.asarray(ids), eids[i]))
-        pages.append(pg)
-        times.append(dt * 1e6)
+        res = searcher.search(queries[i], k=k)
+        ratios.append(overall_ratio(res.scores[0], escores[i]))
+        recalls.append(recall_at_k(res.ids[0], eids[i]))
+        pages.append(res.pages)
+        times.append(res.wall_time_s * 1e6)
     return dict(ratio=float(np.mean(ratios)), recall=float(np.mean(recalls)),
                 pages=float(np.mean(pages)), cpu_us=float(np.mean(times)),
                 total_us=float(np.mean(times) + np.mean(pages) * SEEK_US),

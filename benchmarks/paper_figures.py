@@ -1,28 +1,15 @@
 """One benchmark per paper table/figure (§VIII). Each function returns CSV
-rows (name, us_per_call, derived). Methods: ProMIPS (paper-faithful),
-ProMIPS+ (beyond-paper progressive/norm-adaptive), H2-ALSH, Range-LSH,
-PQ-based, exact scan."""
+rows (name, us_per_call, derived). Every method is built and searched
+through the unified `repro.api` facade (`common.METHOD_SPECS` names the
+registry backends) — no per-backend build/search glue lives here."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from .common import (BENCH_SETS, SEEK_US, build_baseline, build_promips,
-                     evaluate, load, promips_searcher)
-from repro.baselines import ExactMIPS, H2ALSH, PQBased, RangeLSH
-
-
-def _methods(name):
-    """(label, build_fn) — built lazily per dataset."""
-    return [
-        ("promips", lambda: ("pm", build_promips(name, progressive=False))),
-        ("promips+", lambda: ("pm+", build_promips(name, progressive=True))),
-        ("h2-alsh", lambda: ("bl", build_baseline(name, H2ALSH))),
-        ("range-lsh", lambda: ("bl", build_baseline(name, RangeLSH))),
-        ("pq-based", lambda: ("bl", build_baseline(name, PQBased, n_cells=32))),
-    ]
-
+from .common import (BENCH_SETS, METHOD_SPECS, build_backend, build_method,
+                     evaluate, load)
 
 _built = {}
 
@@ -30,30 +17,18 @@ _built = {}
 def _get(name, label):
     key = (name, label)
     if key not in _built:
-        for lbl, b in _methods(name):
-            if lbl == label:
-                _built[key] = b()
-                break
+        _built[key] = build_method(name, label)
     return _built[key]
-
-
-def _search_fn(name, label, k):
-    kind, obj = _get(name, label)
-    if kind == "pm":
-        return promips_searcher(obj, progressive=False, k=k)
-    if kind == "pm+":
-        return lambda q: obj.search_host_progressive(q, k=k)
-    return lambda q: obj.search(q, k=k)
 
 
 def fig4a_index_size():
     """Fig. 4(a): index size per method per dataset (MB)."""
     rows = []
     for name in BENCH_SETS:
-        for label in ("promips", "promips+", "h2-alsh", "range-lsh", "pq-based"):
-            kind, obj = _get(name, label)
-            size = obj.meta.index_bytes if kind.startswith("pm") else obj.index_bytes
-            rows.append((f"fig4a/{name}/{label}", 0.0, f"index_mb={size/1e6:.2f}"))
+        for label in METHOD_SPECS:
+            s = _get(name, label)
+            rows.append((f"fig4a/{name}/{label}", 0.0,
+                         f"index_mb={s.index_bytes/1e6:.2f}"))
     return rows
 
 
@@ -61,9 +36,8 @@ def fig4b_preprocessing_time():
     """Fig. 4(b): pre-processing (build) time per method (s)."""
     rows = []
     for name in BENCH_SETS:
-        for label in ("promips", "promips+", "h2-alsh", "range-lsh", "pq-based"):
-            kind, obj = _get(name, label)
-            secs = obj.build_seconds
+        for label in METHOD_SPECS:
+            secs = _get(name, label).build_seconds
             rows.append((f"fig4b/{name}/{label}", secs * 1e6,
                          f"build_s={secs:.2f}"))
     return rows
@@ -72,9 +46,9 @@ def fig4b_preprocessing_time():
 def _accuracy_fig(metric):
     rows = []
     for name in BENCH_SETS:
-        for label in ("promips", "promips+", "h2-alsh", "range-lsh", "pq-based"):
+        for label in METHOD_SPECS:
             for k in (10, 50, 100):
-                m = evaluate(_search_fn(name, label, k), name, k)
+                m = evaluate(_get(name, label), name, k)
                 rows.append((f"{metric}/{name}/{label}/k{k}", m["cpu_us"],
                              f"ratio={m['ratio']:.4f};recall={m['recall']:.3f};"
                              f"pages={m['pages']:.0f};total_us={m['total_us']:.0f}"))
@@ -90,10 +64,9 @@ def fig10_impact_of_c():
     """Fig. 10: ProMIPS accuracy/efficiency vs approximation ratio c."""
     rows = []
     for name in ("netflix", "sift"):
-        x, queries = load(name)
         for c in (0.7, 0.8, 0.9):
-            pm = build_promips(name, c=c, progressive=False)
-            m = evaluate(lambda q: pm.search_host(q, k=10), name, 10)
+            s = build_backend(name, "promips", c=c, search_path="host")
+            m = evaluate(s, name, 10)
             rows.append((f"fig10/{name}/c{c}", m["cpu_us"],
                          f"ratio={m['ratio']:.4f};pages={m['pages']:.0f};"
                          f"guarantee_frac={m['guarantee_frac']:.2f}"))
@@ -101,13 +74,13 @@ def fig10_impact_of_c():
 
 
 def fig11_impact_of_p():
-    """Fig. 11: ProMIPS accuracy/efficiency vs guarantee probability p."""
+    """Fig. 11: ProMIPS accuracy/efficiency vs guarantee probability p0."""
     rows = []
     for name in ("netflix", "sift"):
-        for p in (0.3, 0.5, 0.7, 0.9):
-            pm = build_promips(name, p=p, progressive=False)
-            m = evaluate(lambda q: pm.search_host(q, k=10), name, 10)
-            rows.append((f"fig11/{name}/p{p}", m["cpu_us"],
+        for p0 in (0.3, 0.5, 0.7, 0.9):
+            s = build_backend(name, "promips", p0=p0, search_path="host")
+            m = evaluate(s, name, 10)
+            rows.append((f"fig11/{name}/p{p0}", m["cpu_us"],
                          f"ratio={m['ratio']:.4f};pages={m['pages']:.0f};"
                          f"guarantee_frac={m['guarantee_frac']:.2f}"))
     return rows
@@ -115,19 +88,20 @@ def fig11_impact_of_p():
 
 def table2_complexity_scaling():
     """Table II: search cost scaling in n (ProMIPS O(d + n log n))."""
+    from repro import api
     from repro.data.synthetic import mf_factors
     rows = []
     prev = None
     for n in (2000, 8000, 32000):
         x = mf_factors(n, 128, 24, decay=0.2, seed=0, norm_tail=0.3)
         q = mf_factors(8, 128, 24, decay=0.2, seed=1)
-        from repro.core import ProMIPS
         t0 = time.time()
-        pm = ProMIPS.build(x, m=8, norm_strata=4)
+        s = api.build(x, backend="promips", m=8, mode="progressive",
+                      norm_strata=4)
         build_s = time.time() - t0
+        s.search(q, k=10)  # compile
         t0 = time.perf_counter()
-        for i in range(8):
-            pm.search_host_progressive(q[i], k=10)
+        s.search(q, k=10)
         us = (time.perf_counter() - t0) / 8 * 1e6
         growth = "" if prev is None else f";time_growth={us/prev:.2f}x_for_4x_n"
         prev = us
@@ -137,23 +111,86 @@ def table2_complexity_scaling():
 
 def ablation_beyond_paper():
     """Beyond-paper ladder: paper-faithful -> +norm-adaptive -> +CS-prune ->
-    +progressive (+norm-strata layout). The §Perf algorithmic story."""
+    +progressive (+norm-strata layout). One backend, four option sets —
+    the §Perf algorithmic story, expressed as facade build options."""
+    variants = [
+        ("paper", {}),
+        ("+norm-adaptive", dict(norm_adaptive=True)),
+        ("+cs-prune", dict(norm_adaptive=True, cs_prune=True)),
+        ("+progressive+strata", dict(mode="progressive", norm_strata=4)),
+    ]
     rows = []
     for name in ("netflix", "sift"):
-        pm1 = build_promips(name, progressive=False)   # paper layout
-        pm4 = build_promips(name, progressive=True)    # stratified layout
-        variants = [
-            ("paper", lambda q: pm1.search_host(q, k=10)),
-            ("+norm-adaptive", lambda q: pm1.search_host(q, k=10, norm_adaptive=True)),
-            ("+cs-prune", lambda q: pm1.search_host(q, k=10, norm_adaptive=True,
-                                                    cs_prune=True)),
-            ("+progressive+strata", lambda q: pm4.search_host_progressive(q, k=10)),
-        ]
-        for label, fn in variants:
-            m = evaluate(fn, name, 10)
+        for label, opts in variants:
+            s = build_backend(name, "promips", search_path="host", **opts)
+            m = evaluate(s, name, 10)
             rows.append((f"ablation/{name}/{label}", m["cpu_us"],
                          f"ratio={m['ratio']:.4f};pages={m['pages']:.0f};"
                          f"guarantee_frac={m['guarantee_frac']:.2f}"))
+    return rows
+
+
+def bench_api(quick: bool = True):
+    """Registry sweep (`benchmarks/run.py --api`): for EVERY registered
+    backend — build time, index bytes on disk (real npz+json footprint after
+    `save`), µs/query on a 64-query batch, and recall@10 vs exact. Writes
+    BENCH_api.json at the repo root."""
+    import json
+    import os
+    import shutil
+    import tempfile
+
+    from repro import api
+    from repro.baselines.exact import exact_topk
+    from repro.core import recall_at_k
+    from repro.data.synthetic import mf_factors
+
+    n, d, n_q = (8000, 64, 64) if quick else (20000, 96, 64)
+    x = mf_factors(n, d, 16, decay=0.5, seed=0, norm_tail=0.3)
+    q = mf_factors(n_q, d, 16, decay=0.5, seed=1)
+    eids, _ = exact_topk(x, q, 10)
+    guarantee = api.GuaranteeConfig(c=0.9, p0=0.6, k=10)
+
+    rec = {"n": n, "d": d, "batch": n_q, "k": 10,
+           "guarantee": guarantee.to_dict(), "backends": {}}
+    rows = []
+    tmp = tempfile.mkdtemp(prefix="bench_api_")
+    try:
+        for backend in api.backends():
+            prune = (dict(norm_adaptive=True, cs_prune=True)
+                     if api.get_backend(backend).capabilities.guaranteed
+                     and backend != "exact" else {})
+            t0 = time.perf_counter()
+            s = api.build(x, backend=backend, guarantee=guarantee, seed=0,
+                          **prune)
+            build_s = time.perf_counter() - t0
+
+            path = os.path.join(tmp, backend)
+            s.save(path)
+            disk = api.saved_bytes(path)
+
+            s.search(q, k=10)  # warm-up / compile
+            reps = 3
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                res = s.search(q, k=10)
+            us = (time.perf_counter() - t0) / (reps * n_q) * 1e6
+            recall = float(np.mean([recall_at_k(res.ids[i], eids[i])
+                                    for i in range(n_q)]))
+            cell = dict(build_s=build_s, disk_bytes=disk, us_per_query=us,
+                        recall_vs_exact=recall,
+                        pages_per_query=res.pages / n_q,
+                        capabilities=vars(s.capabilities).copy())
+            rec["backends"][backend] = cell
+            rows.append((f"api/{backend}", us,
+                         f"recall={recall:.3f};disk_mb={disk/1e6:.2f};"
+                         f"build_s={build_s:.2f}"))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    with open(os.path.join(root, "BENCH_api.json"), "w") as f:
+        json.dump(rec, f, indent=1)
     return rows
 
 
@@ -168,6 +205,9 @@ def bench_search_runtime(quick: bool = False):
     pages_mean well under n_blocks (~398/500 at quick sizes, recall 0.997
     vs exact) — the page-access axis measures real work, not a full sweep.
     Both pages_mean and n_blocks are recorded so the engagement is auditable.
+
+    (This bench deliberately reaches below the facade: it compares the
+    verification backends INSIDE the "promips" registry entry.)
     """
     import json
     import os
@@ -231,62 +271,58 @@ def bench_search_runtime(quick: bool = False):
 def bench_stream(quick: bool = True):
     """Streaming index (ISSUE 2): insert throughput, search latency at
     0%/10%/30% delta fraction, and latency right after compaction. Writes
-    BENCH_stream.json at the repo root."""
+    BENCH_stream.json at the repo root. Built through the facade; the
+    mutation calls are the uniform capability-gated Searcher surface."""
     import json
     import os
 
-    import jax
-    import jax.numpy as jnp
-
+    from repro import api
+    from repro.core.runtime import RuntimeConfig
     from repro.data.synthetic import mf_factors
-    from repro.stream import MutableProMIPS
 
     n, d, n_q = (8000, 64, 64) if quick else (20000, 96, 64)
     x = mf_factors(n, d, 16, decay=0.5, seed=0, norm_tail=0.3)
     q = mf_factors(n_q, d, 16, decay=0.5, seed=1)
-    qj = jnp.asarray(q, jnp.float32)
     rng = np.random.RandomState(2)
 
-    from repro.core.runtime import RuntimeConfig
-
-    st = MutableProMIPS(x, m=8, c=0.9, p=0.6, k_p=8, k_sp=12, norm_strata=8,
-                        seed=0)
+    s = api.build(x, backend="promips-stream",
+                  guarantee=api.GuaranteeConfig(c=0.9, p0=0.6, k=10),
+                  m=8, k_p=8, k_sp=12, norm_strata=8, seed=0)
+    st = s.inner  # delta watermark introspection below is stream-specific
     cfg = RuntimeConfig(norm_adaptive=True, cs_prune=True)  # pruning engaged
     rec = {"n": n, "d": d, "batch": n_q, "k": 10,
            "delta_capacity": st.delta_capacity}
     rows = []
 
     def timed_search():
-        ids, _, s = st.search(qj, k=10, runtime=cfg)
-        jax.block_until_ready(ids)
+        s.search(q, k=10, runtime=cfg)
         reps = 3
         t0 = time.perf_counter()
         for _ in range(reps):
-            ids, _, s = st.search(qj, k=10, runtime=cfg)
-            jax.block_until_ready(ids)
+            res = s.search(q, k=10, runtime=cfg)
         return ((time.perf_counter() - t0) / (reps * n_q) * 1e6,
-                float(np.mean(np.asarray(s.pages))))
+                res.pages / n_q)
 
     # insert throughput: batched appends into the preallocated delta
     bursts, burst = 16, 64
     gid0 = 10 * n
     t0 = time.perf_counter()
     for i in range(bursts):
-        st.insert(np.arange(gid0 + i * burst, gid0 + (i + 1) * burst),
-                  rng.randn(burst, d).astype(np.float32))
+        s.insert(np.arange(gid0 + i * burst, gid0 + (i + 1) * burst),
+                 rng.randn(burst, d).astype(np.float32))
     dt = time.perf_counter() - t0
     rec["insert_rows_per_s"] = bursts * burst / dt
     rows.append(("stream/insert_throughput", dt / (bursts * burst) * 1e6,
                  f"rows_per_s={rec['insert_rows_per_s']:.0f}"))
-    st.delete(np.arange(gid0, gid0 + bursts * burst))  # reset to 0% live
-    st.compact()
+    s.delete(np.arange(gid0, gid0 + bursts * burst))  # reset to 0% live
+    s.compact()
 
     for frac in (0.0, 0.1, 0.3):
         want = int(frac / (1 - frac) * n)  # live delta rows for this fraction
         have = st._delta.n_alive
         if want > have:
-            st.insert(np.arange(20 * n + have, 20 * n + want),
-                      rng.randn(want - have, d).astype(np.float32))
+            s.insert(np.arange(20 * n + have, 20 * n + want),
+                     rng.randn(want - have, d).astype(np.float32))
         us, pages = timed_search()
         assert abs(st.delta_fraction - frac) < 0.02, st.delta_fraction
         rec[f"search_us_delta_{int(frac*100)}pct"] = us
@@ -295,7 +331,7 @@ def bench_stream(quick: bool = True):
                      f"pages={pages:.0f};delta_frac={st.delta_fraction:.2f}"))
 
     t0 = time.perf_counter()
-    st.compact()
+    s.compact()
     rec["compaction_s"] = time.perf_counter() - t0
     us, pages = timed_search()
     rec["search_us_post_compaction"] = us
@@ -315,22 +351,21 @@ def bench_device_throughput():
     from repro.kernels import ops
     rows = []
     name = "netflix"
-    pm = build_promips(name, progressive=True)
+    s = build_backend(name, "promips", mode="progressive", norm_strata=4)
     x, queries = load(name)
-    q = jnp.asarray(queries, jnp.float32)
-    ids, scores, stats = pm.search_progressive(q, k=10)   # compile
+    s.search(queries, k=10)   # compile
     t0 = time.perf_counter()
     for _ in range(3):
-        ids, scores, stats = pm.search_progressive(q, k=10)
-        ids.block_until_ready()
+        res = s.search(queries, k=10)
     us = (time.perf_counter() - t0) / (3 * len(queries)) * 1e6
     rows.append((f"device/{name}/progressive", us,
-                 f"pages={float(np.mean(np.asarray(stats.pages))):.0f}"))
+                 f"pages={res.pages / len(queries):.0f}"))
     # kernel-level verification scan (interpret mode, CPU)
     xr = jnp.asarray(x[:2048], jnp.float32)
     valid = jnp.ones(2048, bool)
     t0 = time.perf_counter()
-    top, idx = ops.mips_topk(xr, q[:4], valid, k=10)
+    top, idx = ops.mips_topk(xr, jnp.asarray(queries[:4], jnp.float32), valid,
+                             k=10)
     top.block_until_ready()
     us_k = (time.perf_counter() - t0) * 1e6 / 4
     rows.append(("device/kernel/mips_topk_interp", us_k, "mode=interpret"))

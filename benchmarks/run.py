@@ -29,6 +29,7 @@ BENCHES = [
     ("search_runtime", F.bench_search_runtime),
     ("device_throughput", F.bench_device_throughput),
     ("stream_churn", lambda: F.bench_stream(quick=False)),
+    ("api_registry", lambda: F.bench_api(quick=False)),
 ]
 
 
@@ -42,12 +43,18 @@ def main() -> None:
     ap.add_argument("--stream", action="store_true",
                     help="streaming-index smoke: insert throughput + search "
                          "latency vs delta fraction (writes BENCH_stream.json)")
+    ap.add_argument("--api", action="store_true",
+                    help="registry sweep: build time, on-disk index bytes, "
+                         "us/query and recall vs exact for every registered "
+                         "backend (writes BENCH_api.json)")
     args = ap.parse_args()
 
     if args.quick:
         benches = [("search_runtime", lambda: F.bench_search_runtime(quick=True))]
     elif args.stream:
         benches = [("stream_churn", lambda: F.bench_stream(quick=True))]
+    elif args.api:
+        benches = [("api_registry", lambda: F.bench_api(quick=True))]
     else:
         benches = BENCHES
     os.makedirs(args.out, exist_ok=True)

@@ -1,17 +1,23 @@
-"""Quickstart: build a ProMIPS index and run probability-guaranteed
-c-k-AMIP queries, paper-faithful and beyond-paper progressive modes.
+"""Quickstart: the unified index API (`repro.api`, DESIGN.md §9).
+
+Declare the paper's guarantee — "c-AMIP results with probability >= p0" —
+once as a `GuaranteeConfig`; every registered backend builds and searches
+behind the same facade, returns the same `SearchResult`, and persists with
+`save`/`load` (bit-identical post-load searches).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import os
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+from repro import api
 from repro.baselines.exact import exact_topk
-from repro.core import ProMIPS, overall_ratio, recall_at_k
+from repro.core import overall_ratio, recall_at_k
 from repro.data.synthetic import paper_dataset, paper_queries
 
 
@@ -21,34 +27,50 @@ def main():
     queries = paper_queries("netflix", 16)
     print(f"corpus {x.shape}, queries {queries.shape}")
 
-    # paper defaults: m=6 on Netflix, c=0.9, p=0.5, kp=5, Nkey=40, ksp=10
-    pm = ProMIPS.build(x, m=6, c=0.9, p=0.5)
-    print(f"index: {pm.meta.n_groups} quick-probe groups, "
-          f"{pm.meta.n_subparts} sub-partitions, {pm.meta.n_blocks} pages, "
-          f"{pm.meta.index_bytes/1e6:.2f} MB")
+    # the declarative contract: c-AMIP with probability >= p0, top-k.
+    # m, radii and Quick-Probe budgets are DERIVED (paper §V-B), not picked:
+    guarantee = api.GuaranteeConfig(c=0.9, p0=0.5, k=10)
+    plan = guarantee.derive(len(x))
+    print(f"derived plan: m={plan.m} x_p={plan.x_p:.3f} "
+          f"probe_cost={plan.probe_cost:.0f} "
+          f"budget={'all blocks' if plan.budget is None else plan.budget}")
 
     eids, escores = exact_topk(x, queries, 10)
-    for label, fn in [
-        ("paper-faithful (Alg.2+3)", lambda q: pm.search_host(q, k=10)),
-        ("progressive (beyond-paper)", lambda q: pm.search_host_progressive(q, k=10)),
-    ]:
-        ratios, recalls, pages = [], [], []
-        for i in range(len(queries)):
-            ids, scores, st = fn(queries[i])
-            ratios.append(overall_ratio(scores, escores[i]))
-            recalls.append(recall_at_k(ids, eids[i]))
-            pages.append(st.pages)
-        print(f"{label:28s} ratio={np.mean(ratios):.4f} "
-              f"P[ratio>=c]={np.mean([r >= 0.9 for r in ratios]):.2f} "
-              f"recall={np.mean(recalls):.3f} pages={np.mean(pages):.0f}"
-              f"/{pm.meta.n_blocks}")
 
-    # batched device-mode (jit) search
-    ids, scores, stats = pm.search_progressive(queries, k=10)
-    ratios = [overall_ratio(np.asarray(scores)[i], escores[i])
-              for i in range(len(queries))]
-    print(f"{'device-mode (jit, batched)':28s} ratio={np.mean(ratios):.4f} "
-          f"pages={np.mean(np.asarray(stats.pages)):.0f}")
+    # one registry loop — every backend behind the same build/search calls
+    sweep = [
+        ("promips", dict(m=6)),
+        ("promips", dict(m=6, mode="progressive")),
+        ("h2alsh", {}),
+        ("rangelsh", {}),
+        ("pq", dict(n_cells=32)),
+    ]
+    for backend, opts in sweep:
+        s = api.build(x, backend=backend, guarantee=guarantee, seed=0, **opts)
+        ratios, recalls = [], []
+        res = s.search(queries)  # one batched call, any backend
+        for i in range(len(queries)):
+            ratios.append(overall_ratio(res.scores[i], escores[i]))
+            recalls.append(recall_at_k(res.ids[i], eids[i]))
+        label = backend + ("+" if opts.get("mode") == "progressive" else "")
+        print(f"{label:12s} guaranteed={s.capabilities.guaranteed!s:5s} "
+              f"ratio={np.mean(ratios):.4f} "
+              f"P[ratio>=c]={np.mean([r >= 0.9 for r in ratios]):.2f} "
+              f"recall={np.mean(recalls):.3f} "
+              f"pages/q={res.pages / len(queries):.0f} "
+              f"index={s.index_bytes/1e6:.2f}MB")
+
+    # persistence: save -> load -> search is bit-identical
+    s = api.build(x, backend="promips", guarantee=guarantee, seed=0, m=6)
+    before = s.search(queries)
+    with tempfile.TemporaryDirectory() as td:
+        path = s.save(os.path.join(td, "netflix_idx"))
+        disk = api.saved_bytes(path)
+        after = api.load(path).search(queries)
+    same = (np.array_equal(before.ids, after.ids)
+            and np.array_equal(before.scores, after.scores))
+    print(f"save/load round trip: {disk/1e6:.2f}MB on disk, "
+          f"bit-identical={same}")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,18 @@
 """Matrix-factorization recommendation retrieval (paper §I use case):
-user vectors query a sharded item-factor corpus; ProMIPS returns
-probability-guaranteed top-10 items. Demonstrates the multi-shard search
-(shard_map) when more than one device is available.
+user vectors query an item-factor corpus; ProMIPS returns probability-
+guaranteed top-10 items. Everything goes through the unified `repro.api`
+facade — the backend is a registry NAME (the range-routed mutable "sharded"
+backend when several devices are available, single-index otherwise); build,
+search and the churn loop's mutations are the same calls either way.
+
+The "sharded" backend here is the facade's host-merge fan-out (per-shard
+searches overlap under JAX async dispatch; k x shards pairs merged on
+host). The mesh/shard_map SPMD search is a lower-level tool —
+`core/sharded.py::sharded_search`, exercised by tests/test_distributed.py.
 
   PYTHONPATH=src python examples/recsys_retrieval.py
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
-      PYTHONPATH=src python examples/recsys_retrieval.py   # sharded path
+      PYTHONPATH=src python examples/recsys_retrieval.py   # sharded backend
 """
 import os
 import sys
@@ -15,9 +22,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
+from repro import api
 from repro.baselines.exact import exact_topk
-from repro.core import ProMIPS, overall_ratio, recall_at_k
+from repro.core import overall_ratio, recall_at_k
 from repro.data.synthetic import mf_factors
+
+GUARANTEE = api.GuaranteeConfig(c=0.9, p0=0.7, k=10)
 
 
 def main():
@@ -27,75 +37,61 @@ def main():
     eids, escores = exact_topk(items, users, 10)
 
     n_dev = len(jax.devices())
-    if n_dev >= 2:
-        from repro.core.sharded import (build_sharded, device_put_sharded_index,
-                                        sharded_search)
-        from repro.launch.mesh import make_mesh_compat
-        mesh = make_mesh_compat((1, n_dev), ("data", "model"))
-        sh = build_sharded(items, n_dev, m=8, c=0.9, p=0.7, norm_strata=4)
-        shd = device_put_sharded_index(sh, mesh)
-        ids, scores, pages = sharded_search(shd, users, 10, mesh,
-                                            budget=sh.meta.n_blocks)
-        label = f"sharded over {n_dev} devices"
-    else:
-        pm = ProMIPS.build(items, m=8, c=0.9, p=0.7, norm_strata=4)
-        ids, scores, stats = pm.search_progressive(users, k=10)
-        pages = np.sum(np.asarray(stats.pages))
-        label = "single device"
+    backend = "sharded" if n_dev >= 2 else "promips"
+    opts = dict(n_shards=n_dev) if backend == "sharded" else {}
+    s = api.build(items, backend=backend, guarantee=GUARANTEE, seed=0,
+                  m=8, mode="progressive", norm_strata=4, **opts)
+    res = s.search(users)
 
-    ids, scores = np.asarray(ids), np.asarray(scores)
-    ratios = [overall_ratio(scores[i], escores[i]) for i in range(n_users)]
-    recalls = [recall_at_k(ids[i], eids[i]) for i in range(n_users)]
-    print(f"recsys retrieval ({label}): {n_items} items, {n_users} users")
+    ratios = [overall_ratio(res.scores[i], escores[i]) for i in range(n_users)]
+    recalls = [recall_at_k(res.ids[i], eids[i]) for i in range(n_users)]
+    print(f"recsys retrieval (backend={backend}, {n_dev} device(s)): "
+          f"{n_items} items, {n_users} users")
     print(f"  ratio={np.mean(ratios):.4f} recall={np.mean(recalls):.3f} "
-          f"total_pages={int(pages)}")
-    print(f"  sample user 0 recommended items: {ids[0][:5].tolist()}")
+          f"total_pages={res.pages}")
+    print(f"  sample user 0 recommended items: {res.ids[0][:5].tolist()}")
 
     churn_loop(items, users)
 
 
 def churn_loop(items, users, rounds: int = 4):
-    """Streaming catalog churn (DESIGN.md §8): every round retires a slice of
-    items, ships a batch of new ones into the delta segment, and refreshes a
-    few embeddings — then searches and reports recall against an exact scan
-    of the CURRENT catalog. Recall stays flat through inserts, deletes and
-    the compaction that folds the churn back into the base."""
-    from repro.stream import MutableProMIPS
-
+    """Streaming catalog churn (DESIGN.md §8) through the facade's uniform
+    mutation surface: every round retires a slice of items, ships a batch of
+    new ones, refreshes a few embeddings — then searches and reports recall
+    against an exact scan of the CURRENT catalog (`alive_items`). Recall
+    stays flat through inserts, deletes and the background compaction."""
     n, d = items.shape
     rng = np.random.RandomState(7)
-    st = MutableProMIPS(items[: n // 2], m=8, c=0.9, p=0.7, norm_strata=4,
-                        seed=0, auto_compact=True)
+    s = api.build(items[: n // 2], backend="promips-stream",
+                  guarantee=GUARANTEE, seed=0, m=8, norm_strata=4,
+                  auto_compact=True)
+    assert s.capabilities.supports_mutation
     alive = set(range(n // 2))
     next_id, k = n // 2, 10
 
-    print(f"churn loop: {len(alive)} items live, "
-          f"compaction threshold {st.compactor.cfg.threshold}")
+    print(f"churn loop: {len(alive)} items live (backend=promips-stream)")
     for r in range(rounds):
         dead = rng.choice(sorted(alive), size=1000, replace=False)
-        st.delete(dead)
+        s.delete(dead)
         alive.difference_update(dead.tolist())
         fresh = items[n // 2 + (r * 2000) % (n // 2):][:2000]
         gids = np.arange(next_id, next_id + len(fresh))
         next_id += len(fresh)
-        st.insert(gids, fresh)
+        s.insert(gids, fresh)
         alive.update(gids.tolist())
         refresh = rng.choice(sorted(alive), size=200, replace=False)
-        st.update(refresh, rng.randn(len(refresh), d).astype(np.float32))
+        s.update(refresh, rng.randn(len(refresh), d).astype(np.float32))
 
-        ids, _, stats = st.search(users, k=k)
+        res = s.search(users, k=k)
         # exact oracle over the live catalog (refreshed rows via the stream)
-        cat_ids, cat_rows = st.alive_items()
+        cat_ids, cat_rows = s.alive_items()
         eids, _ = exact_topk(cat_rows, users, k)
-        rec = np.mean([len(set(np.asarray(ids)[i]) & set(cat_ids[eids[i]])) / k
+        rec = np.mean([len(set(res.ids[i]) & set(cat_ids[eids[i]])) / k
                        for i in range(len(users))])
-        print(f"  round {r}: live={st.n_alive} churn={st.churn_fraction:.2f} "
-              f"delta={st.delta_fraction:.2f} recall={rec:.3f} "
-              f"pages={int(np.sum(np.asarray(stats.pages)))}"
-              + ("  [compacting]" if st.compactor.in_flight else ""))
-    st.join_compaction()
-    print(f"  compactions run: {st.compactor.runs}; "
-          f"post-compaction churn={st.churn_fraction:.2f}")
+        print(f"  round {r}: live={s.n} recall={rec:.3f} "
+              f"pages={res.pages} wall={res.wall_time_s*1e3:.0f}ms")
+    s.flush()
+    print(f"  post-churn live={s.n}")
 
 
 if __name__ == "__main__":

@@ -7,11 +7,14 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests (minus the stream tier, run separately below) =="
-python -m pytest -q --ignore=tests/test_stream.py
+echo "== tier-1 tests (minus the stream/api tiers, run separately below) =="
+python -m pytest -q --ignore=tests/test_stream.py --ignore=tests/test_api.py
 
 echo "== streaming-index tier (insert/delete/compact paths) =="
 python -m pytest -q tests/test_stream.py
+
+echo "== unified-API tier (registry conformance + persistence round trips) =="
+python -m pytest -q tests/test_api.py
 
 echo "== benchmark smoke (host vs scan vs batched runtime) =="
 python -m benchmarks.run --quick --out results/bench
@@ -19,8 +22,14 @@ python -m benchmarks.run --quick --out results/bench
 echo "== stream smoke (insert throughput + latency vs delta fraction) =="
 python -m benchmarks.run --stream --out results/bench
 
+echo "== api smoke (registry sweep: build/disk/us-per-query/recall) =="
+python -m benchmarks.run --api --out results/bench
+
 echo "== BENCH_search.json =="
 cat BENCH_search.json
 
 echo "== BENCH_stream.json =="
 cat BENCH_stream.json
+
+echo "== BENCH_api.json =="
+cat BENCH_api.json

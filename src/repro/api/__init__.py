@@ -1,0 +1,28 @@
+"""One Index API (DESIGN.md §9): a backend-agnostic facade over every
+build-and-search engine in the repo.
+
+>>> from repro import api
+>>> s = api.build(x, backend="promips",
+...               guarantee=api.GuaranteeConfig(c=0.9, p0=0.5, k=10))
+>>> res = s.search(queries)                  # SearchResult(ids, scores, stats)
+>>> s.save("idx_dir"); s2 = api.load("idx_dir")   # bit-identical round trip
+>>> api.backends()
+('exact', 'h2alsh', 'pq', 'promips', 'promips-stream', 'rangelsh', 'sharded')
+
+Backends declare `Capabilities`; `supports_mutation` gates the uniform
+insert/delete/update surface (`promips-stream`, `sharded`).
+"""
+from .base import Searcher, UnsupportedOperation, read_header, saved_bytes
+from .registry import backends, build, get_backend, iter_backends, load, register
+from .types import (Capabilities, GuaranteeConfig, GuaranteePlan,
+                    SearchResult, STAT_KEYS)
+
+# importing the module registers the built-in backends
+from . import adapters as _builtin_adapters  # noqa: E402,F401
+
+__all__ = [
+    "Searcher", "UnsupportedOperation", "read_header", "saved_bytes",
+    "backends", "build", "get_backend", "iter_backends", "load", "register",
+    "Capabilities", "GuaranteeConfig", "GuaranteePlan", "SearchResult",
+    "STAT_KEYS",
+]

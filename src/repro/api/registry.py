@@ -1,0 +1,83 @@
+"""Backend registry: names -> `Searcher` classes, plus the two facade
+entry points `build(x, backend=...)` and `load(path)`.
+
+Registering a backend is the whole integration surface — benchmarks,
+examples, the serve engine and the conformance/persistence test suites all
+iterate `backends()` instead of hard-coding classes, so a new method is a
+registry entry, not a new code path.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterator, Optional, Tuple, Type
+
+import numpy as np
+
+from .base import Searcher, read_header
+from .types import Capabilities, GuaranteeConfig
+
+_REGISTRY: Dict[str, Type[Searcher]] = {}
+
+
+def register(cls: Type[Searcher]) -> Type[Searcher]:
+    """Class decorator: add a `Searcher` subclass under ``cls.name``."""
+    name = getattr(cls, "name", None)
+    if not name or not isinstance(name, str):
+        raise ValueError(f"{cls!r} must define a string `name`")
+    if not isinstance(getattr(cls, "capabilities", None), Capabilities):
+        raise ValueError(f"{cls!r} must define `capabilities`")
+    _REGISTRY[name] = cls
+    return cls
+
+
+def backends() -> Tuple[str, ...]:
+    """Registered backend names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: str) -> Type[Searcher]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown backend {name!r}; registered backends: "
+                         f"{', '.join(backends())}") from None
+
+
+def iter_backends() -> Iterator[Tuple[str, Type[Searcher]]]:
+    for name in backends():
+        yield name, _REGISTRY[name]
+
+
+def build(x: np.ndarray, backend: str = "promips", *,
+          guarantee: Optional[GuaranteeConfig] = None,
+          seed: int = 0, page_bytes: int = 4096, **opts) -> Searcher:
+    """Build an index over ``x`` with the named backend.
+
+    ``guarantee`` is the declarative contract (c, p0, k); backends with
+    ``capabilities.guaranteed`` derive m / radii / budgets from it
+    (`GuaranteeConfig.derive`), the rest use it for tuning only. ``seed``
+    makes the build bit-reproducible; ``opts`` are backend-specific
+    overrides (e.g. ``m=8``, ``mode="progressive"``, ``n_shards=4``).
+    """
+    cls = get_backend(backend)
+    guarantee = GuaranteeConfig() if guarantee is None else guarantee
+    x = np.ascontiguousarray(x, np.float32)
+    if x.ndim != 2:
+        raise ValueError(f"x must be (n, d), got shape {x.shape}")
+    t0 = time.perf_counter()
+    searcher = cls.build(x, guarantee=guarantee, seed=int(seed),
+                         page_bytes=int(page_bytes), **opts)
+    searcher.guarantee = guarantee
+    searcher.seed = int(seed)
+    searcher.build_seconds = time.perf_counter() - t0
+    return searcher
+
+
+def load(path: str) -> Searcher:
+    """Load a saved index, dispatching on the backend recorded in meta.json."""
+    header = read_header(path)
+    return get_backend(header["backend"]).load(path)
+
+
+__all__ = ["register", "backends", "get_backend", "iter_backends", "build",
+           "load"]

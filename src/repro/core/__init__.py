@@ -26,7 +26,32 @@ from .runtime import search as runtime_search
 from .search_device import SearchStats, search_batch, search_batch_progressive
 from .search_host import HostSearcher, HostStats
 
+# -- unified facade re-exports (lazy: repro.api imports this package) --------
+# `repro.api` is the one index API (DESIGN.md §9): build(x, backend=...) over
+# promips / promips-stream / sharded / exact / h2alsh / pq / rangelsh with a
+# guarantee-first GuaranteeConfig(c, p0, k) and save/load persistence. The
+# legacy entry points below (`ProMIPS.build(...).search(...)`, the baseline
+# classes) keep working as thin shims over the same engines.
+_FACADE_EXPORTS = {
+    "build_searcher": "build",
+    "load_searcher": "load",
+    "Searcher": "Searcher",
+    "SearchResult": "SearchResult",
+    "GuaranteeConfig": "GuaranteeConfig",
+    "Capabilities": "Capabilities",
+}
+
+
+def __getattr__(name):
+    if name in _FACADE_EXPORTS:
+        from .. import api
+        return getattr(api, _FACADE_EXPORTS[name])
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
+    "build_searcher", "load_searcher", "Searcher", "SearchResult",
+    "GuaranteeConfig", "Capabilities",
     "ProMIPS", "ProMIPSIndex", "IndexArrays", "IndexMeta", "build_index",
     "chi2_cdf", "chi2_ppf", "chi2_ppf_host",
     "condition_a", "condition_b", "condition_b_threshold", "compensation_radius",

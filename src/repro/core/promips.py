@@ -1,5 +1,17 @@
 """High-level ProMIPS API.
 
+Preferred entry point — the unified facade (`repro.api`, DESIGN.md §9),
+which derives m / radii / budgets from the declarative (c, p0, k) contract
+and gives you save/load plus every other backend behind one interface:
+
+>>> from repro import api
+>>> s = api.build(x, backend="promips",
+...               guarantee=api.GuaranteeConfig(c=0.9, p0=0.5, k=10))
+>>> res = s.search(queries)         # SearchResult(ids, scores, stats)
+>>> s.save("idx"); s2 = api.load("idx")   # bit-identical round trip
+
+Legacy direct handle (kept working, same engine underneath):
+
 >>> idx = ProMIPS.build(x, c=0.9, p=0.5)
 >>> ids, scores, stats = idx.search(queries, k=10)            # device mode
 >>> ids, scores, stats = idx.search_host(q, k=10)             # paper-faithful

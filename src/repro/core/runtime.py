@@ -27,6 +27,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..kernels import ops
 from .index import IndexArrays, IndexMeta
@@ -48,9 +49,20 @@ def _rescore(x, rows, queries):
     return jnp.where(rows >= 0, s, -jnp.inf)
 
 
+VALID_MODES = ("two_phase", "progressive")
+VALID_VERIFICATIONS = ("batched", "scan")
+
+
 @dataclass(frozen=True)
 class RuntimeConfig:
-    """Static (hashable) search-runtime configuration."""
+    """Static (hashable) search-runtime configuration.
+
+    Validated EAGERLY: an unknown ``mode``/``verification`` or a
+    non-positive ``k``/``budget`` raises `ValueError` at construction (and
+    again at `search()` entry, for configs built before this check existed)
+    with the valid choices named — instead of failing deep inside the jit'd
+    device path.
+    """
 
     k: int = 10
     budget: Optional[int] = None       # None => all blocks (no truncation)
@@ -61,6 +73,27 @@ class RuntimeConfig:
     cs_prune: bool = False
     use_pallas: Optional[bool] = None   # None => Pallas on TPU, jnp oracle off-TPU
 
+    def __post_init__(self):
+        self.validate()
+
+    def validate(self) -> None:
+        if self.mode not in VALID_MODES:
+            raise ValueError(f"unknown search mode: {self.mode!r}; valid "
+                             f"choices: {', '.join(VALID_MODES)}")
+        if self.verification not in VALID_VERIFICATIONS:
+            raise ValueError(
+                f"unknown verification backend: {self.verification!r}; valid "
+                f"choices: {', '.join(VALID_VERIFICATIONS)}")
+        if not isinstance(self.k, (int, np.integer)) or self.k < 1:
+            raise ValueError(f"k must be a positive int, got {self.k!r}")
+        for field_name in ("budget", "budget2"):
+            v = getattr(self, field_name)
+            if v is None:
+                continue
+            if not isinstance(v, (int, np.integer)) or v < 1:
+                raise ValueError(f"{field_name} must be None (= all blocks) "
+                                 f"or a positive int, got {v!r}")
+
 
 def search(arrays: IndexArrays, meta: IndexMeta, queries,
            cfg: RuntimeConfig = RuntimeConfig()):
@@ -70,6 +103,7 @@ def search(arrays: IndexArrays, meta: IndexMeta, queries,
     Safe to call inside jit / shard_map (the underlying functions are jit'd
     with static meta/config arguments).
     """
+    cfg.validate()  # fail fast, naming valid choices, before the jit'd path
     budget = int(min(cfg.budget if cfg.budget is not None else meta.n_blocks,
                      meta.n_blocks))
     budget2 = int(min(cfg.budget2 if cfg.budget2 is not None else budget,

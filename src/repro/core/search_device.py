@@ -63,6 +63,11 @@ class SearchStats(NamedTuple):
                                 # empty); lets the runtime rescore candidates
                                 # through one shared kernel call
 
+    def to_dict(self) -> dict:
+        """Normalized accounting (`core/stats.stats_totals` contract)."""
+        from .stats import stats_totals
+        return stats_totals(self.pages, self.candidates, self.exhausted)
+
 
 class TopK(NamedTuple):
     scores: jnp.ndarray  # (k,) descending inner products

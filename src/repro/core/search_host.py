@@ -38,6 +38,13 @@ class HostStats:
         self._resident |= fresh
         self.pages += len(fresh)
 
+    def to_dict(self) -> dict:
+        """Normalized accounting (`core/stats.stats_totals` contract).
+        Host search is single-query, so ``queries`` is 1."""
+        from .stats import stats_totals
+        return stats_totals(self.pages, self.candidates,
+                            self.stopped_by == "exhausted")
+
 
 class HostSearcher:
     """Shared state for the three search algorithms over one index."""

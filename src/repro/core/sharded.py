@@ -30,6 +30,25 @@ class ShardedIndex(NamedTuple):
     meta: IndexMeta          # common (max-padded) meta
 
 
+class ShardedStats(NamedTuple):
+    """Aggregated accounting of one fan-out search (host-merge path).
+
+    Same pages/candidates field contract as `SearchStats` / `HostStats` /
+    `StreamStats` (a query counts exhausted if ANY shard exhausted on it);
+    totals are pre-aggregated, so ``queries`` is carried explicitly.
+    """
+
+    pages: int
+    candidates: int
+    exhausted: int
+    queries: int
+
+    def to_dict(self) -> dict:
+        from .stats import stats_totals
+        return dict(stats_totals(self.pages, self.candidates, self.exhausted),
+                    queries=int(self.queries))
+
+
 def _pad_to(arr: np.ndarray, n: int, fill):
     pad = n - arr.shape[0]
     if pad <= 0:
@@ -202,17 +221,53 @@ class MutableShardedProMIPS:
         k x n_shards host merge (ties break toward the lower shard, matching
         `sharded_search`'s lowest-index-wins top_k). All shard searches are
         dispatched before any result is pulled to host, so the per-shard
-        computations overlap under JAX's async dispatch."""
+        computations overlap under JAX's async dispatch.
+
+        Returns (ids (B, k), scores (B, k), `ShardedStats`)."""
         launched = [shard.search(queries, k=k, runtime=runtime)
                     for shard in self.shards]
         ids_all = [np.asarray(ids) for ids, _, _ in launched]
         scores_all = [np.asarray(scores) for _, scores, _ in launched]
         pages = sum(int(np.sum(np.asarray(st.pages))) for _, _, st in launched)
+        cand = sum(int(np.sum(np.asarray(st.candidates)))
+                   for _, _, st in launched)
+        exhausted = int(np.sum(np.any(
+            np.stack([np.asarray(st.exhausted) for _, _, st in launched]),
+            axis=0)))
         flat_i = np.concatenate(ids_all, axis=1)
         flat_s = np.concatenate(scores_all, axis=1)
         pos = np.argsort(-flat_s, axis=1, kind="stable")[:, :k]
+        stats = ShardedStats(pages=pages, candidates=cand, exhausted=exhausted,
+                             queries=int(flat_i.shape[0]))
         return (np.take_along_axis(flat_i, pos, axis=1),
-                np.take_along_axis(flat_s, pos, axis=1), pages)
+                np.take_along_axis(flat_s, pos, axis=1), stats)
+
+    # -- persistence (repro.api save/load, DESIGN.md §9) ---------------------
+    def state_dict(self) -> tuple[dict, dict]:
+        """(arrays, meta): per-shard `MutableProMIPS.state_dict` outputs with
+        ``shard{i}_`` key prefixes, plus the global-ID routing bounds."""
+        arrays: dict = {"bounds": np.asarray(self.bounds, np.int64)}
+        shard_metas = []
+        for i, shard in enumerate(self.shards):
+            a, m = shard.state_dict()
+            arrays.update({f"shard{i}_{key}": v for key, v in a.items()})
+            shard_metas.append(m)
+        return arrays, dict(n_shards=len(self.shards), shards=shard_metas)
+
+    @classmethod
+    def from_state(cls, arrays: dict, meta: dict) -> "MutableShardedProMIPS":
+        from ..stream.mutable import MutableProMIPS
+
+        obj = cls.__new__(cls)
+        obj.bounds = np.asarray(arrays["bounds"], np.int64)
+        obj.shards = []
+        for i in range(int(meta["n_shards"])):
+            prefix = f"shard{i}_"
+            shard_arrays = {key[len(prefix):]: v for key, v in arrays.items()
+                            if key.startswith(prefix)}
+            obj.shards.append(
+                MutableProMIPS.from_state(shard_arrays, meta["shards"][i]))
+        return obj
 
 
 def device_put_sharded_index(sharded: ShardedIndex, mesh: Mesh, axis: str = "model"):

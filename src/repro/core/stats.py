@@ -1,0 +1,26 @@
+"""The one normalized search-accounting contract (DESIGN.md §9).
+
+Every stats type in the repo — `SearchStats` (device), `HostStats` (host),
+`StreamStats` (segments), `ShardedStats` (fan-out) — implements `to_dict()`
+by calling :func:`stats_totals`, so the keys `repro.api.SearchResult.stats`
+carries are defined in exactly one place (`repro/api/types.STAT_KEYS` names
+them plus the facade-stamped ``wall_time_s``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def stats_totals(pages, candidates, exhausted) -> dict:
+    """Batch totals as python ints. Accepts per-query arrays (device paths)
+    or scalars (single-query host path — ``queries`` is then 1)."""
+    pages = np.asarray(pages)
+    return {
+        "pages": int(pages.sum()),
+        "candidates": int(np.asarray(candidates).sum()),
+        "exhausted": int(np.asarray(exhausted).sum()),
+        "queries": int(pages.size),
+    }
+
+
+__all__ = ["stats_totals"]

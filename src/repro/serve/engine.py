@@ -12,7 +12,11 @@ Continuous batching: fixed B slots; finished sequences free their slot and
 a queued request is admitted with a single-request prefill scattered into
 the batch cache at the slot index.
 
-The embedding index is a streaming `MutableProMIPS` (DESIGN.md §8):
+The embedding index is any MUTABLE `repro.api.Searcher` (DESIGN.md §9) —
+the engine is no longer hard-wired to one stream type. By default it builds
+the `promips-stream` backend over the embedding rows; pass ``index=`` to
+inject any registered backend whose `capabilities.supports_mutation` is set
+(e.g. ``backend="sharded"`` for a range-routed multi-shard embedding).
 `update(ids, rows)` / `delete(ids)` track output-embedding weight refreshes
 and vocabulary retirements mid-traffic — updated rows land in the delta
 segment (scored exactly), stale rows are tombstoned, and background
@@ -27,9 +31,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import api
 from ..core.runtime import RuntimeConfig
 from ..models import transformer as model_lib
-from ..stream.mutable import MutableProMIPS
 
 
 @dataclasses.dataclass
@@ -44,7 +48,24 @@ class DecodeEngine:
     def __init__(self, params, cfg, *, batch_slots: int = 4, max_len: int = 512,
                  logits_mode: str = "exact", promips_kwargs: Optional[dict] = None,
                  promips_budget: Optional[int] = None, eos_id: int = 0,
-                 search_runtime: Optional[RuntimeConfig] = None):
+                 search_runtime: Optional[RuntimeConfig] = None,
+                 index: Optional[api.Searcher] = None):
+        if index is not None:
+            # validated before any allocation: any MUTABLE Searcher works,
+            # gated by capability rather than by concrete stream type
+            if logits_mode != "promips":
+                raise ValueError(
+                    "index= requires logits_mode='promips' (exact mode has "
+                    "no logit index; the given searcher would be ignored)")
+            if not index.capabilities.supports_mutation:
+                raise ValueError(
+                    f"engine index backend {index.name!r} must support "
+                    "mutation (capabilities.supports_mutation=True)")
+            if promips_kwargs:
+                raise ValueError(
+                    "promips_kwargs only tunes the default-built index; "
+                    "with index= they would be silently ignored — configure "
+                    "the injected searcher at its own build() instead")
         self.params, self.cfg = params, cfg
         self.b, self.max_len = batch_slots, max_len
         self.logits_mode = logits_mode
@@ -61,12 +82,18 @@ class DecodeEngine:
         self._decode_hidden = jax.jit(
             lambda p, c, t: model_lib.decode_step(p, cfg, c, t, return_hidden=True))
         if logits_mode == "promips":
-            emb = np.asarray(params["embed"], np.float32)[: cfg.vocab]
-            kw = dict(m=8, c=0.9, p=0.9, norm_strata=4, seed=0)
-            kw.update(promips_kwargs or {})
-            # streaming index: row id == vocab id; update()/delete() absorb
-            # weight refreshes, auto-compaction runs off the decode path
-            self.index = MutableProMIPS(emb, auto_compact=True, **kw)
+            if index is not None:
+                self.index = index
+            else:
+                emb = np.asarray(params["embed"], np.float32)[: cfg.vocab]
+                kw = dict(m=8, c=0.9, p=0.9, norm_strata=4, seed=0)
+                kw.update(promips_kwargs or {})
+                guarantee = api.GuaranteeConfig(c=kw.pop("c"), p0=kw.pop("p"))
+                # streaming index: row id == vocab id; update()/delete()
+                # absorb weight refreshes, auto-compaction off the decode path
+                self.index = api.build(emb, backend="promips-stream",
+                                       guarantee=guarantee, auto_compact=True,
+                                       seed=kw.pop("seed"), **kw)
             self._retired = np.zeros(cfg.vocab, bool)
             # decode-step batch goes through the unified two-phase runtime
             # (batched Pallas verification over the B slots) by default; a
@@ -113,7 +140,7 @@ class DecodeEngine:
 
     def join_compaction(self, timeout: Optional[float] = None) -> None:
         if self.logits_mode == "promips":
-            self.index.join_compaction(timeout)
+            self.index.flush(timeout)
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
@@ -175,11 +202,10 @@ class DecodeEngine:
         if self.logits_mode == "promips":
             hidden, self.cache = self._decode_hidden(
                 self.params, self.cache, jnp.asarray(tokens))
-            ids, _, stats = self.index.search(
-                jnp.asarray(hidden, jnp.float32), k=self.search_runtime.k,
-                runtime=self.search_runtime)
-            self.pages += int(np.sum(np.asarray(stats.pages)))
-            nxt = np.asarray(ids)[:, 0]
+            res = self.index.search(hidden, k=self.search_runtime.k,
+                                    runtime=self.search_runtime)
+            self.pages += res.stats["pages"]
+            nxt = res.ids[:, 0]
             # a slot starved by a finite promips_budget (stats.exhausted)
             # returns id -1; end that sequence instead of decoding token -1
             nxt = np.where(nxt >= 0, nxt, self.eos_id)

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.index import IndexMeta, ProMIPSIndex
+from ..core.index import IndexArrays, IndexMeta, ProMIPSIndex
 from ..core.runtime import RuntimeConfig, next_pow2, search_segments
 from .compaction import CompactionConfig, Compactor, rebuild_base
 from .segments import DeltaSegment, Snapshot
@@ -337,6 +337,83 @@ class MutableProMIPS:
     def join_compaction(self, timeout: Optional[float] = None) -> None:
         if self.compactor is not None:
             self.compactor.join(timeout)
+
+    # -- persistence (repro.api save/load, DESIGN.md §9) ---------------------
+    def state_dict(self) -> tuple[dict, dict]:
+        """(arrays, meta) capturing the full mutable state: base segment
+        arrays + tombstone bitmap + the filled delta prefix. Restoring via
+        `from_state` yields bit-identical searches — the base arrays are
+        persisted verbatim (no rebuild) and the delta is replayed in place.
+        """
+        with self._lock:
+            if self._oplog is not None:
+                raise RuntimeError("cannot serialize while a compaction is "
+                                   "in flight (join_compaction() first)")
+            arrays = {f"base_{f}": np.asarray(getattr(self._base.arrays, f))
+                      for f in IndexArrays._fields}
+            d = self._delta
+            arrays.update(
+                base_alive=self._base_alive.copy(),
+                delta_x=d.x[: d.count].copy(),
+                delta_gids=d.gids[: d.count].copy(),
+                delta_alive=d.alive[: d.count].copy(),
+            )
+            meta = dict(
+                meta=dataclasses.asdict(self._base.meta),
+                build_kwargs=dict(self.build_kwargs),
+                delta_capacity=int(d.capacity),
+                next_id=int(self._next_id),
+                auto_compact=self.compactor is not None,
+                compaction=dataclasses.asdict(
+                    self.compactor.cfg if self.compactor is not None
+                    else CompactionConfig()),
+            )
+            return arrays, meta
+
+    @classmethod
+    def from_state(cls, arrays: dict, meta: dict, *,
+                   auto_compact: Optional[bool] = None,
+                   compaction: Optional[CompactionConfig] = None
+                   ) -> "MutableProMIPS":
+        """Inverse of :meth:`state_dict` (no index rebuild)."""
+        base = ProMIPSIndex(
+            arrays=IndexArrays(**{f: np.asarray(arrays[f"base_{f}"])
+                                  for f in IndexArrays._fields}),
+            meta=IndexMeta(**meta["meta"]),
+            layout=None,
+        )
+        obj = cls.__new__(cls)
+        obj.build_kwargs = dict(meta["build_kwargs"])
+        obj.d = base.meta.d
+        obj._lock = threading.RLock()
+        obj._oplog = None
+        obj._defer_trigger = False
+        obj._delta_capacity = int(meta["delta_capacity"])
+        obj._set_base(base)
+        obj._base_alive = np.asarray(arrays["base_alive"], bool).copy()
+        obj._n_base_dead = int(np.sum((base.arrays.ids >= 0)
+                                      & ~obj._base_alive))
+        obj._reset_delta()
+        d = obj._delta
+        count = len(arrays["delta_gids"])
+        if count:
+            d.x[:count] = arrays["delta_x"]
+            d.gids[:count] = arrays["delta_gids"]
+            d.alive[:count] = arrays["delta_alive"]
+            d.count = count
+            for slot in range(count):
+                if d.alive[slot]:
+                    obj._slot_of[int(d.gids[slot])] = slot
+        obj._epoch = 0
+        obj._snap = None
+        obj._next_id = int(meta["next_id"])
+        if auto_compact is None:
+            auto_compact = bool(meta.get("auto_compact", False))
+        if compaction is None:
+            # restore the saved trigger config, not the class default
+            compaction = CompactionConfig(**meta.get("compaction", {}))
+        obj.compactor = Compactor(compaction) if auto_compact else None
+        return obj
 
 
 __all__ = ["MutableProMIPS"]

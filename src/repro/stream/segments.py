@@ -38,6 +38,11 @@ class StreamStats(NamedTuple):
     exhausted: np.ndarray   # base budget exhausted (delta is always exact)
     base: SearchStats       # untouched stats of the base two-phase search
 
+    def to_dict(self) -> dict:
+        """Normalized accounting (`core/stats.stats_totals` contract)."""
+        from ..core.stats import stats_totals
+        return stats_totals(self.pages, self.candidates, self.exhausted)
+
 
 class DeltaSegment:
     """Append-only row buffer: preallocated arrays + fill watermark.

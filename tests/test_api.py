@@ -1,0 +1,393 @@
+"""Unified index API (DESIGN.md §9): registry conformance, guarantee-first
+config derivation, eager RuntimeConfig validation, and persistence.
+
+The conformance suite is parametrized over EVERY registered backend: build
+-> search -> (mutate if supports_mutation) -> save/load with bit-identical
+post-load search results. A new backend only has to register to be covered.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import RuntimeConfig
+from repro.core.chi2 import chi2_ppf_host
+from repro.core.dim_opt import optimized_projected_dimension
+
+K = 10
+GUARANTEE = api.GuaranteeConfig(c=0.9, p0=0.6, k=K)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    from repro.data.synthetic import mf_factors
+    x = mf_factors(1500, 32, 8, decay=0.4, seed=0, norm_tail=0.3)
+    q = mf_factors(6, 32, 8, decay=0.4, seed=1)
+    return x, q
+
+
+_built = {}
+
+
+def build(backend, corpus, **opts):
+    key = (backend, tuple(sorted(opts.items())))
+    if key not in _built:
+        x, _ = corpus
+        _built[key] = api.build(x, backend=backend, guarantee=GUARANTEE,
+                                seed=0, **opts)
+    return _built[key]
+
+
+# ---------------------------------------------------------------------------
+# registry + guarantee config
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    names = api.backends()
+    for expected in ("promips", "promips-stream", "sharded", "exact",
+                     "h2alsh", "pq", "rangelsh"):
+        assert expected in names
+    with pytest.raises(ValueError, match="registered backends"):
+        api.get_backend("nope")
+    with pytest.raises(ValueError, match="unknown backend"):
+        api.build(np.zeros((4, 2), np.float32), backend="nope")
+
+
+def test_guarantee_config_derivation():
+    """(c, p0) -> m* via the §V-B cost model, x_p via the chi-square ppf."""
+    g = api.GuaranteeConfig(c=0.8, p0=0.7, k=5)
+    for n in (100, 5000, 200_000):
+        plan = g.derive(n)
+        assert plan.m == min(optimized_projected_dimension(n), 30)
+        assert plan.x_p == pytest.approx(chi2_ppf_host(0.7, plan.m))
+        assert plan.probe_groups == 2 ** plan.m
+        assert plan.budget is None and plan.budget2 is None  # no truncation
+    # larger corpora never want a smaller projected dimension
+    ms = [g.derive(n).m for n in (100, 2000, 50_000, 1_000_000)]
+    assert ms == sorted(ms)
+
+
+def test_guarantee_config_validation():
+    with pytest.raises(ValueError, match="c must be"):
+        api.GuaranteeConfig(c=1.5)
+    with pytest.raises(ValueError, match="p0 must be"):
+        api.GuaranteeConfig(p0=0.0)
+    with pytest.raises(ValueError, match="k must be"):
+        api.GuaranteeConfig(k=0)
+
+
+def test_build_respects_derived_m(corpus):
+    """Without an explicit m override, the index uses the derived m*."""
+    x, _ = corpus
+    s = api.build(x, backend="promips", guarantee=GUARANTEE, seed=0)
+    assert s.pm.meta.m == GUARANTEE.derive(len(x)).m
+    assert s.pm.meta.c == GUARANTEE.c and s.pm.meta.p == GUARANTEE.p0
+    s8 = build("promips", corpus, m=8)
+    assert s8.pm.meta.m == 8
+
+
+# ---------------------------------------------------------------------------
+# eager RuntimeConfig validation (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kwargs,match", [
+    (dict(verification="bogus"), "batched, scan"),
+    (dict(mode="bogus"), "two_phase, progressive"),
+    (dict(k=0), "k must be"),
+    (dict(k=-3), "k must be"),
+    (dict(budget=0), "budget must be"),
+    (dict(budget=-5), "budget must be"),
+    (dict(budget2=-1), "budget2 must be"),
+])
+def test_runtime_config_rejects_bad_values(kwargs, match):
+    """Unknown choices / non-positive sizes fail FAST, naming the valid
+    choices — not deep inside the jit'd device path."""
+    with pytest.raises(ValueError, match=match):
+        RuntimeConfig(**kwargs)
+
+
+def test_runtime_validation_at_search_entry(corpus):
+    """A config that dodged __post_init__ still fails at search() entry."""
+    from repro.core import runtime_search
+    s = build("promips", corpus, m=6)
+    cfg = RuntimeConfig(k=5)
+    object.__setattr__(cfg, "verification", "bogus")  # frozen bypass
+    with pytest.raises(ValueError, match="batched, scan"):
+        runtime_search(s.pm.arrays, s.pm.meta, corpus[1][:2], cfg)
+
+
+# ---------------------------------------------------------------------------
+# conformance: every registered backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", api.backends())
+def test_conformance_build_search(backend, corpus):
+    """Uniform semantics: shapes, descending scores, ids<->scores
+    consistency (scores ARE the inner products of the returned rows), and
+    the normalized stats contract."""
+    x, q = corpus
+    s = build(backend, corpus)
+    assert s.name == backend
+    assert isinstance(s.capabilities, api.Capabilities)
+    assert s.n == len(x)
+    assert s.index_bytes >= 0 and s.build_seconds >= 0
+
+    res = s.search(q, k=K)
+    assert isinstance(res, api.SearchResult)
+    assert res.ids.shape == (len(q), K) and res.ids.dtype == np.int64
+    assert res.scores.shape == (len(q), K) and res.scores.dtype == np.float32
+    assert np.all(np.diff(res.scores, axis=1) <= 1e-5), "scores descending"
+    for key in api.STAT_KEYS:
+        assert key in res.stats, f"missing stat {key!r}"
+    assert res.stats["queries"] == len(q)
+    assert res.pages > 0 and res.candidates > 0
+    # ids <-> scores consistency: every returned id's true inner product
+    for i in range(len(q)):
+        valid = res.ids[i] >= 0
+        np.testing.assert_allclose(
+            res.scores[i][valid], x[res.ids[i][valid]] @ q[i],
+            rtol=1e-4, atol=1e-4,
+            err_msg=f"{backend}: scores are not the true inner products")
+
+    # single-row query convenience: (d,) behaves as a B=1 batch
+    res1 = s.search(q[0], k=K)
+    assert res1.ids.shape == (1, K)
+    np.testing.assert_array_equal(res1.ids[0], res.ids[0])
+
+
+@pytest.mark.parametrize("backend", api.backends())
+def test_conformance_guaranteed_backends_recall(backend, corpus):
+    """Backends claiming `guaranteed` must actually deliver near-exact
+    results at these (easy-corpus) settings; unguaranteed baselines only
+    need to beat a sanity floor."""
+    from repro.baselines.exact import exact_topk
+    x, q = corpus
+    s = build(backend, corpus)
+    eids, _ = exact_topk(x, q, K)
+    res = s.search(q, k=K)
+    recall = np.mean([len(set(res.ids[i]) & set(eids[i])) / K
+                      for i in range(len(q))])
+    assert recall >= (0.95 if s.capabilities.guaranteed else 0.2), \
+        (backend, recall)
+
+
+@pytest.mark.parametrize("backend", api.backends())
+def test_conformance_mutation_gating(backend, corpus):
+    """supports_mutation gates insert/delete/update/alive_items uniformly:
+    mutable backends reflect writes in the next search, immutable ones
+    raise UnsupportedOperation."""
+    x, q = corpus
+    s = build(backend, corpus)
+    if not s.capabilities.supports_mutation:
+        for op in (lambda: s.insert([len(x)], np.ones((1, x.shape[1]))),
+                   lambda: s.delete([0]),
+                   lambda: s.update([0], np.ones((1, x.shape[1]))),
+                   s.alive_items):
+            with pytest.raises(api.UnsupportedOperation, match=backend):
+                op()
+        return
+
+    # fresh instance: mutation must not leak into the shared cache
+    m = api.build(x, backend=backend, guarantee=GUARANTEE, seed=0)
+    boost = 10.0 * x[int(np.argmax(x @ q[0]))]
+    new_id = len(x) + 7
+    m.insert([new_id], boost[None, :])
+    res = m.search(q[0], k=K)
+    assert res.ids[0, 0] == new_id, "inserted row must win the next search"
+
+    m.delete([new_id])
+    res = m.search(q[0], k=K)
+    assert new_id not in res.ids[0], "deleted row must vanish"
+
+    victim = int(res.ids[0, 0])
+    m.update([victim], 20.0 * boost[None, :])
+    res = m.search(q[0], k=K)
+    assert res.ids[0, 0] == victim, "updated row must rank by its new vector"
+
+    gids, rows = m.alive_items()
+    assert len(gids) == len(x) == m.n
+    assert victim in gids
+
+
+# ---------------------------------------------------------------------------
+# persistence: save -> load -> search is bit-identical (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", api.backends())
+def test_persistence_round_trip_bit_identical(backend, corpus, tmp_path):
+    x, q = corpus
+    s = build(backend, corpus)
+    before = s.search(q, k=K)
+
+    path = s.save(str(tmp_path / backend))
+    header = api.read_header(path)
+    assert header["backend"] == backend
+    assert header["seed"] == 0
+    assert header["guarantee"]["c"] == GUARANTEE.c
+
+    loaded = api.load(path)
+    assert type(loaded) is type(s)
+    assert loaded.guarantee == GUARANTEE and loaded.seed == 0
+    after = loaded.search(q, k=K)
+    np.testing.assert_array_equal(before.ids, after.ids)
+    np.testing.assert_array_equal(before.scores, after.scores)
+
+
+def test_persistence_mutated_stream_round_trip(corpus, tmp_path):
+    """A stream with live delta rows + tombstones round-trips exactly, and
+    the loaded stream keeps absorbing writes."""
+    x, q = corpus
+    rng = np.random.RandomState(3)
+    s = api.build(x, backend="promips-stream", guarantee=GUARANTEE, seed=0)
+    s.insert(np.arange(len(x), len(x) + 50),
+             rng.randn(50, x.shape[1]).astype(np.float32))
+    s.delete(np.arange(0, 20))
+    s.update([30], 5.0 * x[30][None, :])
+    before = s.search(q, k=K)
+
+    loaded = api.load(s.save(str(tmp_path / "stream")))
+    after = loaded.search(q, k=K)
+    np.testing.assert_array_equal(before.ids, after.ids)
+    np.testing.assert_array_equal(before.scores, after.scores)
+    assert loaded.n == s.n
+
+    loaded.insert([10 ** 6], np.ones((1, x.shape[1]), np.float32))
+    assert loaded.n == s.n + 1
+
+
+def test_persistence_load_dispatch_errors(tmp_path, corpus):
+    with pytest.raises(FileNotFoundError):
+        api.load(str(tmp_path / "missing"))
+    x, _ = corpus
+    s = build("exact", corpus)
+    path = s.save(str(tmp_path / "exact_idx"))
+    # loading through the wrong backend class is rejected
+    with pytest.raises(ValueError, match="saved by backend"):
+        api.get_backend("promips").load(path)
+
+
+# ---------------------------------------------------------------------------
+# facade plumbing
+# ---------------------------------------------------------------------------
+
+def test_core_reexports_facade():
+    """core/__init__ re-exports the facade lazily (no import cycle)."""
+    import repro.core as core
+    assert core.build_searcher is api.build
+    assert core.load_searcher is api.load
+    assert core.GuaranteeConfig is api.GuaranteeConfig
+    with pytest.raises(AttributeError):
+        core.definitely_not_a_symbol
+
+
+def test_engine_rejects_immutable_index(corpus):
+    """serve.DecodeEngine takes any MUTABLE Searcher; immutable ones are
+    rejected by capability, not by concrete type."""
+    from repro.serve.engine import DecodeEngine
+    x, _ = corpus
+    s = build("promips", corpus)  # supports_mutation=False
+    with pytest.raises(ValueError, match="supports_mutation"):
+        DecodeEngine({"embed": np.zeros((8, 4), np.float32)}, object(),
+                     logits_mode="promips", index=s)
+    # an injected index with exact mode would be silently ignored — reject it
+    m = api.build(x, backend="promips-stream", guarantee=GUARANTEE, seed=0)
+    with pytest.raises(ValueError, match="logits_mode"):
+        DecodeEngine({"embed": np.zeros((8, 4), np.float32)}, object(),
+                     index=m)
+    # promips_kwargs tune the default-built index only; with index= they
+    # would be silently dropped — reject the combination
+    with pytest.raises(ValueError, match="promips_kwargs"):
+        DecodeEngine({"embed": np.zeros((8, 4), np.float32)}, object(),
+                     logits_mode="promips", index=m,
+                     promips_kwargs=dict(m=12))
+
+
+def test_directly_constructed_adapter_is_usable(corpus):
+    """Adapters restored via from_state (or built by hand) work without the
+    registry stamping guarantee/seed — class defaults cover them."""
+    x, q = corpus
+    s = build("promips", corpus, m=6)
+    arrays, meta = s.state()
+    restored = type(s).from_state(arrays, meta)
+    res = restored.search(q)          # k defaults via restored.guarantee
+    assert res.ids.shape == (len(q), api.GuaranteeConfig().k)
+    assert restored.seed == 0 and restored.guarantee == api.GuaranteeConfig()
+
+
+def test_promips_host_search_path(corpus):
+    """search_path='host' runs the paper-faithful sequential search (exact
+    resident-page accounting) behind the same facade. Host and device are
+    both c-AMIP-guaranteed but traverse differently (sequential Condition-A
+    early stop vs block-granular selection), so the contract is the
+    GUARANTEE, not identical ids: both must be near-exact here."""
+    from repro.baselines.exact import exact_topk
+    x, q = corpus
+    host = build("promips", corpus, m=6, search_path="host")
+    res_h = host.search(q, k=K)
+    eids, _ = exact_topk(x, q, K)
+    recall = np.mean([len(set(res_h.ids[i]) & set(eids[i])) / K
+                      for i in range(len(q))])
+    assert recall >= 0.9, recall
+    assert res_h.stats["queries"] == len(q) and res_h.pages > 0
+
+    # ablation knobs reach the host path (norm-adaptive prunes pages)
+    pruned = build("promips", corpus, m=6, search_path="host",
+                   norm_adaptive=True, cs_prune=True)
+    assert pruned.search(q, k=K).pages <= res_h.pages
+
+    with pytest.raises(ValueError, match="search_path"):
+        build("promips", corpus, search_path="bogus")
+
+
+def test_promips_host_path_round_trip(corpus, tmp_path):
+    x, q = corpus
+    s = build("promips", corpus, m=6, search_path="host")
+    before = s.search(q, k=K)
+    loaded = api.load(s.save(str(tmp_path / "host_idx")))
+    assert loaded.search_path == "host"
+    after = loaded.search(q, k=K)
+    np.testing.assert_array_equal(before.ids, after.ids)
+    np.testing.assert_array_equal(before.scores, after.scores)
+
+
+def test_stream_compaction_config_round_trip(corpus, tmp_path):
+    """A non-default compaction threshold survives save/load."""
+    from repro.stream.compaction import CompactionConfig
+    x, q = corpus
+    s = api.build(x, backend="promips-stream", guarantee=GUARANTEE, seed=0,
+                  auto_compact=True,
+                  compaction=CompactionConfig(threshold=0.05))
+    loaded = api.load(s.save(str(tmp_path / "stream_cc")))
+    assert loaded.inner.compactor is not None
+    assert loaded.inner.compactor.cfg.threshold == 0.05
+
+
+def test_device_array_queries_pass_through(corpus):
+    """jax-array queries skip the host round trip and return the same
+    results as numpy queries (the serve decode hot path)."""
+    import jax.numpy as jnp
+    x, q = corpus
+    s = build("promips", corpus, m=6)
+    res_np = s.search(q, k=K)
+    res_j = s.search(jnp.asarray(q), k=K)
+    np.testing.assert_array_equal(res_np.ids, res_j.ids)
+    np.testing.assert_array_equal(res_np.scores, res_j.scores)
+    res_j1 = s.search(jnp.asarray(q[0]), k=K)  # single device row
+    np.testing.assert_array_equal(res_j1.ids[0], res_np.ids[0])
+
+
+def test_legacy_entry_points_still_work(corpus):
+    """The deprecation-shim contract: pre-facade call signatures keep
+    working (ProMIPS.build(...).search(...), baseline classes)."""
+    from repro.baselines import H2ALSH
+    from repro.core import ProMIPS
+    x, q = corpus
+    pm = ProMIPS.build(x, m=6, c=0.9, p=0.5)
+    ids, scores, stats = pm.search(q[:4], k=5)
+    assert np.asarray(ids).shape == (4, 5)
+    ids_h, scores_h, st_h = pm.search_host(q[0], k=5)
+    assert st_h.to_dict()["queries"] == 1
+    bl = H2ALSH().build(x)
+    ids_b, scores_b, st_b = bl.search(q[0], k=5)
+    assert st_b["pages"] > 0

@@ -287,10 +287,11 @@ def test_sharded_mutable_churn():
         pos, sc = exact_topk(r, q, K)
         return g[pos], sc
 
-    ids, scores, pages = sh.search(q, k=K)
+    ids, scores, stats = sh.search(q, k=K)
     eids, escores = oracle()
     rec = np.mean([len(set(ids[b]) & set(eids[b])) / K for b in range(len(q))])
-    assert rec == 1.0 and pages > 0
+    assert rec == 1.0 and stats.pages > 0
+    assert stats.to_dict()["queries"] == len(q)
 
     sh.compact()
     ids2, scores2, _ = sh.search(q, k=K)
