@@ -188,17 +188,92 @@ def bench_api(quick: bool = True):
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
 
+    # Large-n point (>= 100k): the regime where pruning pays off — the
+    # `promips` facade backend must beat the `exact` dense scan at
+    # recall >= 0.95 (PR 4 acceptance). Restricted to those two backends:
+    # the numpy LSH/PQ baselines take minutes per 100k-corpus sweep and add
+    # nothing to the pruned-vs-dense comparison this point exists for.
+    cfg = LARGE_N
+    xl, ql = _large_corpus()
+    eids_l, _ = exact_topk(xl, ql, cfg["k"])
+    large_guarantee = api.GuaranteeConfig(c=cfg["c"], p0=cfg["p0"], k=cfg["k"])
+    rec["large_n"] = {"n": cfg["n"], "d": cfg["d"], "batch": cfg["n_q"],
+                      "k": cfg["k"], "guarantee": large_guarantee.to_dict(),
+                      "backends": {}}
+    promips_opts = dict(m=cfg["m"], k_p=cfg["k_p"], k_sp=cfg["k_sp"],
+                        norm_strata=cfg["norm_strata"], norm_adaptive=True,
+                        cs_prune=True)
+    searchers, times = {}, {}
+    for backend, opts in (("exact", {}), ("promips", promips_opts)):
+        t0 = time.perf_counter()
+        s = api.build(xl, backend=backend, guarantee=large_guarantee, seed=0,
+                      **opts)
+        build_s = time.perf_counter() - t0
+        s.search(ql, k=cfg["k"])  # warm-up / compile
+        searchers[backend] = (s, build_s)
+        times[backend] = []
+    # interleaved reps + medians: both backends see the same host
+    # conditions (this box's wall clock jitters +-20% across seconds)
+    results = {}
+    for _ in range(5):
+        for backend, (s, _) in searchers.items():
+            t0 = time.perf_counter()
+            results[backend] = s.search(ql, k=cfg["k"])
+            times[backend].append(time.perf_counter() - t0)
+    for backend, (s, build_s) in searchers.items():
+        res = results[backend]
+        us = float(np.median(times[backend])) / cfg["n_q"] * 1e6
+        recall = float(np.mean([recall_at_k(res.ids[i], eids_l[i])
+                                for i in range(cfg["n_q"])]))
+        rec["large_n"]["backends"][backend] = dict(
+            build_s=build_s, us_per_query=us, recall_vs_exact=recall,
+            pages_per_query=res.pages / cfg["n_q"])
+        rows.append((f"api/large_n{cfg['n']}/{backend}", us,
+                     f"recall={recall:.3f};build_s={build_s:.1f}"))
+    ratios = [te / tp for te, tp in zip(times["exact"], times["promips"])]
+    rec["large_n"]["promips_vs_exact_speedup"] = float(np.median(ratios))
+    rec["large_n"]["promips_beats_exact"] = (
+        rec["large_n"]["promips_vs_exact_speedup"] > 1.0)
+    rows.append(("api/large_n/promips_vs_exact", 0.0,
+                 f"x{rec['large_n']['promips_vs_exact_speedup']:.2f}"))
+
     root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
     with open(os.path.join(root, "BENCH_api.json"), "w") as f:
         json.dump(rec, f, indent=1)
     return rows
 
 
+# Large-n benchmark point (n >= 100k, SIFT-like d=128) where pruning
+# actually pays off: strong norm decay + long-tail scales, norm-stratified
+# layout, m=16 projections. Shared by `bench_search_runtime` and `bench_api`
+# so both --quick and --api record the same regime (recall vs exact is
+# 1.000 at these settings; pages ~0.8 of blocks). d=128 matters: the
+# per-query dense scan is bandwidth-bound in n*d while the fused batch
+# path's non-matmul work is d-independent, so this is the regime the
+# index's batched amortization genuinely wins on CPU too.
+LARGE_N = dict(n=100_000, d=128, rank=16, decay=0.5, norm_tail=0.6,
+               m=16, k_p=8, k_sp=8, norm_strata=8, c=0.9, p0=0.6,
+               n_q=64, k=10)
+
+
+def _large_corpus():
+    from repro.data.synthetic import mf_factors
+    cfg = LARGE_N
+    x = mf_factors(cfg["n"], cfg["d"], cfg["rank"], decay=cfg["decay"],
+                   seed=0, norm_tail=cfg["norm_tail"])
+    q = mf_factors(cfg["n_q"], cfg["d"], cfg["rank"], decay=cfg["decay"],
+                   seed=1)
+    return x, q
+
+
 def bench_search_runtime(quick: bool = False):
-    """Host vs device-scan vs device-batched verification — the two-phase
-    runtime speedup cell (ISSUE 1 acceptance: batched >= 2x scan per query
-    on a >= 64-query batch). Writes BENCH_search.json at the repo root with
-    per-query latency + logical pages so the perf trajectory is recorded.
+    """Host vs device scan/batched/fused verification — the two-phase
+    runtime speedup cells (ISSUE 1: batched >= 2x scan; ISSUE 4: fused >=
+    batched, guarded by scripts/ci.sh). Writes BENCH_search.json at the
+    repo root with per-query latency + logical pages so the perf trajectory
+    is recorded (benchmarks/run.py also appends it to
+    results/bench/history.jsonl), including a large-n point (`LARGE_N`)
+    where pruning pays off and `promips` must beat the exact full scan.
 
     Settings are tuned so pruning actually ENGAGES (ISSUE 2): decay-0.5 MF
     norms, an 8-stratum layout and the norm-adaptive + CS-prune radii leave
@@ -238,18 +313,29 @@ def bench_search_runtime(quick: bool = False):
     rec["host_us_per_query"] = (time.perf_counter() - t0) / 8 * 1e6
     rows.append(("runtime/host", rec["host_us_per_query"], "queries=8"))
 
-    for label in ("scan", "batched"):
-        search = lambda: pm.search(qj, k=10, verification=label,
-                                   norm_adaptive=True, cs_prune=True)
-        ids, _, st = search()   # compile
-        ids.block_until_ready()
-        reps = 3
+    labels = ("scan", "batched", "fused")
+
+    def one_rep(label):
         t0 = time.perf_counter()
-        for _ in range(reps):
-            ids, _, st = search()
-            ids.block_until_ready()
-        us = (time.perf_counter() - t0) / (reps * n_q) * 1e6
-        pages = float(np.mean(np.asarray(st.pages)))
+        ids, _, st = pm.search(qj, k=10, verification=label,
+                               norm_adaptive=True, cs_prune=True)
+        ids.block_until_ready()
+        return time.perf_counter() - t0, st
+
+    times = {label: [] for label in labels}
+    stats = {}
+    for label in labels:
+        one_rep(label)  # compile
+    # interleaved reps + per-pair ratio medians: the CI guard hard-asserts
+    # fused >= batched and this host's wall clock jitters +-20% across
+    # seconds, so back-to-back timing blocks would make that ratio a lottery
+    for _ in range(5):
+        for label in labels:
+            dt, stats[label] = one_rep(label)
+            times[label].append(dt)
+    for label in labels:
+        us = float(np.median(times[label])) / n_q * 1e6
+        pages = float(np.mean(np.asarray(stats[label].pages)))
         rec[f"device_{label}_us_per_query"] = us
         rec[f"device_{label}_pages_mean"] = pages
         rows.append((f"runtime/device_{label}", us,
@@ -258,14 +344,121 @@ def bench_search_runtime(quick: bool = False):
     rec["pages_frac_of_blocks"] = (
         rec["device_batched_pages_mean"] / pm.meta.n_blocks)
     rec["pruning_engaged"] = rec["pages_frac_of_blocks"] < 1.0
-    rec["speedup_batched_vs_scan"] = (
-        rec["device_scan_us_per_query"] / rec["device_batched_us_per_query"])
+    rec["speedup_batched_vs_scan"] = float(np.median(
+        [s / b for s, b in zip(times["scan"], times["batched"])]))
+    rec["speedup_fused_vs_batched"] = float(np.median(
+        [b / f for b, f in zip(times["batched"], times["fused"])]))
     rows.append(("runtime/speedup_batched_vs_scan", 0.0,
                  f"x{rec['speedup_batched_vs_scan']:.2f}"))
+    rows.append(("runtime/speedup_fused_vs_batched", 0.0,
+                 f"x{rec['speedup_fused_vs_batched']:.2f}"))
+
+    rec["large_n"] = large = _bench_runtime_large()
+    rows.append((f"runtime/large_n{large['n']}/exact",
+                 large["exact_us_per_query"], "numpy per-query scan"))
+    rows.append((f"runtime/large_n{large['n']}/exact_jit",
+                 large["exact_jit_us_per_query"], "jit batch matmul+topk"))
+    for label in ("batched", "fused"):
+        rows.append((f"runtime/large_n{large['n']}/{label}",
+                     large[f"{label}_us_per_query"],
+                     f"pages={large[f'{label}_pages_mean']:.0f}"
+                     f"/{large['n_blocks']};recall={large['recall']:.3f}"))
+    rows.append(("runtime/large_n/speedup_fused_vs_exact", 0.0,
+                 f"x{large['speedup_fused_vs_exact']:.2f}"))
+
     root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
     with open(os.path.join(root, "BENCH_search.json"), "w") as f:
         json.dump(rec, f, indent=1)
     return rows
+
+
+def _bench_runtime_large():
+    """The large-n cell: fused/batched two-phase vs the exact full scan.
+
+    This is the regime the paper's pitch is about — at n >= 100k the fused
+    pruned path must come in UNDER the `exact` backend (the numpy per-query
+    scan every accuracy figure compares against; `promips` < `exact` with
+    recall >= 0.95). A jit batch matmul+top_k is ALSO recorded
+    (``exact_jit_us_per_query``) as the device-side dense upper bound — on
+    this CPU container its one sgemm beats everything at ~80% page
+    fractions; the fused kernel's page-skipping DMA walk is what closes
+    that gap on a real TPU (DESIGN.md §10). Returns the record embedded in
+    BENCH_search.json.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.baselines.exact import ExactMIPS, exact_topk
+    from repro.core import ProMIPS, recall_at_k
+
+    cfg = LARGE_N
+    x, q = _large_corpus()
+    t0 = time.perf_counter()
+    pm = ProMIPS.build(x, m=cfg["m"], c=cfg["c"], p=cfg["p0"], k_p=cfg["k_p"],
+                       k_sp=cfg["k_sp"], norm_strata=cfg["norm_strata"])
+    rec = {"n": cfg["n"], "d": cfg["d"], "batch": cfg["n_q"], "k": cfg["k"],
+           "build_s": time.perf_counter() - t0, "n_blocks": pm.meta.n_blocks}
+    qj = jnp.asarray(q, jnp.float32)
+    eids, _ = exact_topk(x, q, cfg["k"])
+
+    exact = ExactMIPS().build(x)
+    exact.search(q[0], k=cfg["k"])
+
+    def exact_rep():
+        t0 = time.perf_counter()
+        for i in range(cfg["n_q"]):
+            exact.search(q[i], k=cfg["k"])
+        return time.perf_counter() - t0
+
+    xj = jnp.asarray(x, jnp.float32)
+
+    @jax.jit
+    def exact_scan(qj):
+        return jax.lax.top_k((xj @ qj.T).T, cfg["k"])
+    out = exact_scan(qj)
+    out[0].block_until_ready()
+    reps = 3
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = exact_scan(qj)
+        out[0].block_until_ready()
+    rec["exact_jit_us_per_query"] = ((time.perf_counter() - t0)
+                                     / (reps * cfg["n_q"]) * 1e6)
+
+    def device_rep(label):
+        t0 = time.perf_counter()
+        ids, _, st = pm.search(qj, k=cfg["k"], verification=label,
+                               norm_adaptive=True, cs_prune=True)
+        ids.block_until_ready()
+        return time.perf_counter() - t0, ids, st
+
+    for label in ("batched", "fused"):
+        device_rep(label)  # compile
+    # INTERLEAVED exact/batched/fused reps: this host's wall clock drifts
+    # +-20% over tens of seconds, so back-to-back blocks of reps make the
+    # recorded ratios a lottery; pairing every rep and taking the median
+    # per-pair ratio measures all contenders under the same conditions.
+    t_ex, t_bat, t_fus, ratios = [], [], [], []
+    for _ in range(5):
+        te = exact_rep()
+        tb, _, _ = device_rep("batched")
+        tf, ids, st = device_rep("fused")
+        t_ex.append(te)
+        t_bat.append(tb)
+        t_fus.append(tf)
+        ratios.append(te / tf)
+    rec["exact_us_per_query"] = float(np.median(t_ex)) / cfg["n_q"] * 1e6
+    rec["batched_us_per_query"] = float(np.median(t_bat)) / cfg["n_q"] * 1e6
+    rec["fused_us_per_query"] = float(np.median(t_fus)) / cfg["n_q"] * 1e6
+    rec["batched_pages_mean"] = rec["fused_pages_mean"] = float(
+        np.mean(np.asarray(st.pages)))
+    ids = np.asarray(ids)
+    rec["recall"] = float(np.mean([recall_at_k(ids[i], eids[i])
+                                   for i in range(cfg["n_q"])]))
+    rec["pages_frac_of_blocks"] = rec["fused_pages_mean"] / rec["n_blocks"]
+    rec["pruning_engaged"] = rec["pages_frac_of_blocks"] < 1.0
+    rec["speedup_fused_vs_exact"] = float(np.median(ratios))
+    return rec
 
 
 def bench_stream(quick: bool = True):
@@ -360,7 +553,9 @@ def bench_device_throughput():
     us = (time.perf_counter() - t0) / (3 * len(queries)) * 1e6
     rows.append((f"device/{name}/progressive", us,
                  f"pages={res.pages / len(queries):.0f}"))
-    # kernel-level verification scan (interpret mode, CPU)
+    # kernel-level verification scan (backend-aware default: Pallas on TPU,
+    # jnp oracle here — mips_topk no longer silently pays interpret mode)
+    import jax
     xr = jnp.asarray(x[:2048], jnp.float32)
     valid = jnp.ones(2048, bool)
     t0 = time.perf_counter()
@@ -368,5 +563,6 @@ def bench_device_throughput():
                              k=10)
     top.block_until_ready()
     us_k = (time.perf_counter() - t0) * 1e6 / 4
-    rows.append(("device/kernel/mips_topk_interp", us_k, "mode=interpret"))
+    mode = "pallas" if jax.default_backend() == "tpu" else "jnp-oracle"
+    rows.append(("device/kernel/mips_topk", us_k, f"mode={mode}"))
     return rows

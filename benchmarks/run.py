@@ -15,8 +15,30 @@ import time
 sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src")))
 sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
 
+from datetime import datetime, timezone  # noqa: E402
+
 from benchmarks import common  # noqa: E402
 from benchmarks import paper_figures as F  # noqa: E402
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+# Repo-root records the bench functions (re)write; every run APPENDS the
+# fresh record to results/bench/history.jsonl with a timestamp, so the
+# BENCH_*.json numbers gain a trajectory instead of being overwritten.
+BENCH_FILES = ("BENCH_search.json", "BENCH_stream.json", "BENCH_api.json")
+
+
+def _append_history(out_dir: str, bench: str, rows, t_start: float) -> None:
+    ts = datetime.now(timezone.utc).isoformat(timespec="seconds")
+    entry = {"ts": ts, "bench": bench,
+             "rows": [{"name": n, "us_per_call": u, "derived": d}
+                      for n, u, d in rows]}
+    for fname in BENCH_FILES:
+        path = os.path.join(ROOT, fname)
+        if os.path.exists(path) and os.path.getmtime(path) >= t_start:
+            with open(path) as f:
+                entry.setdefault("records", {})[fname] = json.load(f)
+    with open(os.path.join(out_dir, "history.jsonl"), "a") as f:
+        f.write(json.dumps(entry) + "\n")
 
 BENCHES = [
     ("fig4a_index_size", F.fig4a_index_size),
@@ -38,8 +60,10 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="substring filter")
     ap.add_argument("--out", default="results/bench")
     ap.add_argument("--quick", action="store_true",
-                    help="fast smoke: host-vs-scan-vs-batched runtime "
-                         "comparison only (writes BENCH_search.json)")
+                    help="fast smoke: host vs scan/batched/fused runtime "
+                         "comparison plus the n=100k large-n point where "
+                         "the fused path must beat the exact scan (writes "
+                         "BENCH_search.json; ~30s)")
     ap.add_argument("--stream", action="store_true",
                     help="streaming-index smoke: insert throughput + search "
                          "latency vs delta fraction (writes BENCH_stream.json)")
@@ -69,6 +93,7 @@ def main() -> None:
         with open(os.path.join(args.out, f"{name}.json"), "w") as f:
             json.dump([{"name": n, "us_per_call": u, "derived": d}
                        for n, u, d in rows], f, indent=1)
+        _append_history(args.out, name, rows, t0)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
 
 

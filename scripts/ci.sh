@@ -16,8 +16,49 @@ python -m pytest -q tests/test_stream.py
 echo "== unified-API tier (registry conformance + persistence round trips) =="
 python -m pytest -q tests/test_api.py
 
-echo "== benchmark smoke (host vs scan vs batched runtime) =="
+echo "== benchmark smoke (host vs scan vs batched vs fused runtime) =="
 python -m benchmarks.run --quick --out results/bench
+
+echo "== perf guard (pruning engaged + fused >= batched, fails loudly) =="
+python - <<'PY'
+import json, sys
+rec = json.load(open("BENCH_search.json"))
+ok = True
+if not rec.get("pruning_engaged"):
+    print("PERF GUARD FAIL: pruning not engaged on the smoke bench "
+          f"(pages_frac_of_blocks={rec.get('pages_frac_of_blocks')})")
+    ok = False
+speedup = rec.get("speedup_fused_vs_batched", 0.0)
+if speedup < 1.0:
+    print(f"PERF GUARD FAIL: fused verification regressed below batched "
+          f"(x{speedup:.2f} < x1.00)")
+    ok = False
+large = rec.get("large_n", {})
+if large:
+    if not large.get("pruning_engaged"):
+        print("PERF GUARD FAIL: pruning not engaged at the large-n point "
+              f"(pages_frac_of_blocks={large.get('pages_frac_of_blocks')})")
+        ok = False
+    if large.get("recall", 0.0) < 0.95:
+        print(f"PERF GUARD FAIL: large-n recall {large.get('recall')} < 0.95")
+        ok = False
+    # the PR-4 headline: the pruned path beats the exact per-query scan at
+    # large n. Hard-fail a clear regression; tolerate host jitter near 1.0.
+    vs_exact = large.get("speedup_fused_vs_exact", 0.0)
+    if vs_exact < 0.9:
+        print(f"PERF GUARD FAIL: large-n fused slower than the exact scan "
+              f"(x{vs_exact:.2f} < x0.90)")
+        ok = False
+    elif vs_exact < 1.0:
+        print(f"PERF GUARD WARN: large-n fused-vs-exact x{vs_exact:.2f} "
+              "dipped below x1.00 — wall-clock jitter or a real regression; "
+              "re-run before trusting it")
+print(f"perf guard: pruning_engaged={rec.get('pruning_engaged')} "
+      f"fused_vs_batched=x{speedup:.2f} "
+      f"large_n_fused_vs_exact=x{large.get('speedup_fused_vs_exact', 0.0):.2f} "
+      f"large_n_recall={large.get('recall', 0.0):.3f}")
+sys.exit(0 if ok else 1)
+PY
 
 echo "== stream smoke (insert throughput + latency vs delta fraction) =="
 python -m benchmarks.run --stream --out results/bench

@@ -3,8 +3,9 @@
 Each adapter maps one existing engine onto the `Searcher` protocol:
 
   promips         core/promips.ProMIPS through the unified device runtime
-                  (two_phase batched verification by default; opts select
-                  mode="progressive", norm_adaptive, cs_prune, verification)
+                  (two_phase FUSED block-sparse verification by default —
+                  `core/search_fused.py`; opts select mode="progressive",
+                  norm_adaptive, cs_prune, verification="batched"/"scan")
   promips-stream  stream/mutable.MutableProMIPS (mutation + compaction)
   sharded         core/sharded.MutableShardedProMIPS (range-routed shards,
                   mutation, host-side k x shards merge)
@@ -59,7 +60,7 @@ class PromipsSearcher(Searcher):
     """Immutable ProMIPS index.
 
     ``search_path="device"`` (default) runs the unified jit'd runtime
-    (`core/runtime.search`, batched Pallas verification);
+    (`core/runtime.search`, fused block-sparse Pallas verification);
     ``search_path="host"`` runs the paper-faithful sequential NumPy search
     (`HostSearcher`) with the EXACT resident-4KB-page accounting the
     paper's figures count — the accuracy benchmarks select it through
@@ -80,7 +81,7 @@ class PromipsSearcher(Searcher):
 
     @classmethod
     def build(cls, x, *, guarantee, seed, page_bytes, m=None,
-              mode="two_phase", verification="batched", norm_adaptive=None,
+              mode="two_phase", verification="fused", norm_adaptive=None,
               cs_prune=None, budget=None, budget2=None, norm_strata=None,
               search_path="device", **index_opts) -> "PromipsSearcher":
         plan = guarantee.derive(len(x))
@@ -189,7 +190,7 @@ class StreamSearcher(_MutableMixin, Searcher):
 
     @classmethod
     def build(cls, x, *, guarantee, seed, page_bytes, ids=None, m=None,
-              mode="two_phase", verification="batched", norm_adaptive=None,
+              mode="two_phase", verification="fused", norm_adaptive=None,
               cs_prune=None, budget=None, budget2=None, norm_strata=1,
               delta_capacity=None, auto_compact=False, **index_opts
               ) -> "StreamSearcher":
@@ -243,7 +244,7 @@ class ShardedSearcher(_MutableMixin, Searcher):
 
     @classmethod
     def build(cls, x, *, guarantee, seed, page_bytes, n_shards=2, m=None,
-              mode="two_phase", verification="batched", norm_adaptive=None,
+              mode="two_phase", verification="fused", norm_adaptive=None,
               cs_prune=None, budget=None, budget2=None, norm_strata=1,
               delta_capacity=None, auto_compact=False, **index_opts
               ) -> "ShardedSearcher":

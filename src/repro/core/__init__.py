@@ -19,11 +19,13 @@ from .quick_probe import (
     pack_codes,
     pack_codes_np,
     quick_probe,
+    quick_probe_batch,
     unpack_bits,
 )
 from .runtime import RuntimeConfig, search_segments
 from .runtime import search as runtime_search
 from .search_device import SearchStats, search_batch, search_batch_progressive
+from .search_fused import search_batch_fused
 from .search_host import HostSearcher, HostStats
 
 # -- unified facade re-exports (lazy: repro.api imports this package) --------
@@ -58,8 +60,10 @@ __all__ = [
     "optimized_projected_dimension", "quick_probe_cost",
     "make_projection", "project",
     "GroupTable", "build_group_table", "group_lower_bounds",
-    "pack_codes", "pack_codes_np", "quick_probe", "unpack_bits",
-    "SearchStats", "search_batch", "search_batch_progressive",
+    "pack_codes", "pack_codes_np", "quick_probe", "quick_probe_batch",
+    "unpack_bits",
+    "SearchStats", "search_batch", "search_batch_fused",
+    "search_batch_progressive",
     "RuntimeConfig", "runtime_search", "search_segments",
     "HostSearcher", "HostStats",
     "overall_ratio", "recall_at_k",

@@ -60,14 +60,17 @@ class ProMIPS:
     def search(self, queries: np.ndarray, k: int = 10,
                budget: Optional[int] = None, budget2: Optional[int] = None,
                norm_adaptive: bool = False, cs_prune: bool = False,
-               verification: str = "batched"):
+               verification: str = "fused"):
         """Batched device-mode c-k-AMIP search. queries: (B, d).
 
-        ``verification`` picks the candidate-scoring backend ("batched" =
-        one Pallas matmul per round over the unioned block selection,
-        "scan" = legacy per-query lax.scan). Identical results at the
-        default full budget; a finite ``budget`` caps the shared union tile
-        under "batched" vs each query's own selection under "scan".
+        ``verification`` picks the candidate-scoring backend ("fused" =
+        host-orchestrated block-sparse rounds over the `kernels/block_mips`
+        kernel with pow2-bucketed tiles, "batched" = one full-tile Pallas
+        matmul per round over the unioned block selection, "scan" = legacy
+        per-query lax.scan). "fused" and "batched" are bit-identical at
+        every budget and identical to "scan" at the default full budget; a
+        finite ``budget`` caps the shared union tile under "fused"/"batched"
+        vs each query's own selection under "scan".
         """
         cfg = RuntimeConfig(k=k, budget=budget, budget2=budget2,
                             mode="two_phase", verification=verification,

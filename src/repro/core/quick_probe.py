@@ -140,3 +140,39 @@ def quick_probe(
     rep = table.rep_proj[chosen]
     radius = jnp.sqrt(jnp.sum((rep - q_proj) ** 2))
     return table.rep_row[chosen], radius, any_pass
+
+
+def quick_probe_batch(
+    table: GroupTable,
+    q_proj: jnp.ndarray,
+    q_l1: jnp.ndarray,
+    c: float,
+    x_p: float,
+):
+    """Batch-native Algorithm 2: one fused evaluation for a (B, m) query
+    batch instead of `vmap`-of-per-query. Every step is the per-query
+    computation broadcast over a leading batch axis (same op, same reduction
+    order), so the result is bit-identical to ``vmap(quick_probe)`` — the
+    agreement test in tests/test_fused_verification.py asserts it.
+
+    Returns (rep_row (B,), radius (B,), test_a_passed (B,)).
+    """
+    q_code = pack_codes(q_proj)                                  # (B,)
+    m = q_proj.shape[-1]
+    xor_bits = unpack_bits(table.code[None, :] ^ q_code[:, None], m)  # (B,G,m)
+    lb = (jnp.einsum("bgm,bm->bg", xor_bits, jnp.abs(q_proj))
+          / jnp.sqrt(jnp.float32(m)))                            # (B, G)
+    valid = table.count > 0
+    denom = c * (table.min_l1[None, :] + q_l1[:, None]) ** 2
+    val = lb * lb / jnp.maximum(denom, 1e-30)
+    passes = (val >= x_p) & valid[None, :]
+
+    any_pass = jnp.any(passes, axis=1)
+    inf = jnp.float32(jnp.inf)
+    first_pass = jnp.argmin(jnp.where(passes, lb, inf), axis=1)
+    best_val = jnp.argmax(jnp.where(valid[None, :], val, -inf), axis=1)
+    chosen = jnp.where(any_pass, first_pass, best_val)           # (B,)
+
+    rep = table.rep_proj[chosen]                                 # (B, m)
+    radius = jnp.sqrt(jnp.sum((rep - q_proj) ** 2, axis=-1))
+    return table.rep_row[chosen], radius, any_pass

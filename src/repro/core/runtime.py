@@ -6,13 +6,18 @@ backend (`verification`); the runtime clamps budgets to the index size and
 dispatches to the jit'd implementations in `search_device`:
 
   mode="two_phase"   Algorithm 3 (Quick-Probe + range + compensation round);
-                     verification="batched" unions the per-query block
-                     selections and scores them in one `kernels/ops.mips_score`
-                     call per round (the fast path), "scan" is the legacy
-                     per-query lax.scan, kept as the semantics reference /
-                     benchmark baseline. Results are identical at the default
-                     full budget; a finite ``budget`` caps the SHARED union
-                     tile under "batched" vs each query's own selection under
+                     verification="fused" (default) runs the host-orchestrated
+                     fused block-sparse rounds (`core/search_fused.py`:
+                     `kernels/block_mips` walks the selected pages in place,
+                     tiles sized to next_pow2(union)); "batched" is the
+                     single-graph full-tile union path, bit-identical to
+                     "fused" at every budget (and what "fused" lowers to
+                     inside a jit trace, where host orchestration is
+                     impossible); "scan" is the legacy per-query lax.scan,
+                     kept as the semantics reference / benchmark baseline.
+                     All three are identical at the default full budget; a
+                     finite ``budget`` caps the SHARED union tile under
+                     "fused"/"batched" vs each query's own selection under
                      "scan" (affected queries are flagged ``exhausted``).
   mode="progressive" beyond-paper norm-adaptive frontier search.
 
@@ -31,7 +36,9 @@ import numpy as np
 
 from ..kernels import ops
 from .index import IndexArrays, IndexMeta
+from .search_common import next_pow2
 from .search_device import SearchStats, search_batch, search_batch_progressive
+from .search_fused import search_batch_fused
 
 
 @jax.jit
@@ -50,7 +57,7 @@ def _rescore(x, rows, queries):
 
 
 VALID_MODES = ("two_phase", "progressive")
-VALID_VERIFICATIONS = ("batched", "scan")
+VALID_VERIFICATIONS = ("fused", "batched", "scan")
 
 
 @dataclass(frozen=True)
@@ -68,7 +75,8 @@ class RuntimeConfig:
     budget: Optional[int] = None       # None => all blocks (no truncation)
     budget2: Optional[int] = None      # compensation round; None => budget
     mode: str = "two_phase"            # "two_phase" | "progressive"
-    verification: str = "batched"      # "batched" | "scan" (two_phase only)
+    verification: str = "fused"        # "fused" | "batched" | "scan"
+                                       # (two_phase only)
     norm_adaptive: bool = False
     cs_prune: bool = False
     use_pallas: Optional[bool] = None   # None => Pallas on TPU, jnp oracle off-TPU
@@ -114,12 +122,23 @@ def search(arrays: IndexArrays, meta: IndexMeta, queries,
                                                  budget=budget,
                                                  cs_prune=cfg.cs_prune)
     elif cfg.mode == "two_phase":
-        ids, _, stats = search_batch(arrays, meta, q, k=cfg.k, budget=budget,
-                                     budget2=budget2,
-                                     norm_adaptive=cfg.norm_adaptive,
-                                     cs_prune=cfg.cs_prune,
-                                     verification=cfg.verification,
-                                     use_pallas=cfg.use_pallas)
+        if cfg.verification == "fused" and jax.core.trace_state_clean():
+            # Host-orchestrated fused rounds (pow2-bucketed tiles). Under ANY
+            # ambient trace (jit / shard_map — even when `queries` itself is
+            # a closed-over concrete array, the index arrays may be traced)
+            # the host cannot size tiles, so `search_batch` lowers "fused"
+            # to its bit-identical batched graph instead.
+            ids, _, stats = search_batch_fused(
+                arrays, meta, q, k=cfg.k, budget=budget, budget2=budget2,
+                norm_adaptive=cfg.norm_adaptive, cs_prune=cfg.cs_prune,
+                use_pallas=cfg.use_pallas)
+        else:
+            ids, _, stats = search_batch(arrays, meta, q, k=cfg.k,
+                                         budget=budget, budget2=budget2,
+                                         norm_adaptive=cfg.norm_adaptive,
+                                         cs_prune=cfg.cs_prune,
+                                         verification=cfg.verification,
+                                         use_pallas=cfg.use_pallas)
     else:
         raise ValueError(f"unknown search mode: {cfg.mode!r}")
     return ids, _rescore(arrays.x, stats.rows, q), stats
@@ -128,13 +147,6 @@ def search(arrays: IndexArrays, meta: IndexMeta, queries,
 # ---------------------------------------------------------------------------
 # Segment-aware entry (streaming index, DESIGN.md §8)
 # ---------------------------------------------------------------------------
-
-def next_pow2(t: int) -> int:
-    """Shared jit-shape-bucketing quantizer: the segment over-fetch here and
-    the snapshot delta-prefix in `stream/mutable.py` both use it, keeping the
-    compiled-shape strategy in one place."""
-    return 1 << max(0, int(t) - 1).bit_length()
-
 
 @functools.partial(jax.jit, static_argnames=("k", "use_pallas"))
 def _merge_segments(base_alive, rows, base_ids, base_scores, delta_x,

@@ -28,6 +28,14 @@ import numpy as np
 MIN_SCORE = -1e30
 
 
+def next_pow2(t: int) -> int:
+    """Shared jit-shape-bucketing quantizer: the fused verification tiles
+    (`search_fused`), the streaming segment over-fetch (`runtime`) and the
+    snapshot delta-prefix (`stream/mutable.py`) all use it, keeping the
+    compiled-shape strategy in one place."""
+    return 1 << max(0, int(t) - 1).bit_length()
+
+
 def condition_a_threshold(max_l2sq, q_l2sq, c: float):
     """Condition A rewritten as a threshold on the inner product itself:
 

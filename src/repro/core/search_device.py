@@ -10,9 +10,24 @@ adaptation (DESIGN.md §3):
      Algorithm 3's "extend the range").
 
 All condition/radius arithmetic is imported from `search_common` (the
-backend-neutral core shared with `HostSearcher`). Two verification backends:
+backend-neutral core shared with `HostSearcher`). Selection (Quick-Probe,
+Condition-A thresholds, sphere filter, Condition-B compensation masks) is
+BATCH-NATIVE and shared by every verification backend — `select_frontend` /
+`compensation_masks` below — so the per-round block masks agree across
+backends by construction. Verification backends:
 
-``verification="batched"`` (default, DESIGN.md §3.2) — the two-phase
+``verification="fused"`` (default; `core/search_fused.py`, DESIGN.md §10) —
+  host-orchestrated rounds over the fused block-sparse
+  `kernels/block_mips` kernel: the kernel walks the selected pages of
+  ``arrays.x`` in place (scalar-prefetched slot list, no gathered union
+  tile) with a streaming per-query top-k, and the tile is sized to
+  ``next_pow2(union)`` blocks instead of always the full budget. Results
+  are bit-identical to "batched" at EVERY budget (the tile cap rule is the
+  same); inside a jit trace (e.g. `sharded_search`'s shard_map) the host
+  orchestration is unavailable and ``"fused"`` lowers to the "batched"
+  graph below — identical results, without the bucketing.
+
+``verification="batched"`` (DESIGN.md §3.2) — the single-graph two-phase
   runtime. Per round, the blocks selected by ANY query in the batch are
   unioned, their rows gathered into one (R, d) tile, and ALL queries are
   scored against the tile in a single `kernels/ops.mips_score` call (Pallas
@@ -48,7 +63,7 @@ import jax.numpy as jnp
 from ..kernels import ops
 from . import search_common as sc
 from .index import IndexArrays, IndexMeta
-from .quick_probe import GroupTable, quick_probe
+from .quick_probe import GroupTable, quick_probe_batch
 
 
 class SearchStats(NamedTuple):
@@ -84,26 +99,102 @@ def _group_table(arrays: IndexArrays) -> GroupTable:
     )
 
 
-def _select_blocks(arrays: IndexArrays, q_proj, radius):
-    """Sphere-overlap filter: sub-partitions -> fixed-size blocks.
+def subpart_distances(arrays: IndexArrays, q_proj):
+    """(B, S) projected query -> sub-partition center distances.
 
-    ``radius`` may be a scalar (paper-faithful, global radius) or a (S,)
-    vector of per-sub-partition radii (beyond-paper norm-adaptive mode —
-    see `search_common.adaptive_radii`). Entries < 0 deselect the
-    sub-partition outright (Cauchy-Schwarz pruning).
+    One matmul via the expansion ||c - q||^2 = ||c||^2 - 2 <c, q> + ||q||^2
+    (clamped at 0 against cancellation) instead of a (B, S, m) difference
+    tensor. Computed ONCE per search and reused by both selection rounds —
+    only the radii change between rounds.
     """
-    d_sp = jnp.sqrt(jnp.sum((arrays.sp_center - q_proj[None, :]) ** 2, axis=-1))
-    radius = jnp.broadcast_to(radius, d_sp.shape)
-    sel_sp = sc.sphere_select(d_sp, arrays.sp_radius, radius)  # (S,)
-    csum = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(sel_sp.astype(jnp.int32))])
-    touched = csum[arrays.block_sp_hi] - csum[arrays.block_sp_lo]
-    return touched > 0  # (NB,)
+    center = arrays.sp_center                                  # (S, m)
+    d2 = (jnp.sum(center * center, axis=-1)[None, :]
+          - 2.0 * (q_proj @ center.T)
+          + jnp.sum(q_proj * q_proj, axis=-1)[:, None])        # (B, S)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def blocks_from_radii(arrays: IndexArrays, d_sp, radius):
+    """Batch-native sphere-overlap filter: sub-partitions -> fixed blocks.
+
+    d_sp: (B, S) from `subpart_distances`. ``radius`` may be (B,)
+    (paper-faithful, one radius per query) or (B, S) per-sub-partition radii
+    (beyond-paper norm-adaptive mode — see `search_common.adaptive_radii`).
+    Entries < 0 deselect the sub-partition outright (Cauchy-Schwarz
+    pruning). Returns (B, NB) bool.
+
+    The sub-partition -> block mapping is a gather over the precomputed
+    ``block_sp_idx`` (NB, KMAX) table (a block is touched iff ANY of its
+    sub-partitions is selected) — equivalent to the old per-query cumsum
+    over sp ranges, but O(NB * KMAX) instead of an XLA scan over S. Every
+    verification backend (fused / batched / scan) goes through this one
+    function, so block selections agree across backends by construction.
+    """
+    if radius.ndim == 1:
+        radius = radius[:, None]
+    sel_sp = sc.sphere_select(d_sp, arrays.sp_radius[None, :], radius)
+    gathered = sel_sp[:, jnp.maximum(arrays.block_sp_idx, 0)]  # (B, NB, KMAX)
+    return jnp.any(gathered & (arrays.block_sp_idx >= 0)[None], axis=2)
+
+
+def select_blocks_batch(arrays: IndexArrays, q_proj, radius):
+    """`subpart_distances` + `blocks_from_radii` in one call (standalone
+    callers; the search paths reuse the distances across rounds)."""
+    return blocks_from_radii(arrays, subpart_distances(arrays, q_proj), radius)
 
 
 def adaptive_radii(arrays: IndexArrays, meta: IndexMeta, s_k, q_l2sq, cs_prune: bool):
     """Per-sub-partition norm-adaptive radii (delegates to `search_common`)."""
     return sc.adaptive_radii(arrays.sp_max_l2sq, s_k, q_l2sq, meta.c, meta.x_p,
                              cs_prune=cs_prune, xp=jnp)
+
+
+# ---------------------------------------------------------------------------
+# Batch-native selection frontend (shared by fused / batched / scan)
+# ---------------------------------------------------------------------------
+
+def select_frontend(arrays: IndexArrays, meta: IndexMeta, queries):
+    """Phase 1 of the two-phase runtime for a whole (B, d) batch at once:
+    projection, batched Quick-Probe, Condition-A thresholds and the round-1
+    block selection — no per-query `vmap` anywhere.
+
+    Returns (q_proj (B, m), q_l2sq (B,), d_sp (B, S), r0 (B,), probe_ok (B,),
+    c_half (B,), mask0 (B, NB)); ``d_sp`` is reused by the compensation
+    round so the center-distance matmul runs once per search.
+    """
+    q_proj = queries @ arrays.a
+    q_l1 = jnp.sum(jnp.abs(queries), axis=1)
+    q_l2sq = jnp.sum(queries * queries, axis=1)
+    _, r0, probe_ok = quick_probe_batch(_group_table(arrays), q_proj, q_l1,
+                                        meta.c, meta.x_p)
+    c_half = sc.condition_a_threshold(arrays.max_l2sq, q_l2sq, meta.c)
+    d_sp = subpart_distances(arrays, q_proj)
+    mask0 = blocks_from_radii(arrays, d_sp, r0)
+    return q_proj, q_l2sq, d_sp, r0, probe_ok, c_half, mask0
+
+
+def compensation_masks(arrays: IndexArrays, meta: IndexMeta, d_sp, q_l2sq,
+                       s_k, r0, done_a, mask0, norm_adaptive: bool,
+                       cs_prune: bool):
+    """Condition-B test + compensation-round selection (Algorithm 3 line 12)
+    for the whole batch. ``d_sp`` is the frontend's (B, S) center-distance
+    matrix. Returns (need2 (B,), r1 (B,), mask1 (B, NB)) with ``mask1``
+    already restricted to blocks NOT scanned in round 1.
+    """
+    cond_b = sc.condition_b(r0 * r0, s_k, arrays.max_l2sq, q_l2sq,
+                            meta.c, meta.x_p, xp=jnp)
+    r1 = sc.compensation_radius(s_k, arrays.max_l2sq, q_l2sq,
+                                meta.c, meta.x_p, xp=jnp)
+    need2 = ~(cond_b | done_a)
+    if norm_adaptive:
+        r_comp = sc.adaptive_radii(arrays.sp_max_l2sq[None, :], s_k[:, None],
+                                   q_l2sq[:, None], meta.c, meta.x_p,
+                                   cs_prune=cs_prune, xp=jnp)     # (B, S)
+        r_comp = jnp.where(need2[:, None], r_comp, -1.0)
+    else:
+        r_comp = jnp.where(need2, r1, -1.0)[:, None]              # (B, 1)
+    mask1 = blocks_from_radii(arrays, d_sp, r_comp) & ~mask0
+    return need2, r1, mask1
 
 
 def _merge_topk(top: TopK, scores, rows, k: int) -> TopK:
@@ -178,17 +269,9 @@ def _verify_batched(arrays: IndexArrays, meta: IndexMeta, queries, block_masks,
 def _search_batch_batched(arrays, meta, queries, k, budget, budget2,
                           norm_adaptive, cs_prune, use_pallas):
     """Two-phase runtime: batched selection + one mips_score call per round."""
-    table = _group_table(arrays)
     n_batch = queries.shape[0]
-    q_proj = queries @ arrays.a                               # (B, m)
-    q_l1 = jnp.sum(jnp.abs(queries), axis=1)
-    q_l2sq = jnp.sum(queries * queries, axis=1)
-    _, r0, probe_ok = jax.vmap(
-        lambda qp, ql1: quick_probe(table, qp, ql1, meta.c, meta.x_p)
-    )(q_proj, q_l1)
-
-    c_half = sc.condition_a_threshold(arrays.max_l2sq, q_l2sq, meta.c)  # (B,)
-    mask0 = jax.vmap(lambda qp, r: _select_blocks(arrays, qp, r))(q_proj, r0)
+    q_proj, q_l2sq, d_sp, r0, probe_ok, c_half, mask0 = select_frontend(
+        arrays, meta, queries)
     empty = TopK(scores=jnp.full((n_batch, k), -jnp.inf),
                  rows=jnp.full((n_batch, k), -1, jnp.int32))
     top, pages1, cand1, done_a, lost1 = _verify_batched(
@@ -197,24 +280,11 @@ def _search_batch_batched(arrays, meta, queries, k, budget, budget2,
     # round-2 consumers (~2x wall clock); semantically an identity.
     top, done_a, mask0 = jax.lax.optimization_barrier((top, done_a, mask0))
 
-    # Condition B with the Quick-Probe radius (Algorithm 3 line 12).
+    # Condition B + compensation selection over blocks newly chosen by r'.
     s_k = top.scores[:, k - 1]
-    cond_b = sc.condition_b(r0 * r0, s_k, arrays.max_l2sq, q_l2sq,
-                            meta.c, meta.x_p, xp=jnp)
-    r1 = sc.compensation_radius(s_k, arrays.max_l2sq, q_l2sq,
-                                meta.c, meta.x_p, xp=jnp)
-    need2 = ~(cond_b | done_a)
-
-    # Compensation round over blocks newly selected by r' (r' > r0 here).
-    if norm_adaptive:
-        r_comp = jax.vmap(
-            lambda sk, ql2: adaptive_radii(arrays, meta, sk, ql2, cs_prune)
-        )(s_k, q_l2sq)                                        # (B, S)
-        r_comp = jnp.where(need2[:, None], r_comp, -1.0)
-    else:
-        r_comp = jnp.where(need2, r1, -1.0)[:, None]          # (B, 1) -> bcast
-    mask1 = jax.vmap(lambda qp, r: _select_blocks(arrays, qp, r))(q_proj, r_comp)
-    mask1 = mask1 & ~mask0
+    need2, r1, mask1 = compensation_masks(arrays, meta, d_sp, q_l2sq, s_k,
+                                          r0, done_a, mask0, norm_adaptive,
+                                          cs_prune)
 
     # With an all-False mask1 (every query stopped by A/B in round 1 — the
     # common case) the verification round is an identity on `top` with zero
@@ -292,55 +362,41 @@ def _scan_blocks(arrays, meta, q, q_l2sq, block_mask, top: TopK, k: int, budget:
 
 def _search_batch_scan(arrays, meta, queries, k, budget, budget2,
                        norm_adaptive, cs_prune):
-    table = _group_table(arrays)
+    n_batch = queries.shape[0]
+    q_proj, q_l2sq, d_sp, r0, probe_ok, c_half, mask0 = select_frontend(
+        arrays, meta, queries)
 
-    def one(q):
-        q_proj = q @ arrays.a
-        q_l1 = jnp.sum(jnp.abs(q))
-        q_l2sq = jnp.sum(q * q)
-        _, r0, probe_ok = quick_probe(table, q_proj, q_l1, meta.c, meta.x_p)
+    empty = TopK(scores=jnp.full((n_batch, k), -jnp.inf),
+                 rows=jnp.full((n_batch, k), -1, jnp.int32))
+    top, pages1, cand1, done_a = jax.vmap(
+        lambda q, ql2, m, t: _scan_blocks(arrays, meta, q, ql2, m, t, k, budget)
+    )(queries, q_l2sq, mask0, empty)
 
-        empty = TopK(scores=jnp.full((k,), -jnp.inf), rows=jnp.full((k,), -1, jnp.int32))
-        mask0 = _select_blocks(arrays, q_proj, r0)
-        top, pages1, cand1, done_a = _scan_blocks(
-            arrays, meta, q, q_l2sq, mask0, empty, k, budget
-        )
+    # Condition B + compensation selection (same batch-native functions as
+    # the batched/fused backends, so the masks agree bit-for-bit).
+    s_k = top.scores[:, k - 1]
+    need2, r1, mask1 = compensation_masks(arrays, meta, d_sp, q_l2sq, s_k,
+                                          r0, done_a, mask0, norm_adaptive,
+                                          cs_prune)
+    top, pages2, cand2, _ = jax.vmap(
+        lambda q, ql2, m, t: _scan_blocks(arrays, meta, q, ql2, m, t, k, budget2)
+    )(queries, q_l2sq, mask1, top)
 
-        # Condition B with the Quick-Probe radius (Algorithm 3 line 12).
-        s_k = top.scores[k - 1]
-        cond_b = sc.condition_b(r0 * r0, s_k, arrays.max_l2sq, q_l2sq,
-                                meta.c, meta.x_p, xp=jnp)
-        r1 = sc.compensation_radius(s_k, arrays.max_l2sq, q_l2sq,
-                                    meta.c, meta.x_p, xp=jnp)
-        need2 = ~(cond_b | done_a)
-
-        # Compensation round over blocks newly selected by r' (r' > r0 here).
-        if norm_adaptive:
-            r_comp = adaptive_radii(arrays, meta, s_k, q_l2sq, cs_prune)
-            r_comp = jnp.where(need2, r_comp, -1.0)
-        else:
-            r_comp = jnp.where(need2, r1, -1.0)
-        mask1 = _select_blocks(arrays, q_proj, r_comp) & ~mask0
-        top, pages2, cand2, _ = _scan_blocks(
-            arrays, meta, q, q_l2sq, mask1, top, k, budget2
-        )
-        exhausted = (jnp.sum(mask0.astype(jnp.int32)) > budget) | (
-            need2 & (jnp.sum(mask1.astype(jnp.int32)) > budget2)
-        )
-        stats = SearchStats(
-            pages=pages1 + pages2,
-            candidates=cand1 + cand2,
-            probe_passed=probe_ok,
-            used_round2=need2,
-            radius0=r0,
-            radius1=jnp.where(need2, r1, 0.0),
-            exhausted=exhausted,
-            rows=top.rows,
-        )
-        ids = jnp.where(top.rows >= 0, arrays.ids[jnp.maximum(top.rows, 0)], -1)
-        return ids, top.scores, stats
-
-    return jax.vmap(one)(queries)
+    exhausted = (jnp.sum(mask0.astype(jnp.int32), axis=1) > budget) | (
+        need2 & (jnp.sum(mask1.astype(jnp.int32), axis=1) > budget2)
+    )
+    stats = SearchStats(
+        pages=pages1 + pages2,
+        candidates=cand1 + cand2,
+        probe_passed=probe_ok,
+        used_round2=need2,
+        radius0=r0,
+        radius1=jnp.where(need2, r1, 0.0),
+        exhausted=exhausted,
+        rows=top.rows,
+    )
+    ids = jnp.where(top.rows >= 0, arrays.ids[jnp.maximum(top.rows, 0)], -1)
+    return ids, top.scores, stats
 
 
 @functools.partial(
@@ -368,7 +424,11 @@ def search_batch(
     into one Pallas matmul per round (budget semantics differ when finite —
     see module docstring).
     """
-    if verification == "batched":
+    if verification in ("batched", "fused"):
+        # "fused" inside a jit trace cannot host-orchestrate its bucketed
+        # tiles; it lowers to the bit-identical batched graph (the eager
+        # fused driver lives in `core/search_fused.py` and is dispatched by
+        # `core/runtime.search` before this point).
         return _search_batch_batched(arrays, meta, queries, k, budget, budget2,
                                      norm_adaptive, cs_prune, use_pallas)
     if verification == "scan":

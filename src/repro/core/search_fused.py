@@ -1,0 +1,235 @@
+"""Host-orchestrated fused two-phase search (``verification="fused"``).
+
+The "batched" backend builds a jit graph whose verification tile is ALWAYS
+``budget`` blocks (the full index at the guarantee-default budget): every
+round gathers a (budget * page_rows, d) union tile with `jnp.take`, scores
+all of it, and reconstructs the sequential semantics through five
+(B, R)-shaped boolean intermediates — so at n=8000 the "pruned" path moves
+strictly more bytes than the brute-force matmul it is supposed to beat
+(DESIGN.md §10 has the traffic accounting).
+
+This driver splits the search into per-round device calls and keeps the
+block *selection* on device but the *tile sizing* on host:
+
+  1. `select_frontend` (one jit call) -> per-query round-1 masks (B, NB);
+  2. the union of selected blocks is pulled to host (NB bools/query), and
+     the verification tile is sized to ``next_pow2(union_count)`` blocks —
+     pow2 BUCKETING, so the per-shape jit cache stays O(log n_blocks) —
+     instead of always ``budget``;
+  3. `kernels/ops.block_mips` (fused kernel on TPU / its lean jnp oracle
+     elsewhere) walks exactly those slots in place and returns the
+     streaming top-k + per-slot hit counts from which the Condition-A
+     stop/pages/candidates accounting is reconstructed;
+  4. `compensation_masks` (one jit call) -> Condition B + round-2 masks;
+     a compensation round whose union is EMPTY is skipped on host
+     outright — no `lax.cond` that still pays a full-tile gather.
+
+Results (ids, scores, and every `SearchStats` field) are bit-identical to
+``verification="batched"`` at EVERY budget: the tile-cap rule — the first
+``budget`` union blocks in layout order — is the same; the bucketed tile
+only drops slots the batched tile masks out anyway. The parity suite in
+tests/test_fused_verification.py asserts this three-way (fused / batched /
+scan) at full budget and pairwise (fused / batched) at finite budgets.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from .index import IndexArrays, IndexMeta
+from .search_common import next_pow2
+from .search_device import (SearchStats, TopK, compensation_masks,
+                            select_frontend)
+
+# Unions covering at least this fraction of all blocks take the dense path:
+# the tile is every block in place (sel still masks per query — exactly the
+# batched full tile), skipping the row gather entirely.
+DENSE_FRAC = 0.9
+
+# (n_slots, batch, k, dense) recorded each time `_verify` RETRACES — the
+# pow2 bucketing's jit-cache bound is asserted against this in
+# tests/test_fused_verification.py.
+VERIFY_TRACES: list = []
+
+
+@functools.partial(jax.jit, static_argnames=("meta",))
+def _frontend(arrays: IndexArrays, meta: IndexMeta, queries):
+    return select_frontend(arrays, meta, queries)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "page_rows", "dense", "use_pallas",
+                                    "want_scores"))
+def _verify(arrays: IndexArrays, queries, slots, sel, init_s, init_r, c_half,
+            k: int, page_rows: int, dense: bool, use_pallas: Optional[bool],
+            want_scores: bool = False):
+    """One fused verification round; returns (TopK, pages, cand, done_a,
+    scores_cache). ``want_scores`` (dense oracle rounds only) additionally
+    returns the full (B, n_pad) score matrix so a later compensation round
+    can reuse it instead of re-scoring (`_verify_cached`)."""
+    VERIFY_TRACES.append((int(slots.shape[0]), int(queries.shape[0]), k,
+                          dense, want_scores))
+    valid = arrays.ids >= 0
+    top_s, top_r, cnt, pages, cand = ops.block_mips(
+        arrays.x, valid, queries, slots, sel, init_s, init_r, c_half,
+        k=k, page_rows=page_rows, dense=dense, use_pallas=use_pallas)
+    # "running k-th best >= threshold" <=> "n0 + total selected hits >= k"
+    # (hits past the stop block only ever re-confirm an already-true stop).
+    n0 = jnp.sum(init_s >= c_half[:, None], axis=1)
+    done_a = (n0 + jnp.sum(cnt, axis=1)) >= k
+    cache = None
+    if want_scores:
+        # the identical full-matrix product the dense round just consumed —
+        # XLA CSEs it with the in-round matmul, so this costs nothing extra
+        cache = queries @ arrays.x.T
+    return TopK(scores=top_s, rows=top_r), pages, cand, done_a, cache
+
+
+@functools.partial(jax.jit, static_argnames=("k", "page_rows"))
+def _verify_cached(arrays: IndexArrays, scores_full, slots, sel, init_s,
+                   init_r, c_half, k: int, page_rows: int):
+    """Compensation round over a dense previous round's cached scores —
+    no new dot products (see `ops.block_mips_cached`)."""
+    VERIFY_TRACES.append((int(slots.shape[0]), int(scores_full.shape[0]), k,
+                          "cached", False))
+    valid = arrays.ids >= 0
+    top_s, top_r, cnt, pages, cand = ops.block_mips_cached(
+        scores_full, valid, slots, sel, init_s, init_r, c_half,
+        k=k, page_rows=page_rows)
+    n0 = jnp.sum(init_s >= c_half[:, None], axis=1)
+    done_a = (n0 + jnp.sum(cnt, axis=1)) >= k
+    return TopK(scores=top_s, rows=top_r), pages, cand, done_a
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("meta", "norm_adaptive", "cs_prune"))
+def _round2(arrays: IndexArrays, meta: IndexMeta, d_sp, q_l2sq, s_k, r0,
+            done_a, mask0, norm_adaptive: bool, cs_prune: bool):
+    return compensation_masks(arrays, meta, d_sp, q_l2sq, s_k, r0, done_a,
+                              mask0, norm_adaptive, cs_prune)
+
+
+def _plan_tile(mask: np.ndarray, cap: int, n_blocks: int):
+    """Size one verification tile from the host-side (B, NB) selection.
+
+    Returns (slots (NS,) i32, sel (B, NS) bool, lost (B,) bool, dense) or
+    None when no block is selected (the round is skipped outright — an
+    identity on the carried top-k with zero pages/candidates, exactly what
+    the batched backend's all-masked tile computes the long way).
+
+    NS = min(next_pow2(union), cap): at most 2x the live work, from a set
+    of O(log n_blocks) distinct shapes. When the union would cover nearly
+    everything anyway (>= DENSE_FRAC) and the cap allows, the tile is ALL
+    blocks in place (``dense``) so the kernel/oracle skips the row gather.
+    ``lost`` flags queries whose selection exceeds the ``cap``-block tile —
+    the same union-tile budget rule as ``verification="batched"``.
+    """
+    union = mask.any(axis=0)
+    n_union = int(union.sum())
+    if n_union == 0:
+        return None
+    n_batch = mask.shape[0]
+    if n_union >= DENSE_FRAC * n_blocks and cap >= n_blocks:
+        slots = np.arange(n_blocks, dtype=np.int32)
+        return slots, mask, np.zeros(n_batch, bool), True
+    n_slots = min(next_pow2(n_union), cap)
+    ublocks = np.nonzero(union)[0]                  # ascending layout order
+    take = ublocks[: min(n_union, n_slots)]
+    slots = np.zeros(n_slots, np.int32)
+    slots[: len(take)] = take
+    sel = np.zeros((n_batch, n_slots), bool)
+    sel[:, : len(take)] = mask[:, take]
+    if n_union > n_slots:
+        lost = mask[:, ublocks[n_slots:]].any(axis=1)
+    else:
+        lost = np.zeros(n_batch, bool)
+    return slots, sel, lost, False
+
+
+def search_batch_fused(
+    arrays: IndexArrays,
+    meta: IndexMeta,
+    queries: jnp.ndarray,
+    k: int = 10,
+    budget: int = 64,
+    budget2: int = 64,
+    norm_adaptive: bool = False,
+    cs_prune: bool = False,
+    use_pallas: Optional[bool] = None,
+):
+    """c-k-AMIP search, fused backend. Same contract as `search_batch`.
+
+    Eager-only (host-orchestrated): call it outside jit. `core/runtime.search`
+    routes ``verification="fused"`` here when not tracing and to the
+    bit-identical batched graph otherwise.
+    """
+    n_blocks = meta.n_blocks
+    n_batch = queries.shape[0]
+    cap = min(budget, n_blocks)
+    cap2 = min(budget2, n_blocks)
+
+    q_proj, q_l2sq, d_sp, r0, probe_ok, c_half, mask0 = _frontend(
+        arrays, meta, queries)
+    zero = jnp.zeros(n_batch, jnp.int32)
+    false = jnp.zeros(n_batch, bool)
+    # strong f32 (explicit dtype): round-2 carries _verify's strong-typed
+    # output back in, and a weak-typed round-1 init would double every
+    # bucket's jit-cache entry
+    top = TopK(scores=jnp.full((n_batch, k), -jnp.inf, jnp.float32),
+               rows=jnp.full((n_batch, k), -1, jnp.int32))
+
+    scores_cache = None
+    plan = _plan_tile(np.asarray(mask0), cap, n_blocks)
+    if plan is None:
+        pages1, cand1, done_a, lost1 = zero, zero, false, false
+    else:
+        slots, sel, lost_np, dense = plan
+        # A dense oracle round scores the whole corpus in place; keep that
+        # (B, n_pad) product so the compensation round needs NO new matmul.
+        want_scores = dense and not ops._resolve(use_pallas)
+        top, pages1, cand1, done_a, scores_cache = _verify(
+            arrays, queries, jnp.asarray(slots), jnp.asarray(sel),
+            top.scores, top.rows, c_half, k, meta.page_rows, dense,
+            use_pallas, want_scores)
+        lost1 = jnp.asarray(lost_np)
+
+    s_k = top.scores[:, k - 1]
+    need2, r1, mask1 = _round2(arrays, meta, d_sp, q_l2sq, s_k, r0, done_a,
+                               mask0, norm_adaptive, cs_prune)
+
+    plan = _plan_tile(np.asarray(mask1), cap2, n_blocks)
+    if plan is None:
+        pages2, cand2, lost2 = zero, zero, false
+    else:
+        slots, sel, lost_np, dense = plan
+        if scores_cache is not None:
+            top, pages2, cand2, _ = _verify_cached(
+                arrays, scores_cache, jnp.asarray(slots), jnp.asarray(sel),
+                top.scores, top.rows, c_half, k, meta.page_rows)
+        else:
+            top, pages2, cand2, _, _ = _verify(
+                arrays, queries, jnp.asarray(slots), jnp.asarray(sel),
+                top.scores, top.rows, c_half, k, meta.page_rows, dense,
+                use_pallas, False)
+        lost2 = jnp.asarray(lost_np)
+
+    stats = SearchStats(
+        pages=pages1 + pages2,
+        candidates=cand1 + cand2,
+        probe_passed=probe_ok,
+        used_round2=need2,
+        radius0=r0,
+        radius1=jnp.where(need2, r1, 0.0),
+        exhausted=lost1 | (need2 & lost2),
+        rows=top.rows,
+    )
+    ids = jnp.where(top.rows >= 0, arrays.ids[jnp.maximum(top.rows, 0)], -1)
+    return ids, top.scores, stats
+
+
+__all__ = ["search_batch_fused", "VERIFY_TRACES", "DENSE_FRAC"]

@@ -122,7 +122,10 @@ def sharded_search(
     backend); the default is the progressive norm-adaptive frontier. Pass
     e.g. ``RuntimeConfig(mode="two_phase", verification="batched",
     norm_adaptive=True)`` to run the batched Pallas-verification path on
-    every shard.
+    every shard. ``verification="fused"`` cannot host-orchestrate inside
+    this shard_map and lowers to the bit-identical batched graph; the
+    host-merge path (`MutableShardedProMIPS.search`) runs shard searches
+    eagerly and DOES get the fused driver.
     """
     meta = sharded.meta
     # ``budget``/``cs_prune`` are the legacy knobs for the default config; a

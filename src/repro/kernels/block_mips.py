@@ -1,0 +1,189 @@
+"""Pallas TPU kernel: fused block-sparse ProMIPS verification.
+
+The two-phase runtime's old "batched" backend gathers the union of every
+query's selected blocks into one dense (R, d) tile (`jnp.take`), scores it,
+then rebuilds the sequential Condition-A semantics from a (B, R) score
+matrix plus five same-shape boolean intermediates (DESIGN.md §10 has the
+traffic math).  This kernel removes ALL of that: the grid walks the selected
+blocks of ``x`` **in place** in the paged layout — a scalar-prefetched slot
+list steers each grid step's DMA straight at one 4-KB page of ``x`` in HBM,
+so no gathered tile and no (B, R) intermediates ever exist.  Per step it
+
+  1. scores one page against the whole query batch (one small MXU matmul),
+  2. emits that slot's per-query >=-threshold hit count (``cnt``),
+  3. updates the carried per-query hit total ``h`` (VMEM scratch) — a block
+     is *live* iff the query selected it and ``h < k`` (the exact
+     sequential-scan Condition-A stop: "at least k rows scoring >=
+     threshold in earlier blocks" <=> "running k-th best >= threshold"),
+  4. accumulates the logical page / candidate counts for live blocks, and
+  5. merges the page's live rows into a per-query streaming top-k via a
+     rank-select (stable descending order, ties to the lower index — the
+     same rule as `jax.lax.top_k` and `search_common.topk_merge`, so the
+     streamed result is bit-identical to one global top-k).
+
+Grid steps run in layout (ascending block) order, which both preserves the
+sequential-scan semantics and matches the coalesced HBM read pattern the
+iDistance layout was designed for.
+
+Shapes: one page per grid step, so the x block is (page_rows, d).  On a
+real TPU, d should be a multiple of 128 lanes for full-speed tiles (the
+compiler pads otherwise); the rank-select holds a (B, k + page_rows)^2
+comparison cube in VMEM, so ``k`` is capped at `MAX_K` (= 128) —
+`ops.block_mips` falls back to the jnp oracle beyond that.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Streaming-top-k merge cube is (B, k+page_rows, k+page_rows) in VMEM; cap k
+# so it stays well under the ~16 MB budget (see ops.block_mips fallback).
+MAX_K = 128
+
+
+def _rank_topk(comb_s, comb_r, k: int):
+    """Stable descending top-k of ``comb_s`` (B, J) with ties to the lower
+    index — bit-compatible with `jax.lax.top_k` — via a rank-select that
+    needs no sort primitive (Mosaic-friendly: compares + one-hot sums)."""
+    j = comb_s.shape[1]
+    col = jax.lax.broadcasted_iota(jnp.int32, (j, j), 0)   # j' (compared-to)
+    row = jax.lax.broadcasted_iota(jnp.int32, (j, j), 1)   # j  (ranked elem)
+    gt = comb_s[:, :, None] < comb_s[:, None, :]           # s[j'] > s[j]
+    tie = (comb_s[:, :, None] == comb_s[:, None, :]) & (col < row)[None]
+    rank = jnp.sum((gt | tie).astype(jnp.int32), axis=2)   # (B, J), a perm
+    slot = jax.lax.broadcasted_iota(jnp.int32, (j, k), 1)[None]
+    hit = rank[:, :, None] == slot                          # (B, J, k)
+    top_s = jnp.sum(jnp.where(hit, comb_s[:, :, None], 0.0), axis=1)
+    top_r = jnp.sum(jnp.where(hit, comb_r[:, :, None], 0), axis=1)
+    return top_s, top_r
+
+
+def _kernel(slots_ref, x_ref, valid_ref, q_ref, sel_ref, chalf_ref,
+            inits_ref, initr_ref,
+            tops_ref, topr_ref, cnt_ref, pages_ref, cand_ref,
+            h_ref, *, k: int, page_rows: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        tops_ref[...] = inits_ref[...]
+        topr_ref[...] = initr_ref[...]
+        h_ref[...] = jnp.sum(
+            (inits_ref[...] >= chalf_ref[...]).astype(jnp.int32),
+            axis=1, keepdims=True)
+        pages_ref[...] = jnp.zeros_like(pages_ref)
+        cand_ref[...] = jnp.zeros_like(cand_ref)
+
+    x = x_ref[...].astype(jnp.float32)                     # (P, d) — one page
+    q = q_ref[...].astype(jnp.float32)                     # (B, d)
+    scores = jax.lax.dot_general(                          # (P, B)
+        x, q, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    valid = valid_ref[...] > 0                             # (P, 1)
+    sel = sel_ref[...] > 0                                 # (B, 1)
+    c_half = chalf_ref[...]                                # (B, 1)
+    h = h_ref[...]                                         # (B, 1)
+
+    # Per-slot >=-threshold hit count (in SELECTED blocks; the carried h is
+    # n0 + the running cumsum, so "h < k" is exactly ~done_before).
+    ge = (scores >= c_half[:, 0][None, :]) & valid         # (P, B)
+    cnt = (jnp.sum(ge.astype(jnp.int32), axis=0)[:, None]
+           * sel.astype(jnp.int32))                        # (B, 1)
+    cnt_ref[...] = cnt
+
+    live = sel & (h < k)                                   # (B, 1)
+    pages_ref[...] += live.astype(jnp.int32)
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    cand_ref[...] += live.astype(jnp.int32) * n_valid
+    h_ref[...] = h + cnt
+
+    # Streaming top-k over this page's live rows.
+    rowid = (slots_ref[i] * page_rows
+             + jax.lax.broadcasted_iota(jnp.int32, (page_rows, 1), 0))
+    mask = valid & live[:, 0][None, :]                     # (P, B)
+    masked = jnp.where(mask, scores, -jnp.inf)
+    rows = jnp.where(mask, rowid, -1)                      # (P, B) bcast rowid
+    comb_s = jnp.concatenate([tops_ref[...], masked.T], axis=1)  # (B, k+P)
+    comb_r = jnp.concatenate([topr_ref[...], rows.T], axis=1)
+    top_s, top_r = _rank_topk(comb_s, comb_r, k)
+    tops_ref[...] = top_s
+    topr_ref[...] = top_r
+
+
+@functools.partial(jax.jit, static_argnames=("k", "page_rows", "interpret"))
+def block_mips(
+    x: jax.Array,
+    valid: jax.Array,
+    q: jax.Array,
+    slots: jax.Array,
+    sel: jax.Array,
+    init_scores: jax.Array,
+    init_rows: jax.Array,
+    c_half: jax.Array,
+    *,
+    k: int,
+    page_rows: int,
+    interpret: bool = False,
+):
+    """Fused block-sparse verification round over the paged layout.
+
+    x: (n_pad, d) rows in paged layout; valid: (n_pad,) bool/int (id >= 0);
+    q: (B, d); slots: (NS,) int32 block ids to walk, ascending layout order
+    (padding slots allowed — their ``sel`` column must be False);
+    sel: (B, NS) per-query selection; init_scores/init_rows: (B, k) carried
+    top-k, descending (-inf / -1 empties); c_half: (B,) Condition-A
+    thresholds.
+
+    Returns (top_scores (B, k), top_rows (B, k) i32, cnt (B, NS) i32,
+    pages (B,) i32, cand (B,) i32).  Semantics are exactly one
+    `search_device._verify_batched` round restricted to ``slots`` — the
+    parity contract `ref.block_mips_ref` pins down.
+    """
+    assert k <= MAX_K, f"block_mips supports k <= {MAX_K}, got {k}"
+    n_slots = slots.shape[0]
+    b = q.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_slots,),
+        in_specs=[
+            pl.BlockSpec((page_rows, x.shape[1]), lambda i, s: (s[i], 0)),
+            pl.BlockSpec((page_rows, 1), lambda i, s: (s[i], 0)),
+            pl.BlockSpec((b, q.shape[1]), lambda i, s: (0, 0)),
+            pl.BlockSpec((b, 1), lambda i, s: (0, i)),
+            pl.BlockSpec((b, 1), lambda i, s: (0, 0)),
+            pl.BlockSpec((b, k), lambda i, s: (0, 0)),
+            pl.BlockSpec((b, k), lambda i, s: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, k), lambda i, s: (0, 0)),
+            pl.BlockSpec((b, k), lambda i, s: (0, 0)),
+            pl.BlockSpec((b, 1), lambda i, s: (0, i)),
+            pl.BlockSpec((b, 1), lambda i, s: (0, 0)),
+            pl.BlockSpec((b, 1), lambda i, s: (0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((b, 1), jnp.int32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, k=k, page_rows=page_rows),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+            jax.ShapeDtypeStruct((b, n_slots), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(slots.astype(jnp.int32),
+      x,
+      valid.astype(jnp.int32).reshape(-1, 1),
+      q,
+      sel.astype(jnp.int32),
+      c_half.astype(jnp.float32).reshape(-1, 1),
+      init_scores.astype(jnp.float32),
+      init_rows.astype(jnp.int32))
+    top_s, top_r, cnt, pages, cand = out
+    return top_s, top_r, cnt, pages[:, 0], cand[:, 0]

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 
 from . import ref
 from .binary_probe import binary_probe_lb as _binary_probe_pallas
+from .block_mips import MAX_K as BLOCK_MIPS_MAX_K
+from .block_mips import block_mips as _block_mips_pallas
 from .decode_attention import decode_attention as _decode_attention_pallas
 from .mips_topk import mips_score as _mips_score_pallas
 
@@ -28,16 +30,83 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _resolve(use_pallas: Optional[bool]) -> bool:
+    return (jax.default_backend() == "tpu") if use_pallas is None else use_pallas
+
+
 def mips_score(x, q, valid, *, use_pallas: Optional[bool] = None, **block_kwargs):
-    if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
-    if not use_pallas:
+    if not _resolve(use_pallas):
         return ref.mips_score_ref(x, q, valid)
     return _mips_score_pallas(x, q, valid, interpret=_interpret(), **block_kwargs)
 
 
-def mips_topk(x, q, valid, k: int, *, use_pallas: bool = True, **block_kwargs):
-    """Fused verification scan + top-k: returns (scores (B,k), rows (B,k))."""
+def block_mips(x, valid, q, slots, sel, init_scores, init_rows, c_half, *,
+               k: int, page_rows: int, dense: bool = False,
+               use_pallas: Optional[bool] = None):
+    """Fused block-sparse verification round (the two-phase hot path).
+
+    Walks ``slots`` pages of ``x`` in place and returns (top_scores (B, k),
+    top_rows (B, k), cnt (B, NS), pages (B,), cand (B,)) — see
+    `block_mips.block_mips`.  Backend-aware default like `mips_score`;
+    ``k > BLOCK_MIPS_MAX_K`` (streaming over-fetch) always takes the oracle,
+    whose VMEM-free merge has no k cap.
+    """
+    if not _resolve(use_pallas) or k > BLOCK_MIPS_MAX_K:
+        return ref.block_mips_ref(x, valid, q, slots, sel, init_scores,
+                                  init_rows, c_half, k=k, page_rows=page_rows,
+                                  dense=dense)
+    return _block_mips_pallas(x, valid, q, slots, sel, init_scores, init_rows,
+                              c_half, k=k, page_rows=page_rows,
+                              interpret=_interpret())
+
+
+def block_mips_cached(scores_full, valid, slots, sel, init_scores, init_rows,
+                      c_half, *, k: int, page_rows: int):
+    """Oracle-only compensation round over a cached (B, n_pad) score matrix
+    (see `ref.block_mips_cached_ref`). The fused driver uses it when the
+    previous round already scored the whole corpus in place — zero new dot
+    products; on TPU the kernel streams pages instead, so there is no
+    Pallas variant."""
+    return ref.block_mips_cached_ref(scores_full, valid, slots, sel,
+                                     init_scores, init_rows, c_half,
+                                     k=k, page_rows=page_rows)
+
+
+def mips_topk(x, q, valid, k: int, *, use_pallas: Optional[bool] = None,
+              page_rows: int = 32, **block_kwargs):
+    """Fused verification scan + top-k: returns (scores (B,k), rows (B,k)).
+
+    Backend-aware default (``use_pallas=None`` => Pallas on TPU, jnp oracle
+    elsewhere — previously this defaulted to True, silently putting off-TPU
+    callers on interpret mode while `mips_score` did not). On the Pallas
+    path the scan is routed through the fused `block_mips` kernel: the
+    corpus is walked ``page_rows`` rows at a time with a streaming top-k,
+    so no (R, B) score matrix is materialized. ``page_rows`` is kept small
+    because the kernel's rank-select holds (B, k+page_rows)^2 comparison
+    cubes in VMEM. On the fused route rows with fewer than k valid
+    candidates come back as -1 with -inf scores; `mips_score` ``block_*``
+    kwargs are score-matrix tile sizes, so passing any routes through the
+    score+`lax.top_k` pair instead (there they keep their meaning —
+    empty slots are then NEG_INF with arbitrary rows, as before this PR).
+    """
+    if _resolve(use_pallas) and k <= BLOCK_MIPS_MAX_K and not block_kwargs:
+        r, d = x.shape
+        b = q.shape[0]
+        rp = -(-r // page_rows) * page_rows
+        xpad = jnp.pad(x, ((0, rp - r), (0, 0)))
+        vpad = jnp.pad(valid.astype(jnp.int32), (0, rp - r))
+        n_blocks = rp // page_rows
+        slots = jnp.arange(n_blocks, dtype=jnp.int32)
+        sel = jnp.ones((b, n_blocks), jnp.int32)
+        init_s = jnp.full((b, k), -jnp.inf, jnp.float32)
+        init_r = jnp.full((b, k), -1, jnp.int32)
+        # c_half above any score => cnt never trips the Condition-A stop and
+        # every selected page stays live: a plain full-corpus top-k scan.
+        c_half = jnp.full((b,), jnp.finfo(jnp.float32).max)
+        top, rows, _, _, _ = _block_mips_pallas(
+            xpad, vpad, q, slots, sel, init_s, init_r, c_half,
+            k=k, page_rows=page_rows, interpret=_interpret())
+        return top, rows
     scores = mips_score(x, q, valid, use_pallas=use_pallas, **block_kwargs)  # (R, B)
     top, idx = jax.lax.top_k(scores.T, k)  # (B, k)
     return top, idx

@@ -63,6 +63,57 @@ def test_ops_wrappers_route(rng):
     np.testing.assert_allclose(np.asarray(top), want, atol=1e-4)
 
 
+@pytest.mark.parametrize("nb,p,d,b,k,ns", [
+    (12, 8, 32, 5, 4, 8), (30, 16, 64, 9, 10, 16), (6, 8, 48, 3, 12, 6),
+    (20, 8, 128, 17, 1, 4)])
+def test_block_mips_sweep(rng, nb, p, d, b, k, ns):
+    """Fused block-sparse verification kernel (interpret) vs jnp oracle:
+    streaming top-k, per-slot hit counts, Condition-A page/candidate
+    accounting — with padding slots, invalid rows and carried-in tops."""
+    from repro.kernels.block_mips import block_mips
+
+    n = nb * p
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    valid = jnp.asarray(rng.rand(n) > 0.15)
+    q = jnp.asarray(rng.standard_normal((b, d)), jnp.float32)
+    blocks = np.sort(rng.permutation(nb)[: ns - 1])
+    slots = jnp.asarray(np.concatenate([blocks, [0]]), jnp.int32)  # pad slot
+    sel = jnp.asarray(rng.rand(b, ns) > 0.4).at[:, ns - 1].set(False)
+    init_s = jnp.sort(jnp.asarray(rng.standard_normal((b, k)), jnp.float32),
+                      axis=1)[:, ::-1]
+    init_r = jnp.asarray(rng.randint(0, n, (b, k)), jnp.int32)
+    c_half = jnp.asarray(rng.standard_normal(b) * 2, jnp.float32)
+
+    got = block_mips(x, valid, q, slots, sel, init_s, init_r, c_half,
+                     k=k, page_rows=p, interpret=True)
+    want = ref.block_mips_ref(x, valid, q, slots, sel, init_s, init_r, c_half,
+                              k=k, page_rows=p)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               atol=1e-4)
+    for name, g, w in zip(("top_r", "cnt", "pages", "cand"),
+                          got[1:], want[1:]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+
+
+def test_mips_topk_defaults_and_fused_route(rng):
+    """mips_topk defaults to the backend-aware path (oracle off-TPU, no
+    silent interpret mode) and its Pallas route — the fused block_mips
+    streaming top-k — matches the oracle's score+lax.top_k result."""
+    x = jnp.asarray(rng.standard_normal((300, 64)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((6, 64)), jnp.float32)
+    valid = jnp.ones(300, bool)
+    top_d, idx_d = ops.mips_topk(x, q, valid, k=5)            # default: None
+    top_o, idx_o = ops.mips_topk(x, q, valid, k=5, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(top_d), np.asarray(top_o))
+    np.testing.assert_array_equal(np.asarray(idx_d), np.asarray(idx_o))
+    top_p, idx_p = ops.mips_topk(x, q, valid, k=5, use_pallas=True,
+                                 page_rows=64)
+    np.testing.assert_allclose(np.asarray(top_p), np.asarray(top_o),
+                               atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(idx_p), np.asarray(idx_o))
+
+
 def test_flash_train_attention_grads(rng):
     """Training flash attention (custom_vjp) vs naive softmax attention."""
     from repro.models.attention import _flash_causal
