@@ -461,6 +461,106 @@ def _bench_runtime_large():
     return rec
 
 
+def bench_sharded(quick: bool = True):
+    """Sharded fan-out (ISSUE 5): the in-graph fused driver inside
+    `sharded_search`'s shard_map vs the batched graph, at the LARGE_N point
+    (n=100k) across device counts. Writes BENCH_sharded.json at the repo
+    root (benchmarks/run.py appends it to results/bench/history.jsonl).
+
+    Run under ``--xla_force_host_platform_device_count=8`` (benchmarks/run.py
+    --sharded sets the flag itself before jax initializes); device counts
+    that exceed the actual device count are skipped, so the bench degrades
+    gracefully to a single-device point. Per count the corpus is re-sharded
+    (shard count == mesh size — `build_sharded`'s contract) and the SAME
+    fused-vs-batched interleaved-rep protocol as `bench_search_runtime`
+    guards the ratio against this host's wall-clock drift. The CI perf
+    guard asserts ``speedup_sharded_fused_vs_batched >= 1`` at the largest
+    count (scripts/ci.sh).
+    """
+    import dataclasses
+    import json
+    import os
+
+    import jax
+
+    from repro.baselines.exact import exact_topk
+    from repro.core import recall_at_k
+    from repro.core.runtime import RuntimeConfig
+    from repro.core.sharded import (build_sharded, device_put_sharded_index,
+                                    sharded_search)
+    from repro.launch.mesh import make_mesh_compat
+
+    cfg = LARGE_N
+    counts = [c for c in ((1, 2, 8) if quick else (1, 2, 4, 8))
+              if c <= jax.device_count()]
+    x, q = _large_corpus()
+    eids, _ = exact_topk(x, q, cfg["k"])
+    cfg_f = RuntimeConfig(mode="two_phase", verification="fused",
+                          norm_adaptive=True, cs_prune=True)
+    cfg_b = dataclasses.replace(cfg_f, verification="batched")
+
+    rec = {"n": cfg["n"], "d": cfg["d"], "batch": cfg["n_q"], "k": cfg["k"],
+           "jax_device_count": jax.device_count(), "device_counts": counts,
+           "points": {}}
+    rows = []
+    for n_dev in counts:
+        mesh = make_mesh_compat((n_dev,), ("model",))
+        t0 = time.perf_counter()
+        sh = build_sharded(x, n_dev, m=cfg["m"], c=cfg["c"], p=cfg["p0"],
+                           k_p=cfg["k_p"], k_sp=cfg["k_sp"],
+                           norm_strata=cfg["norm_strata"])
+        shd = device_put_sharded_index(sh, mesh)
+        build_s = time.perf_counter() - t0
+
+        def one_rep(runtime):
+            t0 = time.perf_counter()
+            ids, scores, pages = sharded_search(shd, q, cfg["k"], mesh,
+                                                runtime=runtime)
+            ids.block_until_ready()
+            return time.perf_counter() - t0, ids, pages
+
+        for runtime in (cfg_f, cfg_b):
+            one_rep(runtime)  # compile
+        t_f, t_b, ratios = [], [], []
+        for _ in range(3):  # interleaved: both contenders see the same drift
+            tb, _, _ = one_rep(cfg_b)
+            tf, ids, pages = one_rep(cfg_f)
+            t_f.append(tf)
+            t_b.append(tb)
+            ratios.append(tb / tf)
+        recall = float(np.mean([recall_at_k(np.asarray(ids)[i], eids[i])
+                                for i in range(cfg["n_q"])]))
+        point = {
+            "build_s": build_s,
+            "n_blocks_per_shard": sh.meta.n_blocks,
+            "fused_us_per_query": float(np.median(t_f)) / cfg["n_q"] * 1e6,
+            "batched_us_per_query": float(np.median(t_b)) / cfg["n_q"] * 1e6,
+            "pages_total": int(pages),
+            "recall": recall,
+            "speedup_fused_vs_batched": float(np.median(ratios)),
+        }
+        rec["points"][str(n_dev)] = point
+        rows.append((f"sharded/devices{n_dev}/fused",
+                     point["fused_us_per_query"],
+                     f"recall={recall:.3f};pages={int(pages)}"))
+        rows.append((f"sharded/devices{n_dev}/batched",
+                     point["batched_us_per_query"],
+                     f"x{point['speedup_fused_vs_batched']:.2f} fused-vs-batched"))
+
+    top = rec["points"][str(counts[-1])]
+    rec["max_devices"] = counts[-1]
+    rec["recall"] = top["recall"]
+    rec["speedup_sharded_fused_vs_batched"] = top["speedup_fused_vs_batched"]
+    rows.append(("sharded/speedup_fused_vs_batched", 0.0,
+                 f"x{rec['speedup_sharded_fused_vs_batched']:.2f}"
+                 f"@{counts[-1]}dev"))
+
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    with open(os.path.join(root, "BENCH_sharded.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rows
+
+
 def bench_stream(quick: bool = True):
     """Streaming index (ISSUE 2): insert throughput, search latency at
     0%/10%/30% delta fraction, and latency right after compaction. Writes

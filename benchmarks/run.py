@@ -15,6 +15,14 @@ import time
 sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src")))
 sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
 
+# --sharded simulates a pod on this host: force 8 host devices BEFORE any
+# import below can initialize the jax backend (XLA reads the flag once).
+if "--sharded" in sys.argv:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()
+
 from datetime import datetime, timezone  # noqa: E402
 
 from benchmarks import common  # noqa: E402
@@ -24,7 +32,8 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 # Repo-root records the bench functions (re)write; every run APPENDS the
 # fresh record to results/bench/history.jsonl with a timestamp, so the
 # BENCH_*.json numbers gain a trajectory instead of being overwritten.
-BENCH_FILES = ("BENCH_search.json", "BENCH_stream.json", "BENCH_api.json")
+BENCH_FILES = ("BENCH_search.json", "BENCH_stream.json", "BENCH_api.json",
+               "BENCH_sharded.json")
 
 
 def _append_history(out_dir: str, bench: str, rows, t_start: float) -> None:
@@ -52,6 +61,7 @@ BENCHES = [
     ("device_throughput", F.bench_device_throughput),
     ("stream_churn", lambda: F.bench_stream(quick=False)),
     ("api_registry", lambda: F.bench_api(quick=False)),
+    ("sharded_fanout", lambda: F.bench_sharded(quick=False)),
 ]
 
 
@@ -71,6 +81,11 @@ def main() -> None:
                     help="registry sweep: build time, on-disk index bytes, "
                          "us/query and recall vs exact for every registered "
                          "backend (writes BENCH_api.json)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="sharded fan-out smoke: in-graph fused vs batched "
+                         "verification inside shard_map at n=100k, us/query "
+                         "and recall vs device count over 8 forced host "
+                         "devices (writes BENCH_sharded.json)")
     args = ap.parse_args()
 
     if args.quick:
@@ -79,6 +94,8 @@ def main() -> None:
         benches = [("stream_churn", lambda: F.bench_stream(quick=True))]
     elif args.api:
         benches = [("api_registry", lambda: F.bench_api(quick=True))]
+    elif args.sharded:
+        benches = [("sharded_fanout", lambda: F.bench_sharded(quick=True))]
     else:
         benches = BENCHES
     os.makedirs(args.out, exist_ok=True)

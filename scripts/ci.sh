@@ -7,14 +7,23 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 tests (minus the stream/api tiers, run separately below) =="
-python -m pytest -q --ignore=tests/test_stream.py --ignore=tests/test_api.py
+echo "== tier-1 tests (minus the stream/api/guarantee tiers, run separately below) =="
+python -m pytest -q --ignore=tests/test_stream.py --ignore=tests/test_api.py \
+    --ignore=tests/test_guarantees.py
 
 echo "== streaming-index tier (insert/delete/compact paths) =="
 python -m pytest -q tests/test_stream.py
 
 echo "== unified-API tier (registry conformance + persistence round trips) =="
 python -m pytest -q tests/test_api.py
+
+echo "== multi-device tier (8 host devices): guarantee suite =="
+# Theorem-2 recall floors for host / fused / sharded-fused with 8 shards
+# under shard_map. (The sharded in-graph parity tests in
+# tests/test_distributed.py already ran in tier-1 — they force their own
+# 8-device subprocesses, so re-running them under this flag adds nothing.)
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -q tests/test_guarantees.py
 
 echo "== benchmark smoke (host vs scan vs batched vs fused runtime) =="
 python -m benchmarks.run --quick --out results/bench
@@ -60,6 +69,28 @@ print(f"perf guard: pruning_engaged={rec.get('pruning_engaged')} "
 sys.exit(0 if ok else 1)
 PY
 
+echo "== sharded smoke (in-graph fused vs batched inside shard_map, 8 devices) =="
+python -m benchmarks.run --sharded --out results/bench
+
+echo "== sharded perf guard (fused >= batched at the max device count) =="
+python - <<'PY'
+import json, sys
+rec = json.load(open("BENCH_sharded.json"))
+ok = True
+speedup = rec.get("speedup_sharded_fused_vs_batched", 0.0)
+if speedup < 1.0:
+    print(f"PERF GUARD FAIL: sharded-fused regressed below sharded-batched "
+          f"(x{speedup:.2f} < x1.00 at {rec.get('max_devices')} devices)")
+    ok = False
+if rec.get("recall", 0.0) < 0.95:
+    print(f"PERF GUARD FAIL: sharded recall {rec.get('recall')} < 0.95")
+    ok = False
+print(f"sharded perf guard: fused_vs_batched=x{speedup:.2f} "
+      f"recall={rec.get('recall', 0.0):.3f} "
+      f"devices={rec.get('max_devices')}")
+sys.exit(0 if ok else 1)
+PY
+
 echo "== stream smoke (insert throughput + latency vs delta fraction) =="
 python -m benchmarks.run --stream --out results/bench
 
@@ -74,3 +105,6 @@ cat BENCH_stream.json
 
 echo "== BENCH_api.json =="
 cat BENCH_api.json
+
+echo "== BENCH_sharded.json =="
+cat BENCH_sharded.json

@@ -4,8 +4,10 @@ Each adapter maps one existing engine onto the `Searcher` protocol:
 
   promips         core/promips.ProMIPS through the unified device runtime
                   (two_phase FUSED block-sparse verification by default —
-                  `core/search_fused.py`; opts select mode="progressive",
-                  norm_adaptive, cs_prune, verification="batched"/"scan")
+                  `core/search_fused.py` eagerly, the traceable
+                  `core/search_graph.py` driver inside jit/shard_map; opts
+                  select mode="progressive", norm_adaptive, cs_prune,
+                  verification="batched"/"scan")
   promips-stream  stream/mutable.MutableProMIPS (mutation + compaction)
   sharded         core/sharded.MutableShardedProMIPS (range-routed shards,
                   mutation, host-side k x shards merge)

@@ -64,8 +64,10 @@ class ProMIPS:
         """Batched device-mode c-k-AMIP search. queries: (B, d).
 
         ``verification`` picks the candidate-scoring backend ("fused" =
-        host-orchestrated block-sparse rounds over the `kernels/block_mips`
-        kernel with pow2-bucketed tiles, "batched" = one full-tile Pallas
+        block-sparse rounds over the `kernels/block_mips` kernel with
+        pow2-bucketed tiles — host-orchestrated eagerly, the in-graph
+        `core/search_graph.py` driver under jit/shard_map, "batched" = one
+        full-tile Pallas
         matmul per round over the unioned block selection, "scan" = legacy
         per-query lax.scan). "fused" and "batched" are bit-identical at
         every budget and identical to "scan" at the default full budget; a

@@ -6,15 +6,18 @@ backend (`verification`); the runtime clamps budgets to the index size and
 dispatches to the jit'd implementations in `search_device`:
 
   mode="two_phase"   Algorithm 3 (Quick-Probe + range + compensation round);
-                     verification="fused" (default) runs the host-orchestrated
-                     fused block-sparse rounds (`core/search_fused.py`:
-                     `kernels/block_mips` walks the selected pages in place,
-                     tiles sized to next_pow2(union)); "batched" is the
-                     single-graph full-tile union path, bit-identical to
-                     "fused" at every budget (and what "fused" lowers to
-                     inside a jit trace, where host orchestration is
-                     impossible); "scan" is the legacy per-query lax.scan,
-                     kept as the semantics reference / benchmark baseline.
+                     verification="fused" (default) runs the fused
+                     block-sparse rounds (`kernels/block_mips` walks the
+                     selected pages in place, tiles sized to
+                     next_pow2(union)) — host-orchestrated when called
+                     eagerly (`core/search_fused.py`), and as the fully
+                     in-graph `core/search_graph.py` driver under any
+                     ambient jit / shard_map trace, so the fused kernel is
+                     the one verification path at every scale; "batched" is
+                     the single-graph full-tile union path, bit-identical
+                     to "fused" at every budget; "scan" is the legacy
+                     per-query lax.scan, kept as the semantics reference /
+                     benchmark baseline.
                      All three are identical at the default full budget; a
                      finite ``budget`` caps the SHARED union tile under
                      "fused"/"batched" vs each query's own selection under
@@ -123,11 +126,13 @@ def search(arrays: IndexArrays, meta: IndexMeta, queries,
                                                  cs_prune=cfg.cs_prune)
     elif cfg.mode == "two_phase":
         if cfg.verification == "fused" and jax.core.trace_state_clean():
-            # Host-orchestrated fused rounds (pow2-bucketed tiles). Under ANY
-            # ambient trace (jit / shard_map — even when `queries` itself is
-            # a closed-over concrete array, the index arrays may be traced)
-            # the host cannot size tiles, so `search_batch` lowers "fused"
-            # to its bit-identical batched graph instead.
+            # Host-orchestrated fused rounds (tiles sized on host, an empty
+            # round skipped outright, the dense-round score cache on the CPU
+            # oracle). Under ANY ambient trace (jit / shard_map — even when
+            # `queries` itself is a closed-over concrete array, the index
+            # arrays may be traced) `search_batch` runs the bit-identical
+            # IN-GRAPH fused driver (`core/search_graph.py`) instead: same
+            # block_mips kernel, pow2 tile buckets as lax.switch branches.
             ids, _, stats = search_batch_fused(
                 arrays, meta, q, k=cfg.k, budget=budget, budget2=budget2,
                 norm_adaptive=cfg.norm_adaptive, cs_prune=cfg.cs_prune,

@@ -16,16 +16,18 @@ BATCH-NATIVE and shared by every verification backend — `select_frontend` /
 `compensation_masks` below — so the per-round block masks agree across
 backends by construction. Verification backends:
 
-``verification="fused"`` (default; `core/search_fused.py`, DESIGN.md §10) —
-  host-orchestrated rounds over the fused block-sparse
-  `kernels/block_mips` kernel: the kernel walks the selected pages of
-  ``arrays.x`` in place (scalar-prefetched slot list, no gathered union
-  tile) with a streaming per-query top-k, and the tile is sized to
-  ``next_pow2(union)`` blocks instead of always the full budget. Results
-  are bit-identical to "batched" at EVERY budget (the tile cap rule is the
-  same); inside a jit trace (e.g. `sharded_search`'s shard_map) the host
-  orchestration is unavailable and ``"fused"`` lowers to the "batched"
-  graph below — identical results, without the bucketing.
+``verification="fused"`` (default; DESIGN.md §10/§12) — rounds over the
+  fused block-sparse `kernels/block_mips` kernel: the kernel walks the
+  selected pages of ``arrays.x`` in place (scalar-prefetched slot list, no
+  gathered union tile) with a streaming per-query top-k, and the tile is
+  sized to ``next_pow2(union)`` blocks instead of always the full budget.
+  Two drivers, bit-identical to each other and to "batched" at EVERY
+  budget (the tile cap rule is the same): `core/search_fused.py`
+  host-orchestrates the rounds when called eagerly (tiles sized on host,
+  O(log NB) jit cache); `core/search_graph.py` is the fully traceable
+  driver — pow2 tile buckets precompiled as `lax.switch` branches — that
+  THIS function dispatches to, so jit'd callers and `sharded_search`'s
+  shard_map run the fused kernel at every scale.
 
 ``verification="batched"`` (DESIGN.md §3.2) — the single-graph two-phase
   runtime. Per round, the blocks selected by ANY query in the batch are
@@ -424,11 +426,17 @@ def search_batch(
     into one Pallas matmul per round (budget semantics differ when finite —
     see module docstring).
     """
-    if verification in ("batched", "fused"):
-        # "fused" inside a jit trace cannot host-orchestrate its bucketed
-        # tiles; it lowers to the bit-identical batched graph (the eager
-        # fused driver lives in `core/search_fused.py` and is dispatched by
-        # `core/runtime.search` before this point).
+    if verification == "fused":
+        # the in-graph fused driver: pow2 tile buckets as lax.switch
+        # branches, so the same block_mips kernel traces under jit and
+        # shard_map (the eager host-orchestrated driver lives in
+        # `core/search_fused.py` and is dispatched by `core/runtime.search`
+        # before this point). Lazy import: search_graph imports this module.
+        from .search_graph import search_batch_fused_graph
+        return search_batch_fused_graph(arrays, meta, queries, k, budget,
+                                        budget2, norm_adaptive, cs_prune,
+                                        use_pallas)
+    if verification == "batched":
         return _search_batch_batched(arrays, meta, queries, k, budget, budget2,
                                      norm_adaptive, cs_prune, use_pallas)
     if verification == "scan":

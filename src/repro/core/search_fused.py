@@ -84,9 +84,10 @@ def _verify(arrays: IndexArrays, queries, slots, sel, init_s, init_r, c_half,
     done_a = (n0 + jnp.sum(cnt, axis=1)) >= k
     cache = None
     if want_scores:
-        # the identical full-matrix product the dense round just consumed —
+        # the identical full-matrix product the dense round just consumed
+        # (same (n_pad, d) @ (d, B) orientation as `ref.block_mips_ref`) —
         # XLA CSEs it with the in-round matmul, so this costs nothing extra
-        cache = queries @ arrays.x.T
+        cache = (arrays.x @ queries.T).T
     return TopK(scores=top_s, rows=top_r), pages, cand, done_a, cache
 
 
@@ -165,8 +166,10 @@ def search_batch_fused(
     """c-k-AMIP search, fused backend. Same contract as `search_batch`.
 
     Eager-only (host-orchestrated): call it outside jit. `core/runtime.search`
-    routes ``verification="fused"`` here when not tracing and to the
-    bit-identical batched graph otherwise.
+    routes ``verification="fused"`` here when not tracing; under an ambient
+    trace the bit-identical IN-GRAPH fused driver
+    (`core/search_graph.search_batch_fused_graph`) runs instead — same
+    kernel, tile buckets selected by `lax.switch` rather than on host.
     """
     n_blocks = meta.n_blocks
     n_batch = queries.shape[0]

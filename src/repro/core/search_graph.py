@@ -1,0 +1,211 @@
+"""In-graph fused two-phase search: the fused `kernels/block_mips` rounds
+with tile sizing done INSIDE the jit graph, so ``verification="fused"`` is
+one traceable function — it runs under `jax.jit`, inside `shard_map`
+(`core/sharded.sharded_search`'s per-shard search) and anywhere else the
+host-orchestrated driver (`core/search_fused.py`) cannot, with bit-identical
+results.
+
+The host driver pulls each round's (B, NB) selection to host and sizes the
+verification tile to ``next_pow2(union_count)`` blocks. In a trace the union
+count is an abstract value, so the tile shape cannot depend on it — instead
+every pow2 bucket the host driver could have chosen is compiled as one
+branch of a `jax.lax.switch`:
+
+  buckets  = [1, 2, 4, ..., cap]  (pow2s below the budget cap, then the cap)
+  branch b = one `ops.block_mips` round over a ``buckets[b]``-slot tile whose
+             slot list is the first ``buckets[b]`` union blocks in layout
+             order (`argsort(~union, stable)` — the same union-first
+             ascending order as the batched backend's tile)
+  index    = searchsorted(buckets, union_count): the smallest bucket that
+             holds the union, i.e. exactly the host driver's
+             ``min(next_pow2(union), cap)`` rule
+
+plus one DENSE branch (walk every block of ``x`` in place, no gather) taken
+when the union covers >= `search_fused.DENSE_FRAC` of all blocks and the cap
+allows — again the host driver's rule. Only the selected branch executes at
+runtime; the others cost compile time bounded by O(log n_blocks) branch
+bodies, compiled ONCE inside the single enclosing jit entry (the retrace
+bound DESIGN.md §12 documents — contrast the host driver, which holds one
+jit cache entry per bucket).
+
+An empty union selects the smallest bucket with an all-False ``sel``: the
+round is an identity on the carried top-k with zero pages/candidates —
+bit-identical to the host driver's host-side skip — so no `lax.cond` wrapper
+is needed for round 1; the compensation round keeps the batched backend's
+`lax.cond` skip since its union is empty for most batches.
+
+Results (ids, scores, every `SearchStats` field) are bit-identical to BOTH
+`search_fused.search_batch_fused` and ``verification="batched"`` at every
+budget: the tile-cap rule (first ``budget`` union blocks in layout order) and
+the per-round accounting are the same; a bucketed tile only carries padding
+slots whose ``sel`` column is False. tests/test_fused_verification.py
+asserts this under jit and tests/test_distributed.py under shard_map.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .index import IndexArrays, IndexMeta
+from .search_device import (SearchStats, TopK, compensation_masks,
+                            select_frontend)
+from .search_fused import DENSE_FRAC
+
+
+def _tile_buckets(cap: int) -> tuple:
+    """Static pow2 tile sizes for a ``cap``-block budget: every value
+    ``min(next_pow2(u), cap)`` can take for u in [1, n_blocks]."""
+    sizes = []
+    s = 1
+    while s < cap:
+        sizes.append(s)
+        s <<= 1
+    sizes.append(cap)
+    return tuple(sizes)
+
+
+def _fused_round_graph(arrays: IndexArrays, queries, mask, top: TopK, c_half,
+                       k: int, cap: int, n_blocks: int, page_rows: int,
+                       use_pallas: Optional[bool]):
+    """One traceable fused verification round over the (B, NB) ``mask``.
+
+    Returns (TopK, pages (B,), cand (B,), done_a (B,), lost (B,)) with the
+    exact semantics of one host-driver round (`search_fused._verify` over
+    `search_fused._plan_tile`'s tile) — bucket choice and all.
+    """
+    union = jnp.any(mask, axis=0)                              # (NB,)
+    n_union = jnp.sum(union.astype(jnp.int32))
+    order = jnp.argsort(~union, stable=True).astype(jnp.int32)  # union first
+    valid = arrays.ids >= 0
+    sizes = _tile_buckets(cap)
+    have_dense = cap >= n_blocks
+
+    def make_branch(n_slots: int, dense: bool):
+        def branch(_):
+            if dense:
+                slots = jnp.arange(n_blocks, dtype=jnp.int32)
+                sel = mask
+                slot_valid = jnp.ones((n_blocks,), bool)
+            else:
+                slots = order[:n_slots]
+                slot_valid = jnp.arange(n_slots) < n_union
+                sel = jnp.take(mask, slots, axis=1) & slot_valid[None, :]
+            top_s, top_r, cnt, pages, cand = ops.block_mips(
+                arrays.x, valid, queries, slots, sel, top.scores, top.rows,
+                c_half, k=k, page_rows=page_rows, dense=dense,
+                use_pallas=use_pallas)
+            # branches must agree in output shape: reduce the (B, NS) hit
+            # counts (NS differs per bucket) to the (B,) total the
+            # Condition-A test consumes
+            hits = jnp.sum(cnt, axis=1)
+            in_tile = jnp.zeros(n_blocks, bool).at[slots].set(slot_valid)
+            lost = jnp.any(mask & ~in_tile[None, :], axis=1)
+            return top_s, top_r, pages, cand, hits, lost
+        return branch
+
+    def bucketed(_):
+        # smallest bucket that holds the union == min(next_pow2(n_union),
+        # cap); an empty union lands on bucket 0 with sel all-False (an
+        # identity round)
+        branches = [make_branch(ns, False) for ns in sizes]
+        idx = jnp.minimum(jnp.searchsorted(jnp.asarray(sizes), n_union),
+                          len(sizes) - 1)
+        return jax.lax.switch(idx, branches, None)
+
+    if have_dense:
+        # The dense fast path sits OUTSIDE the bucket switch, behind a plain
+        # two-way cond: on the XLA CPU backend a many-branch switch carrying
+        # the full corpus in every branch closure costs real per-call
+        # overhead, while a cond is free — and in the dense regime (union >=
+        # DENSE_FRAC) the bucket switch would pick a full-size tile anyway.
+        # Small unions take the switch, whose branches then only carry
+        # small tiles.
+        top_s, top_r, pages, cand, hits, lost = jax.lax.cond(
+            n_union >= DENSE_FRAC * n_blocks,
+            make_branch(n_blocks, True), bucketed, None)
+    else:
+        top_s, top_r, pages, cand, hits, lost = bucketed(None)
+    # "running k-th best >= threshold" <=> "n0 + total selected hits >= k"
+    # (same reduction as search_fused._verify)
+    n0 = jnp.sum(top.scores >= c_half[:, None], axis=1)
+    done_a = (n0 + hits) >= k
+    return TopK(scores=top_s, rows=top_r), pages, cand, done_a, lost
+
+
+def search_batch_fused_graph(
+    arrays: IndexArrays,
+    meta: IndexMeta,
+    queries: jnp.ndarray,
+    k: int = 10,
+    budget: int = 64,
+    budget2: int = 64,
+    norm_adaptive: bool = False,
+    cs_prune: bool = False,
+    use_pallas: Optional[bool] = None,
+):
+    """c-k-AMIP search, fused backend, fully in-graph. Same contract (and
+    bit-identical results at every budget) as `search_fused.search_batch_fused`
+    — but traceable: `search_device.search_batch` dispatches
+    ``verification="fused"`` here, so jit'd callers and `sharded_search`'s
+    shard_map run the fused kernel instead of the batched full-tile graph.
+    """
+    n_blocks = meta.n_blocks
+    n_batch = queries.shape[0]
+    cap = min(budget, n_blocks)
+    cap2 = min(budget2, n_blocks)
+
+    q_proj, q_l2sq, d_sp, r0, probe_ok, c_half, mask0 = select_frontend(
+        arrays, meta, queries)
+    # strong f32 init (same reason as the host driver: round 2 carries the
+    # strong-typed round-1 output back in)
+    top = TopK(scores=jnp.full((n_batch, k), -jnp.inf, jnp.float32),
+               rows=jnp.full((n_batch, k), -1, jnp.int32))
+
+    top, pages1, cand1, done_a, lost1 = _fused_round_graph(
+        arrays, queries, mask0, top, c_half, k, cap, n_blocks,
+        meta.page_rows, use_pallas)
+    # same barrier as the batched graph: stops XLA CPU re-materializing
+    # round-1 fusions inside the round-2 consumers
+    top, done_a, mask0 = jax.lax.optimization_barrier((top, done_a, mask0))
+
+    s_k = top.scores[:, k - 1]
+    need2, r1, mask1 = compensation_masks(arrays, meta, d_sp, q_l2sq, s_k, r0,
+                                          done_a, mask0, norm_adaptive,
+                                          cs_prune)
+
+    # An empty compensation union is the common case (every query stopped by
+    # A/B in round 1); the skip branch is the identity the host driver takes
+    # on host, so results stay bit-identical either way.
+    def round2(args):
+        mask1, top = args
+        out_top, pages, cand, _, lost = _fused_round_graph(
+            arrays, queries, mask1, top, c_half, k, cap2, n_blocks,
+            meta.page_rows, use_pallas)
+        return out_top, pages, cand, lost
+
+    def skip2(args):
+        _, top = args
+        zero = jnp.zeros(n_batch, jnp.int32)
+        return top, zero, zero, jnp.zeros(n_batch, bool)
+
+    top, pages2, cand2, lost2 = jax.lax.cond(
+        jnp.any(mask1), round2, skip2, (mask1, top))
+
+    stats = SearchStats(
+        pages=pages1 + pages2,
+        candidates=cand1 + cand2,
+        probe_passed=probe_ok,
+        used_round2=need2,
+        radius0=r0,
+        radius1=jnp.where(need2, r1, 0.0),
+        exhausted=lost1 | (need2 & lost2),
+        rows=top.rows,
+    )
+    ids = jnp.where(top.rows >= 0, arrays.ids[jnp.maximum(top.rows, 0)], -1)
+    return ids, top.scores, stats
+
+
+__all__ = ["search_batch_fused_graph", "_tile_buckets"]

@@ -6,12 +6,14 @@ Build: contiguous row ranges -> per-shard build_index (ids are GLOBAL row
 ids), padded to common array shapes and stacked on a leading shard axis.
 Search: shard_map over the model axis; each shard runs the unified search
 runtime (`core/runtime.py` — progressive frontier by default, or the
-two-phase batched-verification mode) on its slice; a tiny all_gather +
-top_k merges.
+two-phase mode with fused / batched / scan verification; "fused" runs the
+in-graph `core/search_graph.py` driver inside the trace) on its slice; a
+tiny all_gather + top_k merges.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -120,12 +122,13 @@ def sharded_search(
 
     ``runtime`` selects the per-shard search config (mode / verification
     backend); the default is the progressive norm-adaptive frontier. Pass
-    e.g. ``RuntimeConfig(mode="two_phase", verification="batched",
-    norm_adaptive=True)`` to run the batched Pallas-verification path on
-    every shard. ``verification="fused"`` cannot host-orchestrate inside
-    this shard_map and lowers to the bit-identical batched graph; the
-    host-merge path (`MutableShardedProMIPS.search`) runs shard searches
-    eagerly and DOES get the fused driver.
+    e.g. ``RuntimeConfig(mode="two_phase", verification="fused",
+    norm_adaptive=True)`` to run the fused block-sparse verification on
+    every shard: inside this shard_map the in-graph fused driver
+    (`core/search_graph.py`) sizes its pow2 tile buckets with `lax.switch`,
+    so each shard walks only its selected pages — the same kernel and
+    bit-identical results as the eagerly-dispatched host-merge path
+    (`MutableShardedProMIPS.search`).
     """
     meta = sharded.meta
     # ``budget``/``cs_prune`` are the legacy knobs for the default config; a
@@ -134,7 +137,25 @@ def sharded_search(
     cfg = runtime if runtime is not None else RuntimeConfig(
         mode="progressive", cs_prune=cs_prune, budget=budget)
     cfg = dataclasses.replace(cfg, k=k)
+    fn = _sharded_search_fn(meta, k, mesh, axis, cfg)
+    return fn(sharded.arrays, jnp.asarray(queries, jnp.float32))
 
+
+@functools.lru_cache(maxsize=32)
+def _sharded_search_fn(meta: IndexMeta, k: int, mesh: Mesh, axis: str,
+                       cfg: RuntimeConfig):
+    """One jit'd shard_map per (meta, k, mesh, axis, config).
+
+    Building the shard_map and calling it EAGERLY per search re-runs its
+    Python impl every time — the whole per-shard search is re-traced on
+    every call, which dominates wall clock (the in-graph fused driver's
+    jaxpr is large: one lax.switch branch per pow2 tile bucket). Caching a
+    `jax.jit`-wrapped callable makes repeat searches hit the C++ pjit fast
+    path: trace + compile once, then zero Python graph work per call. The
+    cache is BOUNDED (each entry pins a compiled executable + its mesh):
+    callers that churn through many (k, config, rebuilt-meta) combinations
+    evict the oldest executables instead of growing without limit.
+    """
     def local(arr_shard, q):
         arrays = jax.tree.map(lambda a: a[0], arr_shard)  # drop shard dim
         ids, scores, stats = runtime_search(arrays, meta, q, cfg)
@@ -149,14 +170,13 @@ def sharded_search(
         pages = jax.lax.psum(jnp.sum(stats.pages), axis)
         return best_i, best_s, pages
 
-    in_arr_spec = jax.tree.map(lambda _: P(axis), sharded.arrays)
-    fn = shard_map(
+    in_arr_spec = IndexArrays(**{f: P(axis) for f in IndexArrays._fields})
+    return jax.jit(shard_map(
         local, mesh=mesh,
         in_specs=(in_arr_spec, P()),
         out_specs=(P(), P(), P()),
         check_rep=False,
-    )
-    return fn(sharded.arrays, jnp.asarray(queries, jnp.float32))
+    ))
 
 
 class MutableShardedProMIPS:

@@ -39,8 +39,12 @@ def block_mips_ref(x, valid, q, slots, sel, init_scores, init_rows, c_half,
                       axis=0).reshape(-1, x.shape[1])
         rvalid = jnp.take(valid.reshape(-1, page_rows), slots,
                           axis=0).reshape(-1).astype(bool)
-    scores = (q.astype(jnp.float32)
-              @ xt.astype(jnp.float32).T)                    # (B, R)
+    # (R, d) @ (d, B) then transpose — the same orientation as
+    # `mips_score_ref` (the batched backend's kernel), which the CPU GEMM
+    # executes measurably faster than (B, d) @ (d, R) at R >> B; per-element
+    # dots are the identical reduction, so results are unchanged
+    scores = (xt.astype(jnp.float32)
+              @ q.astype(jnp.float32).T).T                   # (B, R)
     return _verify_core(scores, rvalid, sel, init_scores, init_rows, c_half,
                         rows_flat, k=k, page_rows=page_rows)
 

@@ -96,10 +96,20 @@ class DecodeEngine:
                                        seed=kw.pop("seed"), **kw)
             self._retired = np.zeros(cfg.vocab, bool)
             # decode-step batch goes through the unified two-phase runtime
-            # (batched Pallas verification over the B slots) by default; a
-            # user-supplied RuntimeConfig is taken as-is (only k is stamped
-            # in), matching sharded_search's contract — ``promips_budget``
-            # applies to the default config only.
+            # (batched verification over the B slots by default): at
+            # decode-shaped batches (B <= slots, k=4) the single batched
+            # graph measures faster per step than either fused driver on
+            # the CPU oracle (~6.3 ms vs 7.0 in-graph / 14 host-orchestrated
+            # at B=4, n=4096 — tiny batches leave no union for the pow2
+            # bucketing to shrink). "fused" is a first-class option here
+            # since PR 5 (`core/search_graph.py` makes it trace-safe;
+            # tests/test_serve.py pins token-identical decoding) — pass
+            # ``search_runtime=RuntimeConfig(verification="fused", ...)``
+            # to select it, e.g. on TPU where the kernel's page-skipping
+            # DMA walk changes the economics. A user-supplied RuntimeConfig
+            # is taken as-is (only k is stamped in), matching
+            # sharded_search's contract — ``promips_budget`` applies to the
+            # default config only.
             if search_runtime is None:
                 search_runtime = RuntimeConfig(
                     mode="two_phase", verification="batched",

@@ -78,6 +78,12 @@ class Compactor:
         if self.in_flight:
             raise RuntimeError("compaction already in flight")
         gids, rows = stream._freeze_for_compaction()
+        if len(gids) == 0:
+            # fully-tombstoned stream: no survivors to rebuild a base from.
+            # Close the op log and keep the tombstoned base — searches mask
+            # every dead row, so skipping the rebuild is invisible.
+            stream._abandon_compaction()
+            return
 
         self.error = None
 

@@ -325,8 +325,17 @@ class MutableProMIPS:
             self._oplog = None
 
     def compact(self) -> None:
-        """Synchronous compaction (the background path is `self.compactor`)."""
+        """Synchronous compaction (the background path is `self.compactor`).
+
+        With NO surviving rows (every row tombstoned — e.g. one fully
+        retired shard of a `MutableShardedProMIPS`) there is nothing to
+        rebuild a base FROM: the rebuild is skipped and the op log closed.
+        Tombstones then simply persist, which is semantically invisible —
+        searches already mask every dead row."""
         gids, rows = self._freeze_for_compaction()
+        if len(gids) == 0:
+            self._abandon_compaction()
+            return
         try:
             new_base = rebuild_base(gids, rows, self.build_kwargs)
         except BaseException:

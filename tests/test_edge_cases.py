@@ -1,0 +1,176 @@
+"""Edge-case coverage the parity suites miss: k >= n_alive, a fully
+tombstoned shard, an empty round-1 union, and B=1 decode-shaped batches
+through the fused path (eager host driver AND the in-graph driver)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ProMIPS, RuntimeConfig, runtime_search
+from repro.core.sharded import MutableShardedProMIPS
+from repro.data.synthetic import mf_factors
+from repro.stream.mutable import MutableProMIPS
+
+D = 16
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    x = mf_factors(40, D, 4, decay=0.4, seed=0)
+    q = mf_factors(3, D, 4, decay=0.4, seed=1)
+    pm = ProMIPS.build(x, m=4, c=0.9, p=0.5, page_bytes=256)
+    return x, jnp.asarray(q, jnp.float32), pm
+
+
+# ---------------------------------------------------------------------------
+# k >= n_alive
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("verification", ["fused", "batched", "scan"])
+def test_k_exceeds_corpus(tiny, verification):
+    """k > n: every alive row comes back exactly once, the overflow slots
+    are (-1, -inf), and all three verification backends agree bitwise."""
+    x, q, pm = tiny
+    k = 64
+    ids, scores, st = pm.search(q, k=k, verification=verification)
+    ids, scores = np.asarray(ids), np.asarray(scores)
+    assert ids.shape == (3, k)
+    for b in range(3):
+        valid = ids[b][ids[b] >= 0]
+        assert sorted(valid.tolist()) == list(range(len(x)))  # all rows, once
+        assert np.all(np.isneginf(scores[b][ids[b] < 0]))
+    # exact scores on the valid slots (runtime rescore contract)
+    want = np.sort(np.asarray(q) @ x.T, axis=1)[:, ::-1]
+    np.testing.assert_allclose(np.sort(scores, axis=1)[:, ::-1][:, :40],
+                               want, rtol=1e-5)
+    out_f = pm.search(q, k=k, verification="fused")
+    np.testing.assert_array_equal(np.asarray(out_f[0]), ids)
+    np.testing.assert_array_equal(np.asarray(out_f[1]), scores)
+
+
+def test_k_exceeds_corpus_in_graph(tiny):
+    """The in-graph fused driver handles k > n identically under jit."""
+    x, q, pm = tiny
+    cfg = RuntimeConfig(k=64)
+    out_e = runtime_search(pm.arrays, pm.meta, q, cfg)
+    out_t = jax.jit(lambda a: runtime_search(a, pm.meta, q, cfg))(pm.arrays)
+    np.testing.assert_array_equal(np.asarray(out_e[0]), np.asarray(out_t[0]))
+    np.testing.assert_array_equal(np.asarray(out_e[1]), np.asarray(out_t[1]))
+
+
+def test_k_exceeds_n_alive_after_deletes():
+    """Streaming index with tombstones: n_alive < k <= n_pad returns exactly
+    the alive rows (tombstoned rows neither returned nor crowding out)."""
+    x = mf_factors(40, D, 4, decay=0.4, seed=0)
+    q = mf_factors(3, D, 4, decay=0.4, seed=1)
+    ms = MutableProMIPS(x, ids=np.arange(40), m=4, c=0.9, p=0.5,
+                        page_bytes=256)
+    ms.delete(np.arange(10))
+    ids, scores, st = ms.search(q, k=50)
+    ids = np.asarray(ids)
+    for b in range(3):
+        valid = ids[b][ids[b] >= 0]
+        assert sorted(valid.tolist()) == list(range(10, 40))
+    # post-compaction: same alive set, same answers on the valid slots
+    ms.compact()
+    ids2, _, _ = ms.search(q, k=50)
+    np.testing.assert_array_equal(ids, np.asarray(ids2))
+
+
+# ---------------------------------------------------------------------------
+# fully tombstoned shard
+# ---------------------------------------------------------------------------
+
+def test_fully_tombstoned_shard():
+    x = mf_factors(200, D, 4, decay=0.4, seed=2)
+    q = mf_factors(4, D, 4, decay=0.4, seed=3)
+    msh = MutableShardedProMIPS(x, 2, m=4, c=0.9, p=0.5, page_bytes=256)
+    msh.delete(np.arange(100))          # shard 0 is now 100% dead
+    assert msh.n_alive == 100
+    ids, scores, st = msh.search(q, k=10)
+    ids = np.asarray(ids)
+    assert (ids >= 100).all(), ids      # only shard-1 rows can come back
+    # exact over the alive half: the dead shard contributes nothing
+    want = np.argsort(-(q @ x[100:].T), axis=1, kind="stable")[:, :10] + 100
+    np.testing.assert_array_equal(ids, want)
+    assert st.to_dict()["queries"] == 4
+    # compacting the empty shard away keeps the same answers
+    msh.compact()
+    ids2, _, _ = msh.search(q, k=10)
+    np.testing.assert_array_equal(ids, np.asarray(ids2))
+
+
+# ---------------------------------------------------------------------------
+# empty round union
+# ---------------------------------------------------------------------------
+
+def test_empty_union_round_is_identity(tiny):
+    """An all-False (B, NB) selection must be an exact identity on the
+    carried top-k with zero pages/candidates and no exhausted flag, on BOTH
+    fused drivers (the host planner skips it; the in-graph driver routes it
+    to the smallest switch branch with an all-False sel) — and on the
+    batched round they must stay bit-identical to."""
+    from repro.core import search_fused as sf
+    from repro.core.search_device import TopK, _verify_batched
+    from repro.core.search_graph import _fused_round_graph
+
+    x, q, pm = tiny
+    arrays, meta = pm.arrays, pm.meta
+    b, k = q.shape[0], 5
+    mask = jnp.zeros((b, meta.n_blocks), bool)
+    rng = np.random.RandomState(0)
+    top = TopK(scores=jnp.asarray(-np.sort(-rng.rand(b, k)).astype(np.float32)),
+               rows=jnp.asarray(rng.randint(0, 40, (b, k)).astype(np.int32)))
+    c_half = jnp.asarray(rng.rand(b).astype(np.float32))
+
+    assert sf._plan_tile(np.zeros((b, meta.n_blocks), bool),
+                         meta.n_blocks, meta.n_blocks) is None
+
+    out_top, pages, cand, done_a, lost = jax.jit(
+        lambda m, t: _fused_round_graph(arrays, q, m, t, c_half, k,
+                                        meta.n_blocks, meta.n_blocks,
+                                        meta.page_rows, None))(mask, top)
+    np.testing.assert_array_equal(np.asarray(out_top.scores),
+                                  np.asarray(top.scores))
+    np.testing.assert_array_equal(np.asarray(out_top.rows),
+                                  np.asarray(top.rows))
+    assert not np.asarray(pages).any() and not np.asarray(cand).any()
+    assert not np.asarray(lost).any()
+
+    bt, bp, bc, _, bl = _verify_batched(arrays, meta, q, mask, top, c_half,
+                                        k, meta.n_blocks, None)
+    np.testing.assert_array_equal(np.asarray(bt.scores),
+                                  np.asarray(out_top.scores))
+    np.testing.assert_array_equal(np.asarray(bt.rows), np.asarray(out_top.rows))
+    assert not np.asarray(bp).any() and not np.asarray(bl).any()
+
+
+# ---------------------------------------------------------------------------
+# B=1 decode-shaped batches
+# ---------------------------------------------------------------------------
+
+def test_b1_decode_batch_through_fused(tiny):
+    """B=1 (the decode engine's single-slot shape) through the fused path,
+    eager and jit'd. At the untruncated default budget the returned IDS
+    match the corresponding row of a full-batch search (per-query semantics
+    don't depend on batch composition when nothing is truncated); scores
+    agree to float tolerance only — XLA reassociates the verification dots
+    differently per batch shape, the very reason `runtime._rescore` exists.
+    Eager-vs-jit at the SAME B=1 shape stays bit-identical."""
+    x, q, pm = tiny
+    cfg = RuntimeConfig(k=4)
+    ids_b, scores_b, _ = runtime_search(pm.arrays, pm.meta, q, cfg)
+    for i in range(q.shape[0]):
+        qi = q[i:i + 1]
+        ids1, scores1, st1 = runtime_search(pm.arrays, pm.meta, qi, cfg)
+        assert np.asarray(ids1).shape == (1, 4)
+        np.testing.assert_array_equal(np.asarray(ids1)[0],
+                                      np.asarray(ids_b)[i])
+        np.testing.assert_allclose(np.asarray(scores1)[0],
+                                   np.asarray(scores_b)[i], rtol=1e-5)
+        ids_t, scores_t, _ = jax.jit(
+            lambda a: runtime_search(a, pm.meta, qi, cfg))(pm.arrays)
+        np.testing.assert_array_equal(np.asarray(ids_t), np.asarray(ids1))
+        np.testing.assert_array_equal(np.asarray(scores_t),
+                                      np.asarray(scores1))

@@ -217,21 +217,47 @@ def test_fused_dense_and_sparse_tiles_agree(built):
                                       err_msg=name)
 
 
-def test_fused_falls_back_under_ambient_trace(built):
+@pytest.mark.parametrize("budget", [None, 4, 37, 128])
+def test_fused_in_graph_under_ambient_trace(built, budget):
     """`runtime_search` with verification="fused" inside jit — even with
-    CONCRETE queries closed over but traced index arrays — must lower to
-    the batched graph instead of crashing on a host pull, with identical
-    results."""
+    CONCRETE queries closed over but traced index arrays — runs the
+    IN-GRAPH fused driver (`core/search_graph.py`), bit-identical to the
+    eager host-orchestrated driver AND the batched graph at every budget:
+    ids, scores and every stats field."""
     import jax
 
     x, q, pm = built
-    q_np = np.asarray(q[:4])
-    cfg = RuntimeConfig(k=5)
+    q_np = np.asarray(q[:8])
+    cfg = RuntimeConfig(k=5, budget=budget, budget2=budget,
+                        norm_adaptive=True, cs_prune=True)
     traced = jax.jit(lambda arrays: runtime_search(arrays, pm.meta, q_np, cfg))
-    ids_t, scores_t, _ = traced(pm.arrays)
-    ids_e, scores_e, _ = runtime_search(pm.arrays, pm.meta, q_np, cfg)
-    np.testing.assert_array_equal(np.asarray(ids_t), np.asarray(ids_e))
-    np.testing.assert_array_equal(np.asarray(scores_t), np.asarray(scores_e))
+    out_t = traced(pm.arrays)
+    out_e = runtime_search(pm.arrays, pm.meta, q_np, cfg)
+    _assert_same(out_t, out_e, f"jit-fused-vs-eager-fused budget={budget}")
+    cfg_b = RuntimeConfig(k=5, budget=budget, budget2=budget,
+                          norm_adaptive=True, cs_prune=True,
+                          verification="batched")
+    out_b = runtime_search(pm.arrays, pm.meta, q_np, cfg_b)
+    _assert_same(out_t, out_b, f"jit-fused-vs-batched budget={budget}")
+
+
+def test_tile_buckets_cover_plan_tile_sizes():
+    """The in-graph lax.switch branch list is exactly the set of tile sizes
+    the host planner can choose: min(next_pow2(u), cap) for every union
+    count u — so bucket selection by searchsorted reproduces the host
+    driver's sizing rule, and the branch count stays O(log cap)."""
+    from repro.core.search_graph import _tile_buckets
+
+    for cap in (1, 2, 3, 37, 64, 500):
+        sizes = _tile_buckets(cap)
+        assert sizes[-1] == cap and sorted(set(sizes)) == list(sizes)
+        want = {min(next_pow2(u), cap) for u in range(1, cap + 9)}
+        assert set(sizes) == want, (cap, sizes, want)
+        # searchsorted picks the same size the host planner computes
+        for u in range(1, cap + 9):
+            idx = int(np.searchsorted(np.asarray(sizes), u))
+            idx = min(idx, len(sizes) - 1)
+            assert sizes[idx] == min(next_pow2(u), cap), (cap, u)
 
 
 def test_sharded_and_stream_get_fused_by_default(mf_corpus):

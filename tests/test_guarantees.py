@@ -1,0 +1,145 @@
+"""Statistical recall-vs-p0 regression suite (Theorem 2 end-to-end).
+
+The paper's value is its *probability-guaranteed* search: with no budget
+truncation, P[the returned o_i has <o_i, q> >= c * <o_i*, q>] >= p0
+(Theorem 2, driven by x_p = Psi_m^{-1}(p0)). This suite pins that contract
+empirically over a seeded (c, p0) grid — every knob derived through
+`GuaranteeConfig.derive` exactly as the facade derives it — for the three
+search paths a perf PR could quietly break:
+
+  host          paper-faithful sequential `HostSearcher` (Algorithms 2+3)
+  fused         the unified runtime's default fused verification (eager
+                host-orchestrated driver; budgets None = no truncation)
+  sharded-fused `sharded_search` under shard_map — the in-graph fused
+                driver on every shard + the all-gather top-k merge (shard
+                count = jax.device_count(): 1 in the single-device tier,
+                8 under scripts/ci.sh's multi-device tier)
+
+The assertion is a one-sided binomial bound: empirical success rate
+>= p0 - 3 * sqrt(p0 (1-p0) / n_queries).  A z=3 tolerance keeps the false-
+alarm rate ~0.1% per cell if the true rate were exactly p0; in practice the
+untruncated search succeeds on ~100% of queries, so any failure here means
+a change actually voided the guarantee (truncation, a broken radius, a
+mis-derived x_p), not noise.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import GuaranteeConfig
+from repro.baselines.exact import exact_topk
+from repro.core import ProMIPS, RuntimeConfig, runtime_search
+from repro.core.sharded import (build_sharded, device_put_sharded_index,
+                                sharded_search)
+from repro.data.synthetic import mf_factors
+from repro.launch.mesh import make_mesh_compat
+
+K = 10
+N = 4000
+GRID = [(0.8, 0.5), (0.9, 0.5), (0.8, 0.8), (0.9, 0.8)]
+
+
+def _tolerance(p0: float, n_queries: int) -> float:
+    return 3.0 * float(np.sqrt(p0 * (1.0 - p0) / n_queries))
+
+
+def _success_rate(scores, exact_scores, c: float) -> float:
+    """Fraction of queries whose ENTIRE top-k meets the c-approximation:
+    <o_i, q> >= c * <o_i*, q> at every rank i (ranks whose exact score is
+    non-positive are vacuously satisfied — the ratio bound is about large
+    inner products). Scores are exact inner products on every backend
+    (`runtime._rescore` / host rescore), so this measures the guarantee,
+    not score estimation error."""
+    s = np.asarray(scores, np.float64)
+    e = np.asarray(exact_scores, np.float64)
+    ok = (s >= c * e - 1e-5) | (e <= 0.0)
+    return float(np.mean(ok.all(axis=1)))
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    x = mf_factors(N, 48, 12, decay=0.5, seed=0, norm_tail=0.3)
+    q = mf_factors(256, 48, 12, decay=0.5, seed=1)
+    _, escores = exact_topk(x, q, K)
+    return x, q, escores
+
+
+@pytest.fixture(scope="module")
+def built(corpus):
+    """One index per derived m (m depends only on n); per grid point the
+    (c, p0)-dependent statics — meta.c / meta.p / meta.x_p — are stamped in
+    from `GuaranteeConfig.derive`, which is exactly what a rebuild at that
+    (c, p0) computes (the arrays are geometry only: projection, layout,
+    norms)."""
+    x, _, _ = corpus
+    m = GuaranteeConfig(c=0.9, p0=0.5, k=K).derive(N).m
+    pm = ProMIPS.build(x, m=m, c=0.9, p=0.5, norm_strata=4, seed=0)
+    n_shards = max(jax.device_count(), 1)
+    sh = build_sharded(x, n_shards, m=m, c=0.9, p=0.5, norm_strata=4)
+    mesh = make_mesh_compat((n_shards,), ("model",))
+    shd = device_put_sharded_index(sh, mesh)
+    return pm, shd, mesh
+
+
+def _meta_for(meta, cfg: GuaranteeConfig):
+    plan = cfg.derive(N)
+    assert plan.budget is None and plan.budget2 is None  # no truncation
+    assert plan.m == meta.m
+    return dataclasses.replace(meta, c=cfg.c, p=cfg.p0, x_p=plan.x_p)
+
+
+@pytest.mark.parametrize("c,p0", GRID)
+def test_recall_floor_host(built, corpus, c, p0):
+    x, q, escores = corpus
+    pm, _, _ = built
+    n_q = 64  # sequential path: fewer queries, wider (still z=3) tolerance
+    scores = np.stack([np.asarray(pm.search_host(q[i], k=K, c=c, p=p0)[1])
+                       for i in range(n_q)])
+    rate = _success_rate(scores, escores[:n_q], c)
+    assert rate >= p0 - _tolerance(p0, n_q), (rate, c, p0)
+
+
+@pytest.mark.parametrize("c,p0", GRID)
+def test_recall_floor_fused(built, corpus, c, p0):
+    x, q, escores = corpus
+    pm, _, _ = built
+    meta = _meta_for(pm.meta, GuaranteeConfig(c=c, p0=p0, k=K))
+    _, scores, stats = runtime_search(pm.arrays, meta,
+                                      jnp.asarray(q, jnp.float32),
+                                      RuntimeConfig(k=K))
+    assert not np.asarray(stats.exhausted).any()  # None budget never truncates
+    rate = _success_rate(scores, escores, c)
+    assert rate >= p0 - _tolerance(p0, len(q)), (rate, c, p0)
+
+
+@pytest.mark.parametrize("c,p0", GRID)
+def test_recall_floor_sharded_fused(built, corpus, c, p0):
+    x, q, escores = corpus
+    _, shd, mesh = built
+    meta = _meta_for(shd.meta, GuaranteeConfig(c=c, p0=p0, k=K))
+    shd_cp = shd._replace(meta=meta)
+    _, scores, _ = sharded_search(
+        shd_cp, q, K, mesh,
+        runtime=RuntimeConfig(mode="two_phase", verification="fused"))
+    rate = _success_rate(scores, escores, c)
+    assert rate >= p0 - _tolerance(p0, len(q)), (rate, c, p0)
+
+
+def test_grid_is_monotone_in_p0(built, corpus):
+    """Sanity on the derivation itself: a higher p0 derives a larger x_p
+    (wider radii), so the expected page work is monotone — the static
+    threshold really is what drives the guarantee."""
+    pm, _, _ = built
+    pages = {}
+    for c, p0 in GRID:
+        meta = _meta_for(pm.meta, GuaranteeConfig(c=c, p0=p0, k=K))
+        x, q, _ = corpus
+        _, _, stats = runtime_search(pm.arrays, meta,
+                                     jnp.asarray(q[:64], jnp.float32),
+                                     RuntimeConfig(k=K))
+        pages[(c, p0)] = float(np.mean(np.asarray(stats.pages)))
+    for c in (0.8, 0.9):
+        assert pages[(c, 0.8)] >= pages[(c, 0.5)], pages

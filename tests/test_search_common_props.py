@@ -1,0 +1,264 @@
+"""Property tests for `core/search_common.py` (+ the shared Condition-A
+accounting in `kernels/ref._verify_core`):
+
+  * `topk_merge` is idempotent in the rank-select sense — re-ranking its own
+    output, merging an empty batch, and merging strictly-dominated
+    candidates are all exact no-ops (rows included) — and commutative in
+    the merge ORDER of candidate batches
+    (score multisets agree always; rows agree when scores are unique),
+  * its tie handling is bit-consistent with `jax.lax.top_k` under heavily
+    duplicated scores, and identical between the numpy and jnp backends
+    (the host / device agreement every parity suite leans on),
+  * the Condition-A accounting is EXACTLY the sequential budgeted scan it
+    reconstructs (simulated per query in plain Python) and monotone in the
+    scan budget: selecting more slots never decreases pages, candidates or
+    any rank of the running top-k.
+
+Every property runs over a seeded case grid (always, no optional deps);
+when `hypothesis` is installed the same checkers also run under its fuzzer
+for a much wider seed sweep (the module does NOT skip itself offline — the
+seeded grid is the regression floor, hypothesis is the amplifier).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import search_common as sc
+from repro.kernels import ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # offline container: seeded grid still runs
+    HAVE_HYPOTHESIS = False
+
+# a small value pool forces heavy score ties — the regime where merge rules
+# actually differ between implementations
+TIE_POOL = np.asarray([-2.0, -0.5, 0.0, 0.25, 1.0, 3.5], np.float32)
+
+
+def _empty(k, xp):
+    return (xp.full((k,), -xp.inf, dtype=xp.float32),
+            xp.full((k,), -1, dtype=xp.int32))
+
+
+def _case(seed: int):
+    rng = np.random.RandomState(seed)
+    n_a, n_b = rng.randint(1, 12, size=2)
+    k = int(rng.randint(1, 8))
+    sa = rng.choice(TIE_POOL, size=n_a).astype(np.float32)
+    sb = rng.choice(TIE_POOL, size=n_b).astype(np.float32)
+    ra = np.arange(n_a, dtype=np.int32)
+    rb = np.arange(100, 100 + n_b, dtype=np.int32)
+    return k, sa, ra, sb, rb
+
+
+# ---------------------------------------------------------------------------
+# property checkers (shared by the seeded grid and the hypothesis sweep)
+# ---------------------------------------------------------------------------
+
+def check_merge_idempotent(k, scores, rows):
+    # The merge ranks OCCURRENCES (the runtime's rounds feed disjoint row
+    # sets — mask1 &= ~mask0 — so the same row is never scored twice), so
+    # "idempotent" means its three no-op identities, rows included:
+    #   1. re-ranking its own sorted output reproduces it exactly,
+    #   2. merging an empty candidate batch changes nothing,
+    #   3. merging candidates strictly below the running k-th changes nothing.
+    for xp in (np, jnp):
+        s0, r0 = _empty(k, xp)
+        s1, r1 = sc.topk_merge(s0, r0, xp.asarray(scores), xp.asarray(rows),
+                               k, xp=xp)
+        s2, r2 = sc.topk_merge(*_empty(k, xp), s1, r1, k, xp=xp)
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+        np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+        s3, r3 = sc.topk_merge(s1, r1, xp.zeros((0,), xp.float32),
+                               xp.zeros((0,), xp.int32), k, xp=xp)
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s3))
+        np.testing.assert_array_equal(np.asarray(r1), np.asarray(r3))
+        kth = np.asarray(s1)[k - 1]
+        dominated = scores[scores < kth]
+        s4, r4 = sc.topk_merge(s1, r1, xp.asarray(dominated),
+                               xp.full((len(dominated),), 7, dtype=xp.int32),
+                               k, xp=xp)
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s4))
+        np.testing.assert_array_equal(np.asarray(r1), np.asarray(r4))
+
+
+def check_merge_commutative(k, sa, ra, sb, rb):
+    for xp in (np, jnp):
+        s0, r0 = _empty(k, xp)
+        sab, rab = sc.topk_merge(*sc.topk_merge(s0, r0, xp.asarray(sa),
+                                                xp.asarray(ra), k, xp=xp),
+                                 xp.asarray(sb), xp.asarray(rb), k, xp=xp)
+        sba, rba = sc.topk_merge(*sc.topk_merge(s0, r0, xp.asarray(sb),
+                                                xp.asarray(rb), k, xp=xp),
+                                 xp.asarray(sa), xp.asarray(ra), k, xp=xp)
+        np.testing.assert_array_equal(np.asarray(sab), np.asarray(sba))
+        all_scores = np.concatenate([sa, sb])
+        if len(np.unique(all_scores)) == len(all_scores):
+            # unique scores => the ranking is order-free, rows must agree too
+            np.testing.assert_array_equal(np.asarray(rab), np.asarray(rba))
+
+
+def check_tie_rule_matches_lax_top_k(k, scores, rows):
+    """numpy stable-argsort backend == jnp backend == raw lax.top_k over the
+    same concatenation, bit-for-bit, under duplicated scores."""
+    s0np, r0np = _empty(k, np)
+    s_np, r_np = sc.topk_merge(s0np, r0np, scores, rows, k, xp=np)
+    s0j, r0j = _empty(k, jnp)
+    s_j, r_j = sc.topk_merge(s0j, r0j, jnp.asarray(scores), jnp.asarray(rows),
+                             k, xp=jnp)
+    np.testing.assert_array_equal(s_np, np.asarray(s_j))
+    np.testing.assert_array_equal(r_np, np.asarray(r_j))
+    cat_s = jnp.concatenate([s0j, jnp.asarray(scores)])
+    cat_r = np.concatenate([r0np, rows])
+    top_s, idx = jax.lax.top_k(cat_s, k)
+    np.testing.assert_array_equal(np.asarray(top_s), s_np)
+    np.testing.assert_array_equal(cat_r[np.asarray(idx)], r_np)
+
+
+def _verify_case(seed: int):
+    rng = np.random.RandomState(seed)
+    b = int(rng.randint(1, 4))
+    n_slots = int(rng.randint(2, 8))
+    page_rows = int(rng.randint(1, 5))
+    k = int(rng.randint(1, 6))
+    r = n_slots * page_rows
+    scores = rng.choice(TIE_POOL, size=(b, r)).astype(np.float32)
+    rvalid = rng.rand(r) > 0.2
+    sel = rng.rand(b, n_slots) > 0.4
+    c_half = rng.choice(TIE_POOL, size=b).astype(np.float32)
+    n_init = int(rng.randint(0, k + 1))
+    init_s = np.full((b, k), -np.inf, np.float32)
+    init_s[:, :n_init] = -np.sort(
+        -rng.choice(TIE_POOL, size=(b, n_init)).astype(np.float32), axis=1)
+    init_r = np.where(init_s > -np.inf,
+                      rng.randint(1000, 2000, size=(b, k)), -1).astype(np.int32)
+    return b, n_slots, page_rows, k, scores, rvalid, sel, c_half, init_s, init_r
+
+
+def _run_verify(case, sel):
+    b, n_slots, page_rows, k, scores, rvalid, _, c_half, init_s, init_r = case
+    rows_flat = np.arange(n_slots * page_rows, dtype=np.int32)
+    out = ref._verify_core(jnp.asarray(scores), jnp.asarray(rvalid),
+                           jnp.asarray(sel), jnp.asarray(init_s),
+                           jnp.asarray(init_r), jnp.asarray(c_half),
+                           jnp.asarray(rows_flat), k=k, page_rows=page_rows)
+    return [np.asarray(o) for o in out]
+
+
+def _sequential_reference(case, sel):
+    """Plain-Python budgeted sequential scan: the semantics `_verify_core`
+    (and through it the fused kernel + batched graph) must reconstruct."""
+    b, n_slots, page_rows, k, scores, rvalid, _, c_half, init_s, init_r = case
+    top_s = np.empty((b, k), np.float32)
+    top_r = np.empty((b, k), np.int32)
+    cnt = np.zeros((b, n_slots), np.int32)
+    pages = np.zeros(b, np.int32)
+    cand = np.zeros(b, np.int32)
+    for q in range(b):
+        h = int(np.sum(init_s[q] >= c_half[q]))
+        live_rows = []
+        for j in range(n_slots):
+            rows = np.arange(j * page_rows, (j + 1) * page_rows)
+            hits = int(np.sum((scores[q, rows] >= c_half[q]) & rvalid[rows]))
+            if sel[q, j]:
+                cnt[q, j] = hits
+                if h < k:                       # Condition-A stop not yet hit
+                    pages[q] += 1
+                    cand[q] += int(np.sum(rvalid[rows]))
+                    live_rows.extend(r for r in rows if rvalid[r])
+                h += hits
+        # merge carried entries first, then live rows ascending: stable
+        # descending sort == lax.top_k's lowest-index-among-ties rule
+        all_s = np.concatenate([init_s[q],
+                                scores[q, live_rows].astype(np.float32)])
+        all_r = np.concatenate([init_r[q],
+                                np.asarray(live_rows, np.int32)])
+        order = np.argsort(-all_s, kind="stable")[:k]
+        top_s[q] = all_s[order]
+        top_r[q] = np.where(top_s[q] > -np.inf, all_r[order], -1)
+    return top_s, top_r, cnt, pages, cand
+
+
+def check_condition_a_sequential_and_monotone(seed):
+    case = _verify_case(seed)
+    b, n_slots = case[0], case[1]
+    sel = case[6]
+    got = _run_verify(case, sel)
+    want = _sequential_reference(case, sel)
+    for name, g, w in zip(("top_s", "top_r", "cnt", "pages", "cand"),
+                          got, want):
+        np.testing.assert_array_equal(g, w, err_msg=f"{name} (seed={seed})")
+
+    # monotone in budget: selecting only the first t slots never increases
+    # any accounting and never improves any rank of the top-k
+    prev = None
+    for t in range(n_slots + 1):
+        sel_t = sel.copy()
+        sel_t[:, t:] = False
+        top_s, _, _, pages, cand = _run_verify(case, sel_t)
+        if prev is not None:
+            p_top, p_pages, p_cand = prev
+            assert (pages >= p_pages).all(), (seed, t)
+            assert (cand >= p_cand).all(), (seed, t)
+            assert (top_s >= p_top).all(), (seed, t)
+        prev = (top_s, pages, cand)
+
+
+# ---------------------------------------------------------------------------
+# seeded grid (always runs)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(12))
+def test_merge_idempotent(seed):
+    k, sa, ra, _, _ = _case(seed)
+    check_merge_idempotent(k, sa, ra)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_merge_commutative(seed):
+    check_merge_commutative(*_case(seed))
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_tie_rule_matches_lax_top_k(seed):
+    k, sa, ra, _, _ = _case(seed)
+    check_tie_rule_matches_lax_top_k(k, sa, ra)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_condition_a_sequential_and_monotone(seed):
+    check_condition_a_sequential_and_monotone(seed)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis amplifier (when installed)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+    @given(seeds)
+    @settings(max_examples=60, deadline=None)
+    def test_merge_idempotent_fuzz(seed):
+        k, sa, ra, _, _ = _case(seed)
+        check_merge_idempotent(k, sa, ra)
+
+    @given(seeds)
+    @settings(max_examples=60, deadline=None)
+    def test_merge_commutative_fuzz(seed):
+        check_merge_commutative(*_case(seed))
+
+    @given(seeds)
+    @settings(max_examples=60, deadline=None)
+    def test_tie_rule_fuzz(seed):
+        k, sa, ra, _, _ = _case(seed)
+        check_tie_rule_matches_lax_top_k(k, sa, ra)
+
+    @given(seeds)
+    @settings(max_examples=25, deadline=None)
+    def test_condition_a_fuzz(seed):
+        check_condition_a_sequential_and_monotone(seed)

@@ -51,6 +51,37 @@ def test_promips_greedy_matches_exact(small_model):
     assert agree >= 2, [(a.out_tokens, b.out_tokens) for a, b in zip(reqs_e, reqs_p)]
 
 
+def test_promips_fused_runtime_decodes_identically(small_model):
+    """A fused-verification search_runtime is a first-class engine option
+    (PR 5: trace-safe, bit-identical search results to batched) — decoded
+    tokens must match the default batched config token-for-token. The
+    default stays "batched": at decode-shaped batches the single batched
+    graph measures faster per step on the CPU oracle (engine.__init__
+    comment has the numbers)."""
+    from repro.core.runtime import RuntimeConfig
+
+    cfg, params = small_model
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(1, cfg.vocab, size=8) for _ in range(3)]
+
+    outs = {}
+    for verification in ("batched", "fused"):
+        eng = DecodeEngine(
+            params, cfg, batch_slots=3, max_len=64, logits_mode="promips",
+            promips_kwargs=dict(m=8, c=0.95, p=0.95),
+            search_runtime=RuntimeConfig(
+                mode="two_phase", verification=verification,
+                norm_adaptive=True, cs_prune=True))
+        reqs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+        eng.run()
+        outs[verification] = [r.out_tokens for r in reqs]
+    assert outs["fused"] == outs["batched"], outs
+    eng_default = DecodeEngine(params, cfg, batch_slots=3, max_len=64,
+                               logits_mode="promips",
+                               promips_kwargs=dict(m=8, c=0.95, p=0.95))
+    assert eng_default.search_runtime.verification == "batched"
+
+
 # -- continuous-batching internals (scripted decode: the fake replaces the
 # jit'd decode step so token emission — and therefore slot lifecycle — is
 # fully deterministic; admission prefill still runs the real model) ----------
