@@ -212,6 +212,18 @@ def bench_api(quick: bool = True):
         s.search(ql, k=cfg["k"])  # warm-up / compile
         searchers[backend] = (s, build_s)
         times[backend] = []
+    # prefilter-on variant reuses the SAME built index (the sketch is built
+    # unconditionally) with only the runtime knob flipped — no second
+    # 100k-corpus build.
+    import dataclasses as _dc
+    s_pm, build_pm = searchers["promips"]
+    s_pf = type(s_pm)(s_pm.pm,
+                      _dc.replace(s_pm.runtime, prefilter=True,
+                                  prefilter_eps=PREFILTER_EPS),
+                      s_pm.search_path)
+    s_pf.search(ql, k=cfg["k"])  # warm-up / compile
+    searchers["promips-prefilter"] = (s_pf, build_pm)
+    times["promips-prefilter"] = []
     # interleaved reps + medians: both backends see the same host
     # conditions (this box's wall clock jitters +-20% across seconds)
     results = {}
@@ -236,6 +248,18 @@ def bench_api(quick: bool = True):
         rec["large_n"]["promips_vs_exact_speedup"] > 1.0)
     rows.append(("api/large_n/promips_vs_exact", 0.0,
                  f"x{rec['large_n']['promips_vs_exact_speedup']:.2f}"))
+    # prefilter on/off page fractions through the facade (history.jsonl
+    # carries these per commit; ci.sh guards the smoke-scale counterpart)
+    nb = s_pm.pm.meta.n_blocks
+    cells = rec["large_n"]["backends"]
+    rec["large_n"]["prefilter_eps"] = PREFILTER_EPS
+    rec["large_n"]["prefilter_on_pages_frac"] = (
+        cells["promips-prefilter"]["pages_per_query"] / nb)
+    rec["large_n"]["prefilter_off_pages_frac"] = (
+        cells["promips"]["pages_per_query"] / nb)
+    rows.append(("api/large_n/prefilter_pages_frac", 0.0,
+                 f"{rec['large_n']['prefilter_on_pages_frac']:.3f} vs "
+                 f"{rec['large_n']['prefilter_off_pages_frac']:.3f} off"))
 
     root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
     with open(os.path.join(root, "BENCH_api.json"), "w") as f:
@@ -254,6 +278,11 @@ def bench_api(quick: bool = True):
 LARGE_N = dict(n=100_000, d=128, rank=16, decay=0.5, norm_tail=0.6,
                m=16, k_p=8, k_sp=8, norm_strata=8, c=0.9, p0=0.6,
                n_q=64, k=10)
+
+# Sketch-prefilter calibration knob (DESIGN.md §13): eps=0.1 holds recall
+# 1.000 at the LARGE_N point while cutting pages_frac 0.84 -> ~0.11; the
+# cliff is below ~0.07. The guarantee suite pins this same eps on its grid.
+PREFILTER_EPS = 0.1
 
 
 def _large_corpus():
@@ -353,18 +382,41 @@ def bench_search_runtime(quick: bool = False):
     rows.append(("runtime/speedup_fused_vs_batched", 0.0,
                  f"x{rec['speedup_fused_vs_batched']:.2f}"))
 
+    # prefilter on/off page fractions at the smoke scale (ci.sh guards the
+    # cut + the recall floor; exact ids from a jit scan, not the index)
+    xj = jnp.asarray(x, jnp.float32)
+    eids = np.asarray(jax.lax.top_k((xj @ qj.T).T, 10)[1])
+    from repro.core import recall_at_k
+    for tag, kw in (("off", {}), ("on", dict(prefilter=True,
+                                             prefilter_eps=PREFILTER_EPS))):
+        ids, _, st = pm.search(qj, k=10, norm_adaptive=True, cs_prune=True,
+                               **kw)
+        ids = np.asarray(ids)
+        rec[f"prefilter_{tag}_pages_frac"] = float(
+            np.mean(np.asarray(st.pages))) / pm.meta.n_blocks
+        rec[f"prefilter_{tag}_recall"] = float(np.mean(
+            [recall_at_k(ids[i], eids[i]) for i in range(n_q)]))
+    rec["prefilter_eps"] = PREFILTER_EPS
+    rows.append(("runtime/prefilter_pages_frac", 0.0,
+                 f"{rec['prefilter_on_pages_frac']:.3f} vs "
+                 f"{rec['prefilter_off_pages_frac']:.3f} off; "
+                 f"recall={rec['prefilter_on_recall']:.3f}"))
+
     rec["large_n"] = large = _bench_runtime_large()
     rows.append((f"runtime/large_n{large['n']}/exact",
                  large["exact_us_per_query"], "numpy per-query scan"))
     rows.append((f"runtime/large_n{large['n']}/exact_jit",
                  large["exact_jit_us_per_query"], "jit batch matmul+topk"))
-    for label in ("batched", "fused"):
+    for label in ("batched", "fused_noprefilter", "fused"):
         rows.append((f"runtime/large_n{large['n']}/{label}",
                      large[f"{label}_us_per_query"],
                      f"pages={large[f'{label}_pages_mean']:.0f}"
-                     f"/{large['n_blocks']};recall={large['recall']:.3f}"))
+                     f"/{large['n_blocks']};"
+                     f"recall={large[f'{label}_recall']:.3f}"))
     rows.append(("runtime/large_n/speedup_fused_vs_exact", 0.0,
                  f"x{large['speedup_fused_vs_exact']:.2f}"))
+    rows.append(("runtime/large_n/speedup_fused_vs_exact_jit", 0.0,
+                 f"x{large['speedup_fused_vs_exact_jit']:.2f}"))
 
     root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
     with open(os.path.join(root, "BENCH_search.json"), "w") as f:
@@ -417,48 +469,111 @@ def _bench_runtime_large():
         return jax.lax.top_k((xj @ qj.T).T, cfg["k"])
     out = exact_scan(qj)
     out[0].block_until_ready()
-    reps = 3
-    t0 = time.perf_counter()
-    for _ in range(reps):
+
+    def exact_jit_rep():
+        t0 = time.perf_counter()
         out = exact_scan(qj)
         out[0].block_until_ready()
-    rec["exact_jit_us_per_query"] = ((time.perf_counter() - t0)
-                                     / (reps * cfg["n_q"]) * 1e6)
+        return time.perf_counter() - t0
+
+    # headline fused = sketch prefilter ON at the DESIGN.md §13-calibrated
+    # eps; the no-prefilter fused path is recorded alongside so the page
+    # cut is auditable in one record.
+    variants = {
+        "batched": dict(verification="batched"),
+        "fused_noprefilter": dict(verification="fused"),
+        "fused": dict(verification="fused", prefilter=True,
+                      prefilter_eps=PREFILTER_EPS),
+    }
+    rec["prefilter_eps"] = PREFILTER_EPS
 
     def device_rep(label):
         t0 = time.perf_counter()
-        ids, _, st = pm.search(qj, k=cfg["k"], verification=label,
-                               norm_adaptive=True, cs_prune=True)
+        ids, _, st = pm.search(qj, k=cfg["k"], norm_adaptive=True,
+                               cs_prune=True, **variants[label])
         ids.block_until_ready()
         return time.perf_counter() - t0, ids, st
 
-    for label in ("batched", "fused"):
+    for label in variants:
         device_rep(label)  # compile
-    # INTERLEAVED exact/batched/fused reps: this host's wall clock drifts
-    # +-20% over tens of seconds, so back-to-back blocks of reps make the
-    # recorded ratios a lottery; pairing every rep and taking the median
+    # INTERLEAVED exact/exact_jit/batched/fused reps: this host's wall clock
+    # drifts +-20% over tens of seconds, so back-to-back blocks of reps make
+    # the recorded ratios a lottery; pairing every rep and taking the median
     # per-pair ratio measures all contenders under the same conditions.
-    t_ex, t_bat, t_fus, ratios = [], [], [], []
+    # exact_jit is paired the same way (not timed once in its own block) so
+    # speedup_fused_vs_exact_jit is an honest same-conditions ratio.
+    t_ex, t_jit = [], []
+    times = {label: [] for label in variants}
+    outs = {}
+    ratios, ratios_jit = [], []
     for _ in range(5):
-        te = exact_rep()
-        tb, _, _ = device_rep("batched")
-        tf, ids, st = device_rep("fused")
-        t_ex.append(te)
-        t_bat.append(tb)
-        t_fus.append(tf)
-        ratios.append(te / tf)
+        t_ex.append(exact_rep())
+        t_jit.append(exact_jit_rep())
+        for label in variants:
+            dt, ids, st = device_rep(label)
+            times[label].append(dt)
+            outs[label] = (ids, st)
+        ratios.append(t_ex[-1] / times["fused"][-1])
+        ratios_jit.append(t_jit[-1] / times["fused"][-1])
     rec["exact_us_per_query"] = float(np.median(t_ex)) / cfg["n_q"] * 1e6
-    rec["batched_us_per_query"] = float(np.median(t_bat)) / cfg["n_q"] * 1e6
-    rec["fused_us_per_query"] = float(np.median(t_fus)) / cfg["n_q"] * 1e6
-    rec["batched_pages_mean"] = rec["fused_pages_mean"] = float(
-        np.mean(np.asarray(st.pages)))
-    ids = np.asarray(ids)
-    rec["recall"] = float(np.mean([recall_at_k(ids[i], eids[i])
-                                   for i in range(cfg["n_q"])]))
+    rec["exact_jit_us_per_query"] = float(np.median(t_jit)) / cfg["n_q"] * 1e6
+    for label in variants:
+        ids, st = outs[label]
+        ids = np.asarray(ids)
+        rec[f"{label}_us_per_query"] = (float(np.median(times[label]))
+                                        / cfg["n_q"] * 1e6)
+        rec[f"{label}_pages_mean"] = float(np.mean(np.asarray(st.pages)))
+        rec[f"{label}_recall"] = float(np.mean(
+            [recall_at_k(ids[i], eids[i]) for i in range(cfg["n_q"])]))
+    rec["recall"] = rec["fused_recall"]
+    rec["recall_noprefilter"] = rec["fused_noprefilter_recall"]
     rec["pages_frac_of_blocks"] = rec["fused_pages_mean"] / rec["n_blocks"]
+    rec["pages_frac_noprefilter"] = (rec["fused_noprefilter_pages_mean"]
+                                     / rec["n_blocks"])
     rec["pruning_engaged"] = rec["pages_frac_of_blocks"] < 1.0
     rec["speedup_fused_vs_exact"] = float(np.median(ratios))
+    rec["speedup_fused_vs_exact_jit"] = float(np.median(ratios_jit))
+    rec["roofline"] = _roofline_record(pm, qj, cfg["k"])
     return rec
+
+
+def _roofline_record(pm, qj, k):
+    """Achieved-vs-roofline cost terms of the in-graph fused search
+    (prefilter on/off) and the exact jit scan, via XLA's cost_analysis on
+    the compiled graphs (`launch/roofline.kernel_cost`). Caveat recorded
+    honestly: the in-graph driver compiles EVERY lax.switch tile branch, and
+    static cost_analysis sums them all, so these are compile-time upper
+    bounds that cannot see the prefilter's runtime branch selection — the
+    dynamic traffic cut is what `pages_frac_of_blocks` (vs
+    `pages_frac_noprefilter`) audits; this record pins the roofline context
+    (memory-bound, and how far the exact sgemm sits from the bound)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import RuntimeConfig, runtime_search
+    from repro.launch.roofline import kernel_cost
+
+    xj = jnp.asarray(pm.arrays.x)
+
+    def graph(cfg):
+        return jax.jit(lambda arrays, q: runtime_search(arrays, pm.meta,
+                                                        q, cfg))
+
+    out = {}
+    try:
+        out["exact_jit"] = kernel_cost(
+            lambda q: jax.lax.top_k((xj @ q.T).T, k), qj)
+        out["fused"] = kernel_cost(
+            graph(RuntimeConfig(k=k, norm_adaptive=True, cs_prune=True,
+                                prefilter=True,
+                                prefilter_eps=PREFILTER_EPS)),
+            pm.arrays, qj)
+        out["fused_noprefilter"] = kernel_cost(
+            graph(RuntimeConfig(k=k, norm_adaptive=True, cs_prune=True)),
+            pm.arrays, qj)
+    except Exception as e:  # cost_analysis is backend-dependent; never fatal
+        out["error"] = f"{type(e).__name__}: {e}"
+    return out
 
 
 def bench_sharded(quick: bool = True):

@@ -62,10 +62,51 @@ if large:
         print(f"PERF GUARD WARN: large-n fused-vs-exact x{vs_exact:.2f} "
               "dipped below x1.00 — wall-clock jitter or a real regression; "
               "re-run before trusting it")
+    # honesty guard vs the jit'd dense scan (PR 6): on this CPU box the
+    # frontend alone costs ~one exact_jit batch, so < x1.00 is EXPECTED
+    # (DESIGN.md §13 has the breakdown); the hard floor only catches the
+    # fused path collapsing outright.
+    vs_jit = large.get("speedup_fused_vs_exact_jit", 0.0)
+    if vs_jit < 0.05:
+        print(f"PERF GUARD FAIL: large-n fused collapsed vs the jit scan "
+              f"(x{vs_jit:.2f} < x0.05)")
+        ok = False
+    elif vs_jit < 1.0:
+        print(f"PERF GUARD WARN: large-n fused-vs-exact_jit x{vs_jit:.2f} "
+              "< x1.00 — structural on this CPU container, see DESIGN.md "
+              "§13 (the TPU DMA walk is what monetizes the page cut)")
+    # sketch prefilter (PR 6): must actually cut pages at the large-n
+    # point while holding the recall floor
+    pf_on = large.get("pages_frac_of_blocks", 1.0)
+    pf_off = large.get("pages_frac_noprefilter", 0.0)
+    if pf_on >= pf_off:
+        print(f"PERF GUARD FAIL: prefilter does not cut large-n pages "
+              f"({pf_on:.3f} on vs {pf_off:.3f} off)")
+        ok = False
+    if pf_on >= 0.3:
+        print(f"PERF GUARD FAIL: large-n prefilter pages_frac {pf_on:.3f} "
+              f">= 0.30")
+        ok = False
+# smoke-scale prefilter guard: fewer pages than off AND recall >= 0.95
+sp_on = rec.get("prefilter_on_pages_frac")
+sp_off = rec.get("prefilter_off_pages_frac")
+if sp_on is not None:
+    if sp_on >= sp_off:
+        print(f"PERF GUARD FAIL: smoke prefilter does not cut pages "
+              f"({sp_on:.3f} on vs {sp_off:.3f} off)")
+        ok = False
+    if rec.get("prefilter_on_recall", 0.0) < 0.95:
+        print(f"PERF GUARD FAIL: smoke prefilter recall "
+              f"{rec.get('prefilter_on_recall')} < 0.95")
+        ok = False
 print(f"perf guard: pruning_engaged={rec.get('pruning_engaged')} "
       f"fused_vs_batched=x{speedup:.2f} "
       f"large_n_fused_vs_exact=x{large.get('speedup_fused_vs_exact', 0.0):.2f} "
-      f"large_n_recall={large.get('recall', 0.0):.3f}")
+      f"large_n_fused_vs_exact_jit="
+      f"x{large.get('speedup_fused_vs_exact_jit', 0.0):.2f} "
+      f"large_n_recall={large.get('recall', 0.0):.3f} "
+      f"prefilter_pages_frac={large.get('pages_frac_of_blocks', 0.0):.3f}"
+      f"(off {large.get('pages_frac_noprefilter', 0.0):.3f})")
 sys.exit(0 if ok else 1)
 PY
 

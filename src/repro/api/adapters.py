@@ -42,11 +42,14 @@ from .types import Capabilities, GuaranteeConfig
 
 def _runtime_from_opts(guarantee: GuaranteeConfig, mode: str,
                        verification: str, norm_adaptive: Optional[bool],
-                       cs_prune: Optional[bool], budget, budget2
+                       cs_prune: Optional[bool], budget, budget2,
+                       prefilter: bool = False, prefilter_eps: float = 1.0
                        ) -> RuntimeConfig:
     """Map facade opts onto a `RuntimeConfig` with guarantee-safe defaults:
     budgets stay None (scan every selected block — the Theorem-2 bound
-    requires no truncation) unless the caller explicitly trades them."""
+    requires no truncation) unless the caller explicitly trades them.
+    ``prefilter`` turns on the quantized-sketch block prefilter; at the
+    default ``prefilter_eps=1.0`` it is lossless, so the guarantee holds."""
     if mode == "progressive":
         norm_adaptive = True if norm_adaptive is None else norm_adaptive
         cs_prune = True if cs_prune is None else cs_prune
@@ -54,7 +57,8 @@ def _runtime_from_opts(guarantee: GuaranteeConfig, mode: str,
         k=guarantee.k, budget=budget, budget2=budget2, mode=mode,
         verification=verification,
         norm_adaptive=bool(norm_adaptive) if norm_adaptive is not None else False,
-        cs_prune=bool(cs_prune) if cs_prune is not None else False)
+        cs_prune=bool(cs_prune) if cs_prune is not None else False,
+        prefilter=bool(prefilter), prefilter_eps=float(prefilter_eps))
 
 
 @register
@@ -70,7 +74,7 @@ class PromipsSearcher(Searcher):
     """
 
     name = "promips"
-    capabilities = Capabilities(guaranteed=True)
+    capabilities = Capabilities(guaranteed=True, prefilter=True)
 
     def __init__(self, pm: ProMIPS, runtime: RuntimeConfig,
                  search_path: str = "device"):
@@ -85,6 +89,7 @@ class PromipsSearcher(Searcher):
     def build(cls, x, *, guarantee, seed, page_bytes, m=None,
               mode="two_phase", verification="fused", norm_adaptive=None,
               cs_prune=None, budget=None, budget2=None, norm_strata=None,
+              prefilter=False, prefilter_eps=1.0,
               search_path="device", **index_opts) -> "PromipsSearcher":
         plan = guarantee.derive(len(x))
         if norm_strata is None:
@@ -97,7 +102,8 @@ class PromipsSearcher(Searcher):
                            norm_strata=int(norm_strata), **index_opts)
         return cls(pm, _runtime_from_opts(guarantee, mode, verification,
                                           norm_adaptive, cs_prune,
-                                          budget, budget2), search_path)
+                                          budget, budget2, prefilter,
+                                          prefilter_eps), search_path)
 
     def _search_host(self, queries, k, cfg: RuntimeConfig
                      ) -> Tuple[np.ndarray, np.ndarray, dict]:
@@ -184,7 +190,8 @@ class StreamSearcher(_MutableMixin, Searcher):
     """Streaming ProMIPS (base + delta segments, tombstones, compaction)."""
 
     name = "promips-stream"
-    capabilities = Capabilities(guaranteed=True, supports_mutation=True)
+    capabilities = Capabilities(guaranteed=True, supports_mutation=True,
+                                prefilter=True)
 
     def __init__(self, stream: MutableProMIPS, runtime: RuntimeConfig):
         self.inner = stream
@@ -194,6 +201,7 @@ class StreamSearcher(_MutableMixin, Searcher):
     def build(cls, x, *, guarantee, seed, page_bytes, ids=None, m=None,
               mode="two_phase", verification="fused", norm_adaptive=None,
               cs_prune=None, budget=None, budget2=None, norm_strata=1,
+              prefilter=False, prefilter_eps=1.0,
               delta_capacity=None, auto_compact=False, **index_opts
               ) -> "StreamSearcher":
         plan = guarantee.derive(len(x))
@@ -204,7 +212,8 @@ class StreamSearcher(_MutableMixin, Searcher):
             norm_strata=int(norm_strata), **index_opts)
         return cls(stream, _runtime_from_opts(guarantee, mode, verification,
                                               norm_adaptive, cs_prune,
-                                              budget, budget2))
+                                              budget, budget2, prefilter,
+                                              prefilter_eps))
 
     def _search(self, queries, k, runtime: Optional[RuntimeConfig] = None
                 ) -> Tuple[np.ndarray, np.ndarray, dict]:
@@ -238,7 +247,7 @@ class ShardedSearcher(_MutableMixin, Searcher):
 
     name = "sharded"
     capabilities = Capabilities(guaranteed=True, supports_mutation=True,
-                                supports_sharding=True)
+                                supports_sharding=True, prefilter=True)
 
     def __init__(self, sharded: MutableShardedProMIPS, runtime: RuntimeConfig):
         self.inner = sharded
@@ -248,6 +257,7 @@ class ShardedSearcher(_MutableMixin, Searcher):
     def build(cls, x, *, guarantee, seed, page_bytes, n_shards=2, m=None,
               mode="two_phase", verification="fused", norm_adaptive=None,
               cs_prune=None, budget=None, budget2=None, norm_strata=1,
+              prefilter=False, prefilter_eps=1.0,
               delta_capacity=None, auto_compact=False, **index_opts
               ) -> "ShardedSearcher":
         # m* is derived from the PER-SHARD corpus size (each shard owns its
@@ -260,7 +270,8 @@ class ShardedSearcher(_MutableMixin, Searcher):
             norm_strata=int(norm_strata), **index_opts)
         return cls(sharded, _runtime_from_opts(guarantee, mode, verification,
                                                norm_adaptive, cs_prune,
-                                               budget, budget2))
+                                               budget, budget2, prefilter,
+                                               prefilter_eps))
 
     def _search(self, queries, k, runtime: Optional[RuntimeConfig] = None
                 ) -> Tuple[np.ndarray, np.ndarray, dict]:

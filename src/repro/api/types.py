@@ -28,6 +28,8 @@ class Capabilities:
     supports_mutation: bool = False   # insert/delete/update after build
     supports_sharding: bool = False   # corpus split over multiple sub-indexes
     guaranteed: bool = False          # honors the (c, p0) probability contract
+    prefilter: bool = False           # quantized-sketch block prefilter
+                                      # (RuntimeConfig.prefilter / eps knob)
 
 
 @dataclass(frozen=True)

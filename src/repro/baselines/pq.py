@@ -13,7 +13,8 @@ import time
 
 import numpy as np
 
-from ..core.idistance import _pairwise_d2, kmeans_np
+from ..core.idistance import kmeans_np
+from ..core.sketch import pq_assign, pq_train
 
 
 class PQBased:
@@ -45,19 +46,11 @@ class PQBased:
         cells = min(self.n_cells, n)
         self.coarse, assign = kmeans_np(xq, cells, iters=10, seed=self.seed)
         resid = xq - self.coarse[assign]
-        self.codebooks = np.zeros((self.m_sub, self.ksub, self.sub_d), np.float32)
-        codes = np.zeros((n, self.m_sub), np.uint8)
         rng = np.random.RandomState(self.seed + 1)
         train = resid[rng.choice(n, size=min(n, 4000), replace=False)]
-        for s in range(self.m_sub):
-            sl = slice(s * self.sub_d, (s + 1) * self.sub_d)
-            cb, _ = kmeans_np(train[:, sl], min(self.ksub, len(train)), iters=8,
-                              seed=self.seed + s)
-            if cb.shape[0] < self.ksub:
-                cb = np.concatenate([cb, np.zeros((self.ksub - cb.shape[0], self.sub_d),
-                                                  np.float32)])
-            self.codebooks[s] = cb
-            codes[:, s] = _pairwise_d2(resid[:, sl], cb).argmin(1).astype(np.uint8)
+        self.codebooks = pq_train(train, self.m_sub, self.ksub, iters=8,
+                                  seed=self.seed)
+        codes = pq_assign(resid, self.codebooks).astype(np.uint8)
         self.lists = [np.nonzero(assign == c)[0] for c in range(cells)]
         self.codes = codes
         self.x = x

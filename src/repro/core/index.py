@@ -47,6 +47,12 @@ class IndexArrays(NamedTuple):
     block_max_l2sq: np.ndarray  # (NB,) max ||o||^2 over the block's sub-partitions
     block_sp_idx: np.ndarray    # (NB, KMAX) sub-partitions per block (-1 pad) —
                                 # progressive mode's per-block gap computation
+    sk_mu: np.ndarray        # (NB, d) PQ-decoded block centroids (sketch; the
+                             # prefilter scores q @ sk_mu.T — persisted decoded
+                             # so scoring is one matmul, not per-code gathers)
+    sk_codebooks: np.ndarray  # (M_sk, K_sk, d/M_sk) sketch PQ codebooks
+    sk_codes: np.ndarray     # (NB, M_sk) int32 sketch PQ codes
+    sk_err: np.ndarray       # (NB,) max ||o_r - mu~_b|| over valid rows
 
 
 @dataclass(frozen=True)
@@ -68,6 +74,8 @@ class IndexMeta:
     k_sp: int
     seed: int
     norm_strata: int = 1
+    sk_subspaces: int = 0    # sketch PQ subspaces (0 = index has no sketch)
+    sk_codewords: int = 0    # sketch PQ codewords per subspace
 
     @property
     def index_bytes(self) -> int:
@@ -78,7 +86,15 @@ class IndexMeta:
         subparts = self.n_subparts * (self.m * 4 + 4 + 8) + 8
         blocks = self.n_blocks * 8
         proj = self.d * self.m * 4
-        return self.n_pad * per_point + groups + subparts + blocks + proj
+        sketch = 0
+        if self.sk_subspaces:
+            sketch = (self.n_blocks * self.d * 4          # decoded centroids
+                      + self.sk_subspaces * self.sk_codewords
+                      * (self.d // self.sk_subspaces) * 4  # codebooks
+                      + self.n_blocks * self.sk_subspaces * 4  # codes
+                      + self.n_blocks * 4)                 # err radii
+        return (self.n_pad * per_point + groups + subparts + blocks + proj
+                + sketch)
 
 
 class ProMIPSIndex(NamedTuple):
@@ -202,6 +218,14 @@ def build_index(
         block_sp_idx[b, : len(sps)] = sps
         block_max_l2sq[b] = sp_max_l2sq[sps].max()
 
+    from .sketch import build_block_sketch, pick_subspaces
+
+    sk_subspaces = pick_subspaces(d, target=16)
+    sk_codewords = min(256, n_blocks)
+    sk_mu, sk_codebooks, sk_codes, sk_err = build_block_sketch(
+        pad_rows(xs), pad_rows(perm.astype(np.int32), fill=-1), page_rows,
+        sk_subspaces, sk_codewords, seed=seed)
+
     arrays = IndexArrays(
         a=a,
         x=pad_rows(xs),
@@ -222,6 +246,10 @@ def build_index(
         block_sp_hi=block_hi.astype(np.int32),
         block_max_l2sq=block_max_l2sq,
         block_sp_idx=block_sp_idx,
+        sk_mu=sk_mu,
+        sk_codebooks=sk_codebooks,
+        sk_codes=sk_codes,
+        sk_err=sk_err,
     )
     meta = IndexMeta(
         n=n, d=d, m=m, c=c, p=p,
@@ -230,5 +258,6 @@ def build_index(
         n_pad=n_pad, n_blocks=n_blocks,
         n_groups=len(groups.code), n_subparts=len(layout.sp_radius),
         k_p=k_p, n_key=n_key, k_sp=k_sp, seed=seed, norm_strata=norm_strata,
+        sk_subspaces=sk_subspaces, sk_codewords=sk_codewords,
     )
     return ProMIPSIndex(arrays=arrays, meta=meta, layout=layout)

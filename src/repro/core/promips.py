@@ -60,7 +60,8 @@ class ProMIPS:
     def search(self, queries: np.ndarray, k: int = 10,
                budget: Optional[int] = None, budget2: Optional[int] = None,
                norm_adaptive: bool = False, cs_prune: bool = False,
-               verification: str = "fused"):
+               verification: str = "fused", prefilter: bool = False,
+               prefilter_eps: float = 1.0):
         """Batched device-mode c-k-AMIP search. queries: (B, d).
 
         ``verification`` picks the candidate-scoring backend ("fused" =
@@ -76,7 +77,8 @@ class ProMIPS:
         """
         cfg = RuntimeConfig(k=k, budget=budget, budget2=budget2,
                             mode="two_phase", verification=verification,
-                            norm_adaptive=norm_adaptive, cs_prune=cs_prune)
+                            norm_adaptive=norm_adaptive, cs_prune=cs_prune,
+                            prefilter=prefilter, prefilter_eps=prefilter_eps)
         return runtime_search(self.arrays, self.meta, queries, cfg)
 
     def search_progressive(self, queries: np.ndarray, k: int = 10,

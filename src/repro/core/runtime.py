@@ -83,6 +83,9 @@ class RuntimeConfig:
     norm_adaptive: bool = False
     cs_prune: bool = False
     use_pallas: Optional[bool] = None   # None => Pallas on TPU, jnp oracle off-TPU
+    prefilter: bool = False            # quantized-sketch block prefilter
+    prefilter_eps: float = 1.0         # sketch-bound scale; 1.0 = lossless,
+                                       # smaller prunes harder (DESIGN.md §13)
 
     def __post_init__(self):
         self.validate()
@@ -104,6 +107,14 @@ class RuntimeConfig:
             if not isinstance(v, (int, np.integer)) or v < 1:
                 raise ValueError(f"{field_name} must be None (= all blocks) "
                                  f"or a positive int, got {v!r}")
+        if not isinstance(self.prefilter, bool):
+            raise ValueError(f"prefilter must be a bool, got "
+                             f"{self.prefilter!r}")
+        eps = self.prefilter_eps
+        if not isinstance(eps, (int, float, np.floating)) or isinstance(
+                eps, bool) or not 0.0 < float(eps) <= 1.0:
+            raise ValueError(f"prefilter_eps must be a float in (0, 1], got "
+                             f"{eps!r}")
 
 
 def search(arrays: IndexArrays, meta: IndexMeta, queries,
@@ -115,6 +126,12 @@ def search(arrays: IndexArrays, meta: IndexMeta, queries,
     with static meta/config arguments).
     """
     cfg.validate()  # fail fast, naming valid choices, before the jit'd path
+    if cfg.prefilter and not meta.sk_subspaces:
+        raise ValueError(
+            "prefilter=True but the index carries no sketch (built before "
+            "the sketch existed?); rebuild the index or disable prefilter")
+    if cfg.prefilter and cfg.mode != "two_phase":
+        raise ValueError("prefilter is only supported in two_phase mode")
     budget = int(min(cfg.budget if cfg.budget is not None else meta.n_blocks,
                      meta.n_blocks))
     budget2 = int(min(cfg.budget2 if cfg.budget2 is not None else budget,
@@ -136,14 +153,17 @@ def search(arrays: IndexArrays, meta: IndexMeta, queries,
             ids, _, stats = search_batch_fused(
                 arrays, meta, q, k=cfg.k, budget=budget, budget2=budget2,
                 norm_adaptive=cfg.norm_adaptive, cs_prune=cfg.cs_prune,
-                use_pallas=cfg.use_pallas)
+                use_pallas=cfg.use_pallas, prefilter=cfg.prefilter,
+                prefilter_eps=cfg.prefilter_eps)
         else:
             ids, _, stats = search_batch(arrays, meta, q, k=cfg.k,
                                          budget=budget, budget2=budget2,
                                          norm_adaptive=cfg.norm_adaptive,
                                          cs_prune=cfg.cs_prune,
                                          verification=cfg.verification,
-                                         use_pallas=cfg.use_pallas)
+                                         use_pallas=cfg.use_pallas,
+                                         prefilter=cfg.prefilter,
+                                         prefilter_eps=cfg.prefilter_eps)
     else:
         raise ValueError(f"unknown search mode: {cfg.mode!r}")
     return ids, _rescore(arrays.x, stats.rows, q), stats

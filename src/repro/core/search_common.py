@@ -119,6 +119,67 @@ def gap_select(gap, radius):
     return (gap <= radius) & (radius >= 0.0)
 
 
+def block_valid_from_ids(ids, page_rows: int, xp=jnp):
+    """(NB,) bool: does block b hold at least one real (non-padding) row?
+
+    Derived from ids rather than stored so tombstoning/sharding layers that
+    rewrite ids (padding rows carry -1) stay consistent automatically.
+    """
+    nb = ids.shape[0] // page_rows
+    return xp.any(ids.reshape(nb, page_rows) >= 0, axis=1)
+
+
+def sketch_margin(queries, sk_err, eps: float, xp=jnp):
+    """(B, NB) sketch error band: bnd = eps * ||q|| * err_b.
+
+    Paired with est[b_q, b] = <q, mu~_b> (`kernels.ops.sketch_scores`), at
+    eps = 1 every valid row o_r of block b satisfies
+    <q, o_r> in [est - bnd, est + bnd] (Cauchy-Schwarz on
+    ||o_r - mu~_b|| <= err_b); eps < 1 shrinks the interval as a calibrated
+    tightness knob (DESIGN.md §13).
+    """
+    q_norm = xp.sqrt(xp.sum(queries * queries, axis=1))
+    return eps * q_norm[:, None] * sk_err[None, :]
+
+
+def sketch_survivors_round1(mask, est, bnd, bvalid, k: int, xp=jnp):
+    """Round-1 survivor rule: keep candidate blocks whose upper bound clears
+    a per-query threshold tau <= (kth-largest lower bound over candidates).
+
+    tau comes from G = min(2k, NB) strided groups: the kth-largest per-group
+    max of lb. The top-k group maxes are k DISTINCT lb entries all >= tau, so
+    tau lower-bounds the true kth-largest lb — pruning ub < tau is therefore
+    lossless at eps = 1 (every pruned block's rows score strictly below k
+    candidate rows that survive). Group-max instead of lax.top_k because XLA
+    CPU's top_k with dead indices is pathologically slow (~30x).
+
+    When NB < G (tiny index) or fewer than k groups hold a candidate, tau
+    degrades to -inf and nothing is pruned — k >= n_alive stays exact.
+    """
+    nb = est.shape[1]
+    g = min(2 * k, nb)
+    cand = mask & bvalid[None, :]
+    if g < k:
+        return cand
+    lb = xp.where(cand, est - bnd, -xp.inf)
+    pad = (-nb) % g
+    if pad:
+        fill = xp.full(lb.shape[:1] + (pad,), -xp.inf, lb.dtype)
+        lb = xp.concatenate([lb, fill], axis=1)
+    gm = xp.max(lb.reshape(lb.shape[0], -1, g), axis=1)
+    tau = xp.sort(gm, axis=1)[:, g - k]
+    return cand & (est + bnd >= tau[:, None])
+
+
+def sketch_survivors_round2(mask, est, bnd, bvalid, s_k, xp=jnp):
+    """Compensation-round survivor rule: after round 1 the running kth score
+    s_k is a realized lower bound, so any block whose upper bound est + bnd
+    falls below it cannot improve the top-k. Lossless at eps = 1; queries
+    with an empty top-k carry s_k = -inf and keep everything.
+    """
+    return mask & bvalid[None, :] & (est + bnd >= s_k[:, None])
+
+
 def topk_merge(top_scores, top_rows, scores, rows, k: int, xp=jnp):
     """Merge new (scores, rows) candidates into a running descending top-k.
 

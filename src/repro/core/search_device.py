@@ -199,6 +199,30 @@ def compensation_masks(arrays: IndexArrays, meta: IndexMeta, d_sp, q_l2sq,
     return need2, r1, mask1
 
 
+def prefilter_round1(arrays: IndexArrays, queries, mask0, k: int,
+                     page_rows: int, eps: float,
+                     use_pallas: Optional[bool]):
+    """Quantized-sketch prefilter, round 1 (DESIGN.md §13): score the block
+    sketch for EVERY candidate block before any page is fetched and keep
+    only blocks whose upper bound clears the group-max tau. Returns
+    (surv (B, NB), est, bnd, bvalid) — est/bnd/bvalid are carried to
+    `prefilter_round2` so the compensation round reuses the one sketch
+    evaluation. Shared by every backend (host fused driver jit-wraps it,
+    the in-graph driver and batched/scan paths call it in-trace), which is
+    what keeps all of them bit-identical with the prefilter on."""
+    est = ops.sketch_scores(queries, arrays.sk_mu, arrays.sk_codebooks,
+                            arrays.sk_codes, use_pallas=use_pallas)
+    bnd = sc.sketch_margin(queries, arrays.sk_err, eps)
+    bvalid = sc.block_valid_from_ids(arrays.ids, page_rows)
+    surv = sc.sketch_survivors_round1(mask0, est, bnd, bvalid, k)
+    return surv, est, bnd, bvalid
+
+
+def prefilter_round2(mask1, est, bnd, bvalid, s_k):
+    """Compensation-round sketch pruning against the realized k-th score."""
+    return sc.sketch_survivors_round2(mask1, est, bnd, bvalid, s_k)
+
+
 def _merge_topk(top: TopK, scores, rows, k: int) -> TopK:
     s, r = sc.topk_merge(top.scores, top.rows, scores, rows, k, xp=jnp)
     return TopK(scores=s, rows=r)
@@ -269,15 +293,22 @@ def _verify_batched(arrays: IndexArrays, meta: IndexMeta, queries, block_masks,
 
 
 def _search_batch_batched(arrays, meta, queries, k, budget, budget2,
-                          norm_adaptive, cs_prune, use_pallas):
+                          norm_adaptive, cs_prune, use_pallas,
+                          prefilter=False, prefilter_eps=1.0):
     """Two-phase runtime: batched selection + one mips_score call per round."""
     n_batch = queries.shape[0]
     q_proj, q_l2sq, d_sp, r0, probe_ok, c_half, mask0 = select_frontend(
         arrays, meta, queries)
+    mask_r1 = mask0
+    sk_est = sk_bnd = sk_bvalid = None
+    if prefilter:
+        mask_r1, sk_est, sk_bnd, sk_bvalid = prefilter_round1(
+            arrays, queries, mask0, k, meta.page_rows, prefilter_eps,
+            use_pallas)
     empty = TopK(scores=jnp.full((n_batch, k), -jnp.inf),
                  rows=jnp.full((n_batch, k), -1, jnp.int32))
     top, pages1, cand1, done_a, lost1 = _verify_batched(
-        arrays, meta, queries, mask0, empty, c_half, k, budget, use_pallas)
+        arrays, meta, queries, mask_r1, empty, c_half, k, budget, use_pallas)
     # Without this barrier XLA CPU re-materializes round-1 fusions inside the
     # round-2 consumers (~2x wall clock); semantically an identity.
     top, done_a, mask0 = jax.lax.optimization_barrier((top, done_a, mask0))
@@ -287,13 +318,16 @@ def _search_batch_batched(arrays, meta, queries, k, budget, budget2,
     need2, r1, mask1 = compensation_masks(arrays, meta, d_sp, q_l2sq, s_k,
                                           r0, done_a, mask0, norm_adaptive,
                                           cs_prune)
+    mask_r2 = mask1
+    if prefilter:
+        mask_r2 = prefilter_round2(mask1, sk_est, sk_bnd, sk_bvalid, s_k)
 
     # With an all-False mask1 (every query stopped by A/B in round 1 — the
     # common case) the verification round is an identity on `top` with zero
     # pages/candidates; skip the full tile gather + matmul it would burn.
     def round2(args):
-        mask1, top = args
-        return _verify_batched(arrays, meta, queries, mask1, top, c_half, k,
+        mask_r2, top = args
+        return _verify_batched(arrays, meta, queries, mask_r2, top, c_half, k,
                                budget2, use_pallas)
 
     def skip2(args):
@@ -303,7 +337,7 @@ def _search_batch_batched(arrays, meta, queries, k, budget, budget2,
         return top, zero, zero, false, false
 
     top, pages2, cand2, _, lost2 = jax.lax.cond(
-        jnp.any(need2), round2, skip2, (mask1, top))
+        jnp.any(need2), round2, skip2, (mask_r2, top))
 
     stats = SearchStats(
         pages=pages1 + pages2,
@@ -363,16 +397,22 @@ def _scan_blocks(arrays, meta, q, q_l2sq, block_mask, top: TopK, k: int, budget:
 
 
 def _search_batch_scan(arrays, meta, queries, k, budget, budget2,
-                       norm_adaptive, cs_prune):
+                       norm_adaptive, cs_prune,
+                       prefilter=False, prefilter_eps=1.0):
     n_batch = queries.shape[0]
     q_proj, q_l2sq, d_sp, r0, probe_ok, c_half, mask0 = select_frontend(
         arrays, meta, queries)
+    mask_r1 = mask0
+    sk_est = sk_bnd = sk_bvalid = None
+    if prefilter:
+        mask_r1, sk_est, sk_bnd, sk_bvalid = prefilter_round1(
+            arrays, queries, mask0, k, meta.page_rows, prefilter_eps, None)
 
     empty = TopK(scores=jnp.full((n_batch, k), -jnp.inf),
                  rows=jnp.full((n_batch, k), -1, jnp.int32))
     top, pages1, cand1, done_a = jax.vmap(
         lambda q, ql2, m, t: _scan_blocks(arrays, meta, q, ql2, m, t, k, budget)
-    )(queries, q_l2sq, mask0, empty)
+    )(queries, q_l2sq, mask_r1, empty)
 
     # Condition B + compensation selection (same batch-native functions as
     # the batched/fused backends, so the masks agree bit-for-bit).
@@ -380,12 +420,15 @@ def _search_batch_scan(arrays, meta, queries, k, budget, budget2,
     need2, r1, mask1 = compensation_masks(arrays, meta, d_sp, q_l2sq, s_k,
                                           r0, done_a, mask0, norm_adaptive,
                                           cs_prune)
+    mask_r2 = mask1
+    if prefilter:
+        mask_r2 = prefilter_round2(mask1, sk_est, sk_bnd, sk_bvalid, s_k)
     top, pages2, cand2, _ = jax.vmap(
         lambda q, ql2, m, t: _scan_blocks(arrays, meta, q, ql2, m, t, k, budget2)
-    )(queries, q_l2sq, mask1, top)
+    )(queries, q_l2sq, mask_r2, top)
 
-    exhausted = (jnp.sum(mask0.astype(jnp.int32), axis=1) > budget) | (
-        need2 & (jnp.sum(mask1.astype(jnp.int32), axis=1) > budget2)
+    exhausted = (jnp.sum(mask_r1.astype(jnp.int32), axis=1) > budget) | (
+        need2 & (jnp.sum(mask_r2.astype(jnp.int32), axis=1) > budget2)
     )
     stats = SearchStats(
         pages=pages1 + pages2,
@@ -404,7 +447,8 @@ def _search_batch_scan(arrays, meta, queries, k, budget, budget2,
 @functools.partial(
     jax.jit,
     static_argnames=("meta", "k", "budget", "budget2", "norm_adaptive",
-                     "cs_prune", "verification", "use_pallas"),
+                     "cs_prune", "verification", "use_pallas", "prefilter",
+                     "prefilter_eps"),
 )
 def search_batch(
     arrays: IndexArrays,
@@ -417,6 +461,8 @@ def search_batch(
     cs_prune: bool = False,
     verification: str = "batched",
     use_pallas: Optional[bool] = None,
+    prefilter: bool = False,
+    prefilter_eps: float = 1.0,
 ):
     """c-k-AMIP search for a batch of queries. queries: (B, d).
 
@@ -424,7 +470,8 @@ def search_batch(
     ``verification`` selects the candidate-scoring backend (module docstring);
     identical results at full budget, "batched" amortizes the whole batch
     into one Pallas matmul per round (budget semantics differ when finite —
-    see module docstring).
+    see module docstring). ``prefilter`` enables the quantized-sketch block
+    prefilter on every backend (`prefilter_round1/2`, DESIGN.md §13).
     """
     if verification == "fused":
         # the in-graph fused driver: pow2 tile buckets as lax.switch
@@ -435,13 +482,15 @@ def search_batch(
         from .search_graph import search_batch_fused_graph
         return search_batch_fused_graph(arrays, meta, queries, k, budget,
                                         budget2, norm_adaptive, cs_prune,
-                                        use_pallas)
+                                        use_pallas, prefilter, prefilter_eps)
     if verification == "batched":
         return _search_batch_batched(arrays, meta, queries, k, budget, budget2,
-                                     norm_adaptive, cs_prune, use_pallas)
+                                     norm_adaptive, cs_prune, use_pallas,
+                                     prefilter, prefilter_eps)
     if verification == "scan":
         return _search_batch_scan(arrays, meta, queries, k, budget, budget2,
-                                  norm_adaptive, cs_prune)
+                                  norm_adaptive, cs_prune,
+                                  prefilter, prefilter_eps)
     raise ValueError(f"unknown verification backend: {verification!r}")
 
 

@@ -44,6 +44,7 @@ from ..kernels import ops
 from .index import IndexArrays, IndexMeta
 from .search_common import next_pow2
 from .search_device import (SearchStats, TopK, compensation_masks,
+                            prefilter_round1, prefilter_round2,
                             select_frontend)
 
 # Unions covering at least this fraction of all blocks take the dense path:
@@ -115,6 +116,13 @@ def _round2(arrays: IndexArrays, meta: IndexMeta, d_sp, q_l2sq, s_k, r0,
                               mask0, norm_adaptive, cs_prune)
 
 
+# host-side jit wrappers around the shared prefilter stages (the graph
+# driver calls the same functions in-trace — bit-parity by construction)
+_prefilter1 = jax.jit(prefilter_round1,
+                      static_argnames=("k", "page_rows", "eps", "use_pallas"))
+_prefilter2 = jax.jit(prefilter_round2)
+
+
 def _plan_tile(mask: np.ndarray, cap: int, n_blocks: int):
     """Size one verification tile from the host-side (B, NB) selection.
 
@@ -162,6 +170,8 @@ def search_batch_fused(
     norm_adaptive: bool = False,
     cs_prune: bool = False,
     use_pallas: Optional[bool] = None,
+    prefilter: bool = False,
+    prefilter_eps: float = 1.0,
 ):
     """c-k-AMIP search, fused backend. Same contract as `search_batch`.
 
@@ -170,6 +180,11 @@ def search_batch_fused(
     trace the bit-identical IN-GRAPH fused driver
     (`core/search_graph.search_batch_fused_graph`) runs instead — same
     kernel, tile buckets selected by `lax.switch` rather than on host.
+
+    ``prefilter`` scores the quantized block sketch for every candidate
+    block BEFORE any page is fetched and verifies only the survivors; both
+    rounds' selections shrink, the Theorem-1/2 accounting is untouched (the
+    survivor rules are lossless at ``prefilter_eps=1``; see DESIGN.md §13).
     """
     n_blocks = meta.n_blocks
     n_batch = queries.shape[0]
@@ -178,6 +193,12 @@ def search_batch_fused(
 
     q_proj, q_l2sq, d_sp, r0, probe_ok, c_half, mask0 = _frontend(
         arrays, meta, queries)
+    mask_r1 = mask0
+    sk_est = sk_bnd = sk_bvalid = None
+    if prefilter:
+        mask_r1, sk_est, sk_bnd, sk_bvalid = _prefilter1(
+            arrays, queries, mask0, k, meta.page_rows, prefilter_eps,
+            use_pallas)
     zero = jnp.zeros(n_batch, jnp.int32)
     false = jnp.zeros(n_batch, bool)
     # strong f32 (explicit dtype): round-2 carries _verify's strong-typed
@@ -187,7 +208,7 @@ def search_batch_fused(
                rows=jnp.full((n_batch, k), -1, jnp.int32))
 
     scores_cache = None
-    plan = _plan_tile(np.asarray(mask0), cap, n_blocks)
+    plan = _plan_tile(np.asarray(mask_r1), cap, n_blocks)
     if plan is None:
         pages1, cand1, done_a, lost1 = zero, zero, false, false
     else:
@@ -204,8 +225,11 @@ def search_batch_fused(
     s_k = top.scores[:, k - 1]
     need2, r1, mask1 = _round2(arrays, meta, d_sp, q_l2sq, s_k, r0, done_a,
                                mask0, norm_adaptive, cs_prune)
+    mask_r2 = mask1
+    if prefilter:
+        mask_r2 = _prefilter2(mask1, sk_est, sk_bnd, sk_bvalid, s_k)
 
-    plan = _plan_tile(np.asarray(mask1), cap2, n_blocks)
+    plan = _plan_tile(np.asarray(mask_r2), cap2, n_blocks)
     if plan is None:
         pages2, cand2, lost2 = zero, zero, false
     else:

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 from ..kernels import ops
 from .index import IndexArrays, IndexMeta
 from .search_device import (SearchStats, TopK, compensation_masks,
+                            prefilter_round1, prefilter_round2,
                             select_frontend)
 from .search_fused import DENSE_FRAC
 
@@ -145,12 +146,18 @@ def search_batch_fused_graph(
     norm_adaptive: bool = False,
     cs_prune: bool = False,
     use_pallas: Optional[bool] = None,
+    prefilter: bool = False,
+    prefilter_eps: float = 1.0,
 ):
     """c-k-AMIP search, fused backend, fully in-graph. Same contract (and
     bit-identical results at every budget) as `search_fused.search_batch_fused`
     — but traceable: `search_device.search_batch` dispatches
     ``verification="fused"`` here, so jit'd callers and `sharded_search`'s
     shard_map run the fused kernel instead of the batched full-tile graph.
+
+    The ``prefilter`` sketch stage calls the SAME `search_fused` prefilter
+    functions the host driver jit-wraps — same expressions, same dispatch —
+    which is what keeps the two drivers bit-identical with it enabled.
     """
     n_blocks = meta.n_blocks
     n_batch = queries.shape[0]
@@ -159,13 +166,19 @@ def search_batch_fused_graph(
 
     q_proj, q_l2sq, d_sp, r0, probe_ok, c_half, mask0 = select_frontend(
         arrays, meta, queries)
+    mask_r1 = mask0
+    sk_est = sk_bnd = sk_bvalid = None
+    if prefilter:
+        mask_r1, sk_est, sk_bnd, sk_bvalid = prefilter_round1(
+            arrays, queries, mask0, k, meta.page_rows, prefilter_eps,
+            use_pallas)
     # strong f32 init (same reason as the host driver: round 2 carries the
     # strong-typed round-1 output back in)
     top = TopK(scores=jnp.full((n_batch, k), -jnp.inf, jnp.float32),
                rows=jnp.full((n_batch, k), -1, jnp.int32))
 
     top, pages1, cand1, done_a, lost1 = _fused_round_graph(
-        arrays, queries, mask0, top, c_half, k, cap, n_blocks,
+        arrays, queries, mask_r1, top, c_half, k, cap, n_blocks,
         meta.page_rows, use_pallas)
     # same barrier as the batched graph: stops XLA CPU re-materializing
     # round-1 fusions inside the round-2 consumers
@@ -175,14 +188,17 @@ def search_batch_fused_graph(
     need2, r1, mask1 = compensation_masks(arrays, meta, d_sp, q_l2sq, s_k, r0,
                                           done_a, mask0, norm_adaptive,
                                           cs_prune)
+    mask_r2 = mask1
+    if prefilter:
+        mask_r2 = prefilter_round2(mask1, sk_est, sk_bnd, sk_bvalid, s_k)
 
     # An empty compensation union is the common case (every query stopped by
     # A/B in round 1); the skip branch is the identity the host driver takes
     # on host, so results stay bit-identical either way.
     def round2(args):
-        mask1, top = args
+        mask_r2, top = args
         out_top, pages, cand, _, lost = _fused_round_graph(
-            arrays, queries, mask1, top, c_half, k, cap2, n_blocks,
+            arrays, queries, mask_r2, top, c_half, k, cap2, n_blocks,
             meta.page_rows, use_pallas)
         return out_top, pages, cand, lost
 
@@ -192,7 +208,7 @@ def search_batch_fused_graph(
         return top, zero, zero, jnp.zeros(n_batch, bool)
 
     top, pages2, cand2, lost2 = jax.lax.cond(
-        jnp.any(mask1), round2, skip2, (mask1, top))
+        jnp.any(mask_r2), round2, skip2, (mask_r2, top))
 
     stats = SearchStats(
         pages=pages1 + pages2,

@@ -76,6 +76,7 @@ def build_sharded(x: np.ndarray, n_shards: int, **kwargs) -> ShardedIndex:
     s_max = max(m.n_subparts for _, m in parts)
     nb_max = max(m.n_blocks for _, m in parts)
     kmax = max(a.block_sp_idx.shape[1] for a, _ in parts)
+    kcb_max = max(m.sk_codewords for _, m in parts)
     page_rows = parts[0][1].page_rows
 
     stacked = {}
@@ -96,13 +97,20 @@ def build_sharded(x: np.ndarray, n_shards: int, **kwargs) -> ShardedIndex:
                 if v.shape[1] < kmax:
                     v = np.pad(v, ((0, 0), (0, kmax - v.shape[1])), constant_values=-1)
                 v = _pad_to(v, nb_max, -1)
-            elif field.startswith("block_"):
+            elif field == "sk_codebooks":
+                # codeword count tracks min(256, NB_shard): pad small shards'
+                # codebooks with zero codewords (never assigned by real codes)
+                if v.shape[1] < kcb_max:
+                    v = np.pad(v, ((0, 0), (0, kcb_max - v.shape[1]), (0, 0)))
+            elif field.startswith("sk_") or field.startswith("block_"):
+                # padded blocks decode to the zero sketch with err 0; the
+                # prefilter drops them via the ids-derived block validity
                 v = _pad_to(v, nb_max, 0)
             vals.append(v)
         stacked[field] = np.stack(vals)
     meta = dataclasses.replace(
         parts[0][1], n=n, n_pad=n_pad, n_blocks=nb_max, n_groups=g_max,
-        n_subparts=s_max, page_rows=page_rows,
+        n_subparts=s_max, page_rows=page_rows, sk_codewords=kcb_max,
     )
     return ShardedIndex(arrays=IndexArrays(**stacked), meta=meta)
 

@@ -113,6 +113,70 @@ def _kernel(slots_ref, x_ref, valid_ref, q_ref, sel_ref, chalf_ref,
     topr_ref[...] = top_r
 
 
+# Sketch-scoring grid walks the code table this many blocks per step; the
+# per-step working set (codes tile + LUT + one-hot expansion) stays well
+# inside VMEM at B = 64, K = 256.
+SKETCH_TILE = 512
+
+
+def _sketch_kernel(codes_ref, lut_ref, est_ref, *, n_codewords: int):
+    """One grid step of asymmetric LUT scoring: est[b, t] = sum_s
+    lut[b, s, codes[t, s]]. The gather is expressed as a one-hot matmul so
+    it lowers to MXU dot_generals (Mosaic has no vector-gather primitive)."""
+    codes = codes_ref[...]                                 # (T, M)
+    lut = lut_ref[...]                                     # (B, M, K)
+    t, m = codes.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (t, n_codewords), 1)
+    est = jnp.zeros((lut.shape[0], t), jnp.float32)
+    for s in range(m):
+        onehot = (codes[:, s][:, None] == iota).astype(jnp.float32)  # (T, K)
+        est = est + jax.lax.dot_general(                   # (B, T)
+            lut[:, s, :], onehot, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    est_ref[...] = est
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
+def sketch_scores(
+    q: jax.Array,
+    codebooks: jax.Array,
+    codes: jax.Array,
+    *,
+    interpret: bool = False,
+    tile: int = SKETCH_TILE,
+):
+    """Estimated block scores from the VMEM-resident PQ sketch.
+
+    q: (B, d); codebooks: (M, K, d/M); codes: (NB, M) int — returns
+    (B, NB) float32 est with est[b, n] = <q_b, decode(codes[n])>, computed
+    asymmetrically: a per-query LUT of subspace dot products
+    (lut[b, s, k] = <q_b[s], codebook[s, k]>) built once outside the grid,
+    then accumulated per code. Numerically this sums the same subspace
+    products as `ref.sketch_scores_ref`'s decoded-centroid GEMM in a
+    different order — parity holds to float tolerance, not bitwise.
+    """
+    b, d = q.shape
+    m, kcb, sub_d = codebooks.shape
+    assert d == m * sub_d, (d, m, sub_d)
+    nb = codes.shape[0]
+    lut = jnp.einsum("bms,mks->bmk", q.reshape(b, m, sub_d).astype(jnp.float32),
+                     codebooks.astype(jnp.float32))        # (B, M, K)
+    nb_pad = -(-nb // tile) * tile
+    codes_p = jnp.pad(codes.astype(jnp.int32), ((0, nb_pad - nb), (0, 0)))
+    est = pl.pallas_call(
+        functools.partial(_sketch_kernel, n_codewords=kcb),
+        grid=(nb_pad // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, m), lambda i: (i, 0)),
+            pl.BlockSpec((b, m, kcb), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, nb_pad), jnp.float32),
+        interpret=interpret,
+    )(codes_p, lut)
+    return est[:, :nb]
+
+
 @functools.partial(jax.jit, static_argnames=("k", "page_rows", "interpret"))
 def block_mips(
     x: jax.Array,

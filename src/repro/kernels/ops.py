@@ -22,6 +22,7 @@ from . import ref
 from .binary_probe import binary_probe_lb as _binary_probe_pallas
 from .block_mips import MAX_K as BLOCK_MIPS_MAX_K
 from .block_mips import block_mips as _block_mips_pallas
+from .block_mips import sketch_scores as _sketch_scores_pallas
 from .decode_attention import decode_attention as _decode_attention_pallas
 from .mips_topk import mips_score as _mips_score_pallas
 
@@ -58,6 +59,25 @@ def block_mips(x, valid, q, slots, sel, init_scores, init_rows, c_half, *,
     return _block_mips_pallas(x, valid, q, slots, sel, init_scores, init_rows,
                               c_half, k=k, page_rows=page_rows,
                               interpret=_interpret())
+
+
+def sketch_scores(q, sk_mu, codebooks, codes, *,
+                  use_pallas: Optional[bool] = None):
+    """Estimated block scores for the verification prefilter: (B, NB) with
+    est[b, n] = <q_b, decoded block centroid n>.
+
+    Backend-aware like `mips_score`: on TPU the Pallas kernel scores the
+    VMEM-resident PQ codes through a per-query LUT (the codebooks + codes
+    are ~65x smaller than the decoded centroids, so they stay resident); the
+    oracle is one GEMM over the decoded ``sk_mu``, which XLA CPU executes
+    two orders of magnitude faster than gather-based LUT accumulation. The
+    two paths sum identical subspace products in different orders, so they
+    agree to float tolerance rather than bitwise (the prefilter consumes
+    est through an eps-scaled error band, which dominates that slack).
+    """
+    if not _resolve(use_pallas):
+        return ref.sketch_scores_ref(q, sk_mu)
+    return _sketch_scores_pallas(q, codebooks, codes, interpret=_interpret())
 
 
 def block_mips_cached(scores_full, valid, slots, sel, init_scores, init_rows,

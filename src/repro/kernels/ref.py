@@ -101,6 +101,19 @@ def _verify_core(scores, rvalid, sel, init_scores, init_rows, c_half,
     return top_s, top_r, cnt, pages, cand
 
 
+def sketch_scores_ref(q: jax.Array, sk_mu: jax.Array) -> jax.Array:
+    """Oracle for `block_mips.sketch_scores`: estimated block scores from the
+    DECODED sketch centroids. q:(B,D) sk_mu:(NB,D) -> (B,NB).
+
+    One GEMM over the decoded centroids — on CPU this beats the per-subspace
+    LUT gathers the Pallas kernel performs by two orders of magnitude (XLA
+    CPU lowers the (B, NB) gather accumulation to scalar loads). The kernel
+    computes the same per-entry dot product as sum of subspace LUT entries;
+    results agree to float-associativity tolerance, not bitwise.
+    """
+    return q.astype(jnp.float32) @ sk_mu.astype(jnp.float32).T
+
+
 def binary_probe_lb_ref(codes: jax.Array, q_code: jax.Array, q_proj: jax.Array) -> jax.Array:
     """Theorem-3 group lower bounds. codes:(G,) q_code:() q_proj:(m,)."""
     m = q_proj.shape[0]

@@ -1,5 +1,10 @@
 import os
-os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+if __name__ == "__main__":  # pragma: no cover - CLI entry only
+    # The 512-host-device trick is only for the CLI's production-mesh
+    # analysis; importers (the search benchmark pulls `kernel_cost`) must
+    # NOT have their jax backend reconfigured as an import side effect.
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512")
 """Roofline analysis (deliverable g).
 
 XLA's cost_analysis counts a while-loop body once regardless of trip count,
@@ -32,14 +37,40 @@ import jax  # noqa: E402
 from ..configs import ARCH_IDS, SHAPES, SHAPES_BY_NAME, get_config  # noqa: E402
 from ..models import scan_util  # noqa: E402
 from . import specs as specs_lib  # noqa: E402
-from .dryrun import parse_collectives  # noqa: E402
 from .mesh import make_production_mesh  # noqa: E402
+
+# NOTE: `.dryrun` also mutates XLA_FLAGS at import; it is imported lazily
+# inside `_cost` so `kernel_cost` importers keep their jax backend as-is.
 
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
 RING_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def kernel_cost(fn, *args):
+    """Roofline terms of ONE jit-able callable on its example ``args``.
+
+    Lowers + compiles ``fn`` (wrapping in `jax.jit` unless it already
+    carries `.lower`) and reads XLA's cost_analysis — the same figures the
+    cell-level analysis above uses, without the unroll/extrapolation
+    machinery. Used by the search benchmark to report ACHIEVED bytes/flops
+    next to the v5e roofline bound for the fused-verification graph.
+    """
+    jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
+    compiled = jitted.lower(*args).compile()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    t_comp = flops / PEAK_FLOPS
+    t_mem = nbytes / HBM_BW
+    bound = max(t_comp, t_mem)
+    return {"flops": flops, "bytes": nbytes,
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "roofline_s": bound,
+            "bound": "compute" if t_comp >= t_mem else "memory"}
 
 
 def _cost(cfg, shape, mesh, *, microbatches=None):
@@ -51,6 +82,7 @@ def _cost(cfg, shape, mesh, *, microbatches=None):
         lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
     finally:
         scan_util.set_unroll(False)
+    from .dryrun import parse_collectives
     compiled = lowered.compile()
     cost = compiled.cost_analysis()
     cost = cost[0] if isinstance(cost, (list, tuple)) else cost

@@ -117,6 +117,59 @@ def test_sharded_fused_in_graph_parity():
     assert "OK" in out
 
 
+def test_sharded_prefilter_parity():
+    """The sketch prefilter under shard_map (8 shards): in-graph fused and
+    batched agree bit-for-bit, match the eager per-shard host-fused merge,
+    and read fewer pages than prefilter-off."""
+    out = _run("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import RuntimeConfig
+        from repro.core.runtime import search as runtime_search
+        from repro.core.sharded import (build_sharded, sharded_search,
+                                        device_put_sharded_index)
+        from repro.data.synthetic import mf_factors
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((8,), ("model",))
+        x = mf_factors(8000, 48, 12, decay=0.3, seed=0, norm_tail=0.3)
+        q = mf_factors(16, 48, 12, decay=0.3, seed=1)
+        sh = build_sharded(x, 8, m=6, c=0.9, p=0.7, norm_strata=4)
+        shd = device_put_sharded_index(sh, mesh)
+        cfg_f = RuntimeConfig(mode="two_phase", verification="fused",
+                              norm_adaptive=True, cs_prune=True,
+                              prefilter=True, prefilter_eps=0.3)
+        cfg_b = dataclasses.replace(cfg_f, verification="batched")
+        ids_f, s_f, pages_f = sharded_search(shd, q, 10, mesh, runtime=cfg_f)
+        ids_b, s_b, pages_b = sharded_search(shd, q, 10, mesh, runtime=cfg_b)
+        np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_b))
+        np.testing.assert_array_equal(np.asarray(s_f), np.asarray(s_b))
+        assert int(pages_f) == int(pages_b), (pages_f, pages_b)
+        _, _, pages_off = sharded_search(
+            shd, q, 10, mesh,
+            runtime=dataclasses.replace(cfg_f, prefilter=False))
+        assert int(pages_f) < int(pages_off), (pages_f, pages_off)
+
+        cfg = dataclasses.replace(cfg_f, k=10)
+        ids_all, s_all, pages = [], [], 0
+        for s in range(8):
+            arrays = jax.tree.map(lambda a: jnp.asarray(np.asarray(a)[s]),
+                                  sh.arrays)
+            i_, sc, st = runtime_search(arrays, sh.meta,
+                                        jnp.asarray(q, jnp.float32), cfg)
+            ids_all.append(np.asarray(i_)); s_all.append(np.asarray(sc))
+            pages += int(np.sum(np.asarray(st.pages)))
+        flat_i = np.concatenate(ids_all, axis=1)
+        flat_s = np.concatenate(s_all, axis=1)
+        best_s, pos = jax.lax.top_k(jnp.asarray(flat_s), 10)
+        best_i = np.take_along_axis(flat_i, np.asarray(pos), axis=1)
+        np.testing.assert_array_equal(np.asarray(ids_f), best_i)
+        np.testing.assert_array_equal(np.asarray(s_f), np.asarray(best_s))
+        assert pages == int(pages_f), (pages, pages_f)
+        print("OK", int(pages_f), int(pages_off))
+    """)
+    assert "OK" in out
+
+
 def test_train_sharded_and_elastic_restore(tmp_path):
     ckpt = str(tmp_path / "ckpt")
     out = _run(f"""

@@ -78,6 +78,27 @@ def test_k_exceeds_n_alive_after_deletes():
     np.testing.assert_array_equal(ids, np.asarray(ids2))
 
 
+def test_k_exceeds_n_alive_with_prefilter(tiny):
+    """Sketch prefilter with k >= n_alive: the group-max threshold needs
+    G = min(2k, NB) >= k distinct groups to be sound; below that it must
+    degrade to tau = -inf (no pruning) so every alive row still comes back
+    — bit-identical to prefilter-off, eager and under jit."""
+    x, q, pm = tiny
+    k = 64
+    assert pm.meta.n_blocks < k  # the degenerate regime this test pins
+    for verification in ("fused", "batched"):
+        base = pm.search(q, k=k, verification=verification)
+        out = pm.search(q, k=k, verification=verification,
+                        prefilter=True, prefilter_eps=0.05)
+        np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(base[0]))
+        np.testing.assert_array_equal(np.asarray(out[1]), np.asarray(base[1]))
+    cfg = RuntimeConfig(k=k, prefilter=True, prefilter_eps=0.05)
+    out_t = jax.jit(lambda a: runtime_search(a, pm.meta, q, cfg))(pm.arrays)
+    out_e = runtime_search(pm.arrays, pm.meta, q, cfg)
+    np.testing.assert_array_equal(np.asarray(out_t[0]), np.asarray(out_e[0]))
+    np.testing.assert_array_equal(np.asarray(out_t[1]), np.asarray(out_e[1]))
+
+
 # ---------------------------------------------------------------------------
 # fully tombstoned shard
 # ---------------------------------------------------------------------------
@@ -144,6 +165,43 @@ def test_empty_union_round_is_identity(tiny):
                                   np.asarray(out_top.scores))
     np.testing.assert_array_equal(np.asarray(bt.rows), np.asarray(out_top.rows))
     assert not np.asarray(bp).any() and not np.asarray(bl).any()
+
+
+def test_prefilter_empty_survivor_round(tiny):
+    """A round whose sketch survivor set is empty must be an identity, not
+    a crash: (a) the round-2 survivor rule yields all-False when the
+    running k-th score beats every upper bound, and (b) an aggressive eps
+    end-to-end still returns k valid, exactly-scored rows, bit-identical
+    across the fused drivers and the batched graph."""
+    from repro.core import search_common as sc
+
+    x, q, pm = tiny
+    arrays, meta = pm.arrays, pm.meta
+    b = q.shape[0]
+    est = jnp.zeros((b, meta.n_blocks), jnp.float32)
+    bnd = jnp.ones((b, meta.n_blocks), jnp.float32)
+    bvalid = sc.block_valid_from_ids(arrays.ids, meta.page_rows)
+    surv = sc.sketch_survivors_round2(
+        jnp.ones((b, meta.n_blocks), bool), est, bnd, bvalid,
+        jnp.full((b,), jnp.inf, jnp.float32))
+    assert not np.asarray(surv).any()
+
+    cfg = RuntimeConfig(k=3, prefilter=True, prefilter_eps=0.01)
+    out_e = runtime_search(pm.arrays, pm.meta, q, cfg)
+    ids = np.asarray(out_e[0])
+    assert (ids >= 0).all()
+    scores = np.asarray(out_e[1])
+    np.testing.assert_allclose(
+        scores, np.take_along_axis(np.asarray(q) @ x.T, ids, axis=1),
+        rtol=1e-5)
+    out_t = jax.jit(lambda a: runtime_search(a, pm.meta, q, cfg))(pm.arrays)
+    out_b = runtime_search(pm.arrays, pm.meta, q,
+                           RuntimeConfig(k=3, prefilter=True,
+                                         prefilter_eps=0.01,
+                                         verification="batched"))
+    for out in (out_t, out_b):
+        np.testing.assert_array_equal(np.asarray(out[0]), ids)
+        np.testing.assert_array_equal(np.asarray(out[1]), scores)
 
 
 # ---------------------------------------------------------------------------

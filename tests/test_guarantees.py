@@ -128,6 +128,43 @@ def test_recall_floor_sharded_fused(built, corpus, c, p0):
     assert rate >= p0 - _tolerance(p0, len(q)), (rate, c, p0)
 
 
+@pytest.mark.parametrize("c,p0", GRID)
+def test_recall_floor_fused_prefilter(built, corpus, c, p0):
+    """The quantized-sketch prefilter (DESIGN.md §13) at the shipped
+    eps=0.1 keeps the empirical Theorem-2 floor over the whole grid —
+    fewer pages may NOT buy lower recall than p0 - 3*sigma."""
+    x, q, escores = corpus
+    pm, _, _ = built
+    meta = _meta_for(pm.meta, GuaranteeConfig(c=c, p0=p0, k=K))
+    cfg = RuntimeConfig(k=K, prefilter=True, prefilter_eps=0.1)
+    _, scores, stats = runtime_search(pm.arrays, meta,
+                                      jnp.asarray(q, jnp.float32), cfg)
+    assert not np.asarray(stats.exhausted).any()
+    rate = _success_rate(scores, escores, c)
+    assert rate >= p0 - _tolerance(p0, len(q)), (rate, c, p0)
+    # and the prefilter actually engages: strictly fewer pages than off
+    _, _, st_off = runtime_search(pm.arrays, meta,
+                                  jnp.asarray(q, jnp.float32),
+                                  RuntimeConfig(k=K))
+    assert (int(np.sum(np.asarray(stats.pages)))
+            < int(np.sum(np.asarray(st_off.pages)))), (c, p0)
+
+
+def test_prefilter_pages_monotone_in_eps(built, corpus):
+    """Pages read are monotone non-decreasing in eps (a looser bound prunes
+    less), with recall already pinned by the grid test above."""
+    pm, _, _ = built
+    x, q, _ = corpus
+    qd = jnp.asarray(q[:64], jnp.float32)
+    pages = []
+    for eps in (0.05, 0.1, 0.3, 1.0):
+        _, _, stats = runtime_search(
+            pm.arrays, pm.meta, qd,
+            RuntimeConfig(k=K, prefilter=True, prefilter_eps=eps))
+        pages.append(int(np.sum(np.asarray(stats.pages))))
+    assert pages == sorted(pages), pages
+
+
 def test_grid_is_monotone_in_p0(built, corpus):
     """Sanity on the derivation itself: a higher p0 derives a larger x_p
     (wider radii), so the expected page work is monotone — the static

@@ -1,0 +1,251 @@
+"""Quantized sketch prefilter (PR 6, DESIGN.md §13).
+
+Covers the shared PQ machinery (`core/sketch.py`, now also the
+implementation under `baselines/pq.py`), the build-time block sketch
+invariants (the Cauchy-Schwarz error radius must DOMINATE every valid
+row's distance — the soundness of the prefilter bound), the Pallas
+sketch-scoring kernel vs the jnp oracle, prefilter-on parity across the
+three fused drivers (eager host / in-graph jit / batched), losslessness
+at eps=1, and sketch persistence through api save/load.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import ProMIPS, RuntimeConfig, runtime_search
+from repro.core.sketch import (build_block_sketch, pick_subspaces, pq_assign,
+                               pq_decode, pq_train)
+
+K = 10
+
+
+@pytest.fixture(scope="module")
+def built(mf_corpus):
+    x, q = mf_corpus
+    pm = ProMIPS.build(x, m=8, c=0.9, p=0.5, norm_strata=4, page_bytes=2048)
+    return x, np.asarray(q, np.float32), pm
+
+
+def _assert_same(out_a, out_b, label):
+    ids_a, scores_a, _ = out_a
+    ids_b, scores_b, _ = out_b
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b),
+                                  err_msg=f"{label}: ids")
+    np.testing.assert_array_equal(np.asarray(scores_a), np.asarray(scores_b),
+                                  err_msg=f"{label}: scores")
+
+
+# ---------------------------------------------------------------------------
+# PQ helpers (shared with baselines/pq.py)
+# ---------------------------------------------------------------------------
+
+def test_pick_subspaces_largest_divisor():
+    assert pick_subspaces(128, 16) == 16
+    assert pick_subspaces(48, 16) == 16
+    assert pick_subspaces(50, 16) == 10
+    assert pick_subspaces(7, 16) == 7     # prime: only 1 and itself divide
+    assert pick_subspaces(13, 4) == 1
+
+
+def test_pq_round_trip(rng):
+    """Codes are in range, decode inverts assign's codeword lookup, and a
+    re-assignment of the decoded vectors is a fixed point (each decoded
+    vector IS its own nearest codeword)."""
+    x = rng.randn(400, 24).astype(np.float32)
+    cb = pq_train(x, 4, 16, seed=3)
+    assert cb.shape == (4, 16, 6)
+    codes = pq_assign(x, cb)
+    assert codes.shape == (400, 4) and codes.dtype == np.int32
+    assert codes.min() >= 0 and codes.max() < 16
+    dec = pq_decode(cb, codes)
+    assert dec.shape == x.shape
+    np.testing.assert_array_equal(pq_assign(dec, cb), codes)
+    # decoding is the concatenation of the assigned codewords
+    np.testing.assert_array_equal(dec[:, :6], cb[0][codes[:, 0]])
+
+
+def test_pq_error_decreases_with_centroids(rng):
+    """Mean reconstruction error is monotone non-increasing in the codebook
+    size and beats the trivial zero-code (the padding codeword)."""
+    x = rng.randn(600, 32).astype(np.float32)
+    errs = []
+    for k in (2, 8, 32, 128):
+        cb = pq_train(x, 4, k, seed=0)
+        dec = pq_decode(cb, pq_assign(x, cb))
+        errs.append(float(np.linalg.norm(x - dec, axis=1).mean()))
+    assert all(a >= b for a, b in zip(errs, errs[1:])), errs
+    assert errs[-1] < np.linalg.norm(x, axis=1).mean()
+
+
+def test_pqbased_baseline_uses_shared_pq(mf_corpus):
+    """`baselines/pq.py` round-trips through the shared helpers: its stored
+    codes re-derive from its own codebooks, and decoding reconstructs the
+    QNF residuals better than the zero vector."""
+    from repro.baselines.pq import PQBased
+    from repro.core.idistance import kmeans_np
+
+    x, q = mf_corpus
+    b = PQBased(n_subspaces=4, n_centroids=64, seed=0).build(x[:1200])
+    assert b.codes.shape == (1200, 4)
+    # replicate the build's residuals (kmeans_np is deterministic in seed)
+    coarse, assign = kmeans_np(b.xq, 64, iters=10, seed=b.seed)
+    np.testing.assert_array_equal(coarse, b.coarse)
+    resid = b.xq - b.coarse[assign]
+    np.testing.assert_array_equal(
+        pq_assign(resid, b.codebooks).astype(np.uint8), b.codes)
+    dec = pq_decode(b.codebooks, b.codes.astype(np.int32))
+    assert (np.linalg.norm(resid - dec, axis=1).mean()
+            < np.linalg.norm(resid, axis=1).mean())
+    ids, scores, stats = b.search(q[0], k=K)
+    assert ids.shape == (K,) and stats["pages"] > 0
+
+
+# ---------------------------------------------------------------------------
+# block sketch build invariants
+# ---------------------------------------------------------------------------
+
+def test_block_sketch_error_radius_dominates(built):
+    """sk_err[b] >= ||o_r - mu~_b|| for EVERY valid row r of block b — the
+    inequality the whole prefilter bound stands on — and padded rows /
+    fully-padded blocks contribute nothing."""
+    x, _, pm = built
+    arr, meta = pm.index.arrays, pm.meta
+    xs = np.asarray(arr.x).reshape(meta.n_blocks, meta.page_rows, meta.d)
+    vb = (np.asarray(arr.ids) >= 0).reshape(meta.n_blocks, meta.page_rows)
+    mu_hat = np.asarray(arr.sk_mu)
+    dist = np.sqrt(((xs - mu_hat[:, None, :]) ** 2).sum(-1))
+    assert np.all(np.where(vb, dist, 0.0)
+                  <= np.asarray(arr.sk_err)[:, None] + 1e-4)
+    assert meta.sk_subspaces == pick_subspaces(meta.d, 16)
+    assert np.asarray(arr.sk_codes).shape == (meta.n_blocks,
+                                              meta.sk_subspaces)
+    # decoded centroids really are the decode of the persisted codes
+    np.testing.assert_allclose(
+        pq_decode(np.asarray(arr.sk_codebooks), np.asarray(arr.sk_codes)),
+        mu_hat, rtol=1e-6, atol=1e-6)
+
+
+def test_block_sketch_rebuild_is_deterministic(built):
+    x, _, pm = built
+    arr, meta = pm.index.arrays, pm.meta
+    mu, cb, codes, err = build_block_sketch(
+        np.asarray(arr.x), np.asarray(arr.ids), meta.page_rows,
+        meta.sk_subspaces, meta.sk_codewords, seed=0)
+    np.testing.assert_array_equal(mu, np.asarray(arr.sk_mu))
+    np.testing.assert_array_equal(codes, np.asarray(arr.sk_codes))
+    np.testing.assert_array_equal(err, np.asarray(arr.sk_err))
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+def test_sketch_kernel_matches_ref(built):
+    """Pallas sketch scorer (interpret mode) vs the decoded-centroid sgemm
+    oracle: same sum, different association — tight allclose."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.kernels.block_mips import sketch_scores
+
+    x, q, pm = built
+    arr = pm.arrays
+    want = np.asarray(ref.sketch_scores_ref(jnp.asarray(q), arr.sk_mu))
+    got = np.asarray(sketch_scores(jnp.asarray(q), arr.sk_codebooks,
+                                   arr.sk_codes, interpret=True))
+    assert got.shape == want.shape == (q.shape[0], pm.meta.n_blocks)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# prefilter semantics
+# ---------------------------------------------------------------------------
+
+def test_prefilter_lossless_at_eps_one(built):
+    """eps=1 keeps the hard Cauchy-Schwarz bracket: pruned blocks provably
+    hold no top-k row, so ids AND scores are bit-identical to prefilter-off
+    for every verification backend."""
+    x, q, pm = built
+    base = pm.search(q, k=K)
+    for verification in ("fused", "batched", "scan"):
+        out = pm.search(q, k=K, verification=verification,
+                        prefilter=True, prefilter_eps=1.0)
+        _assert_same(out, base, f"eps=1-{verification}")
+
+
+def test_prefilter_three_driver_parity(built):
+    """prefilter on at a pruning eps: eager host-orchestrated fused,
+    in-graph fused (under jit), and the batched graph agree bit-for-bit on
+    ids, scores, pages and candidates."""
+    import jax
+
+    x, q, pm = built
+    cfg = RuntimeConfig(k=K, prefilter=True, prefilter_eps=0.3)
+    out_e = runtime_search(pm.arrays, pm.meta, q, cfg)
+    traced = jax.jit(lambda arrays: runtime_search(arrays, pm.meta, q, cfg))
+    out_t = traced(pm.arrays)
+    out_b = runtime_search(pm.arrays, pm.meta, q,
+                           dataclasses.replace(cfg, verification="batched"))
+    _assert_same(out_t, out_e, "jit-fused-vs-eager-fused")
+    _assert_same(out_t, out_b, "jit-fused-vs-batched")
+    for field in ("pages", "candidates", "exhausted"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(out_t[2], field)),
+            np.asarray(getattr(out_e[2], field)), err_msg=f"stat {field}")
+
+
+def test_prefilter_prunes_pages_and_keeps_recall(built):
+    """A pruning eps reads strictly fewer pages than prefilter-off while
+    recall vs exact stays high (the §13 calibration, small-corpus scale)."""
+    x, q, pm = built
+    off = pm.search(q, k=K)
+    on = pm.search(q, k=K, prefilter=True, prefilter_eps=0.3)
+    assert (int(np.sum(np.asarray(on[2].pages)))
+            < int(np.sum(np.asarray(off[2].pages))))
+    exact = np.argsort(-(x @ q.T), axis=0, kind="stable")[:K].T
+    hits = np.mean([len(set(map(int, a)) & set(map(int, e))) / K
+                    for a, e in zip(np.asarray(on[0]), exact)])
+    assert hits >= 0.9
+
+
+def test_prefilter_requires_sketch_and_two_phase(built):
+    x, q, pm = built
+    meta_old = dataclasses.replace(pm.meta, sk_subspaces=0, sk_codewords=0)
+    with pytest.raises(ValueError, match="no sketch"):
+        runtime_search(pm.arrays, meta_old, q,
+                       RuntimeConfig(k=K, prefilter=True))
+    with pytest.raises(ValueError, match="two_phase"):
+        runtime_search(pm.arrays, pm.meta, q,
+                       RuntimeConfig(k=K, prefilter=True, mode="progressive"))
+    with pytest.raises(ValueError, match="prefilter_eps"):
+        RuntimeConfig(k=K, prefilter=True, prefilter_eps=0.0)
+    with pytest.raises(ValueError, match="prefilter_eps"):
+        RuntimeConfig(k=K, prefilter=True, prefilter_eps=1.5)
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+def test_sketch_survives_save_load(tmp_path, mf_corpus):
+    """api save -> load round-trips the sketch arrays bit-identically and a
+    prefilter-on search after load matches the pre-save one."""
+    from repro import api
+
+    x, q = mf_corpus
+    s = api.build(x[:2000], backend="promips",
+                  guarantee=api.GuaranteeConfig(c=0.9, p0=0.6, k=K),
+                  seed=0, prefilter=True, prefilter_eps=0.3)
+    assert type(s).capabilities.prefilter
+    before = s.search(q[:8], k=K)
+    loaded = api.load(s.save(str(tmp_path / "sk")))
+    a0, a1 = s.pm.index.arrays, loaded.pm.index.arrays
+    for field in ("sk_mu", "sk_codebooks", "sk_codes", "sk_err"):
+        np.testing.assert_array_equal(np.asarray(getattr(a0, field)),
+                                      np.asarray(getattr(a1, field)),
+                                      err_msg=field)
+    assert loaded.pm.meta.sk_subspaces == s.pm.meta.sk_subspaces
+    after = loaded.search(q[:8], k=K)
+    np.testing.assert_array_equal(before.ids, after.ids)
+    np.testing.assert_array_equal(before.scores, after.scores)
