@@ -781,3 +781,166 @@ def bench_device_throughput():
     mode = "pallas" if jax.default_backend() == "tpu" else "jnp-oracle"
     rows.append(("device/kernel/mips_topk", us_k, f"mode={mode}"))
     return rows
+
+
+def bench_obs(quick: bool = True):
+    """Observability tier (DESIGN.md §14): the tracer must be FREE when off
+    and cheap when on, and the per-phase spans must account for the whole
+    end-to-end latency.
+
+    Three interleaved modes at the smoke scale, median-of-adjacent-pair
+    ratios (same jitter defense as bench_search_runtime):
+
+      baseline  span call sites monkeypatched to a null lambda — the code
+                with no instrumentation at all
+      disabled  real `repro.obs.trace.span` with tracing off (one bool
+                check + a shared null context manager per site)
+      enabled   tracing on, unfenced (the always-on production setting)
+
+    scripts/ci.sh asserts overhead_disabled_frac < 1% and
+    overhead_enabled_frac < 5%. Then the LARGE_N fused+prefilter point runs
+    FENCED and the spans are grouped into the four pipeline phases
+    (frontend / prefilter / verify / merge); their sum must land within 15%
+    of the measured end-to-end batch latency (phase_sum_frac), or the spans
+    are lying. One fenced batch is exported as a Chrome trace under
+    results/obs/ — load it in Perfetto (the §14 worked example).
+    """
+    import json
+    import os
+
+    import jax.numpy as jnp
+
+    from repro.core import ProMIPS
+    from repro.core import runtime as rt
+    from repro.core import search_fused as sf
+    from repro.data.synthetic import mf_factors
+    from repro.obs import metrics, trace
+
+    rows = []
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+    # --- smoke-scale overhead: baseline vs disabled vs enabled -------------
+    n, d, n_q = 8000, 64, 64
+    x = mf_factors(n, d, 16, decay=0.5, seed=0, norm_tail=0.3)
+    q = mf_factors(n_q, d, 16, decay=0.5, seed=1)
+    pm = ProMIPS.build(x, m=8, c=0.9, p=0.6, k_p=8, k_sp=12, norm_strata=8)
+    qj = jnp.asarray(q, jnp.float32)
+
+    real_sf_span, real_rt_span = sf._span, rt._span
+
+    def null_span(name, active=None, metric=None):
+        return trace._NULL
+
+    def set_mode(mode):
+        sf._span = rt._span = (null_span if mode == "baseline"
+                               else trace.span)
+        if mode == "enabled":
+            trace.enable(fence=False)
+        else:
+            trace.disable()
+
+    def one_rep():
+        t0 = time.perf_counter()
+        ids, _, _ = pm.search(qj, k=10, verification="fused",
+                              norm_adaptive=True, cs_prune=True)
+        ids.block_until_ready()
+        return time.perf_counter() - t0
+
+    modes = ("baseline", "disabled", "enabled")
+    times = {m: [] for m in modes}
+    try:
+        for m in modes:
+            set_mode(m)
+            one_rep()   # compile / warm
+        rounds = 12 if quick else 30
+        for _ in range(rounds):
+            for m in modes:
+                set_mode(m)
+                times[m].append(one_rep())
+    finally:
+        sf._span, rt._span = real_sf_span, real_rt_span
+        trace.disable()
+
+    base_us = float(np.median(times["baseline"])) * 1e6
+    smoke = {"n": n, "d": d, "batch": n_q, "rounds": rounds,
+             "baseline_us_per_call": base_us}
+    for m in ("disabled", "enabled"):
+        # adjacent-pair ratios: mode m vs the baseline rep of the SAME round
+        frac = float(np.median(
+            [t / b for t, b in zip(times[m], times["baseline"])])) - 1.0
+        smoke[f"overhead_{m}_frac"] = frac
+        rows.append((f"obs/overhead_{m}", 0.0, f"{frac:+.4f}"))
+    rec = {"smoke": smoke}
+
+    # --- LARGE_N fenced per-phase breakdown --------------------------------
+    cfg = LARGE_N
+    x2, q2 = _large_corpus()
+    pm2 = ProMIPS.build(x2, m=cfg["m"], c=cfg["c"], p=cfg["p0"],
+                        k_p=cfg["k_p"], k_sp=cfg["k_sp"],
+                        norm_strata=cfg["norm_strata"])
+    qj2 = jnp.asarray(q2, jnp.float32)
+    kw = dict(verification="fused", norm_adaptive=True, cs_prune=True,
+              prefilter=True, prefilter_eps=PREFILTER_EPS)
+
+    metrics.reset()
+    metrics.enable()
+    ids, _, st = pm2.search(qj2, k=cfg["k"], **kw)   # compile / warm
+    ids.block_until_ready()
+    st.to_dict()   # one pass through the stats_totals -> registry feed
+    reps = 3 if quick else 8
+    trace.enable(fence=True)
+    trace.clear()
+    try:
+        for _ in range(reps):
+            ids, _, _ = pm2.search(qj2, k=cfg["k"], **kw)
+            ids.block_until_ready()
+        spans = trace.spans()
+
+        per_name: dict = {}
+        for s in spans:
+            per_name.setdefault(s["name"], []).append(s["dur_us"])
+        span_means = {nm: float(np.sum(v)) / reps
+                      for nm, v in sorted(per_name.items())}
+        PHASES = {
+            "frontend": ("select_frontend", "compensation"),
+            "prefilter": ("prefilter_round1", "prefilter_round2"),
+            "verify": ("plan_tile_round1", "plan_tile_round2",
+                       "verify_round1", "verify_round2"),
+            "merge": ("rescore",),
+        }
+        phases = {ph: float(sum(span_means.get(nm, 0.0) for nm in nms))
+                  for ph, nms in PHASES.items()}
+        e2e = span_means["search"]
+        phase_sum_frac = sum(phases.values()) / e2e
+
+        # a fresh single fenced batch as the committed Perfetto example
+        trace.clear()
+        ids, _, _ = pm2.search(qj2, k=cfg["k"], **kw)
+        ids.block_until_ready()
+        trace_path = os.path.join("results", "obs",
+                                  "trace_large_n_fused.json")
+        trace.export_chrome_trace(os.path.join(root, trace_path))
+    finally:
+        trace.disable()
+        metrics.disable()
+
+    snap = metrics.snapshot()
+    undeclared = sorted(set(snap) - set(metrics.GLOSSARY))
+    rec["large_n"] = {
+        "n": cfg["n"], "d": cfg["d"], "batch": cfg["n_q"], "reps": reps,
+        "fenced": True, "prefilter_eps": PREFILTER_EPS,
+        "e2e_us": e2e, "phases_us": phases,
+        "span_means_us": span_means, "phase_sum_frac": phase_sum_frac,
+        "chrome_trace": trace_path,
+    }
+    rec["registered_metrics"] = sorted(snap)
+    rec["undeclared"] = undeclared
+    for ph, us in phases.items():
+        rows.append((f"obs/large_n/{ph}", us / cfg["n_q"],
+                     f"{100 * us / e2e:.1f}% of e2e"))
+    rows.append(("obs/large_n/e2e", e2e / cfg["n_q"],
+                 f"phase_sum_frac={phase_sum_frac:.3f}"))
+
+    with open(os.path.join(root, "BENCH_obs.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rows

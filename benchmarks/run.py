@@ -23,6 +23,8 @@ if "--sharded" in sys.argv:
         os.environ["XLA_FLAGS"] = (
             _flags + " --xla_force_host_platform_device_count=8").strip()
 
+import functools  # noqa: E402
+import subprocess  # noqa: E402
 from datetime import datetime, timezone  # noqa: E402
 
 from benchmarks import common  # noqa: E402
@@ -33,12 +35,28 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 # fresh record to results/bench/history.jsonl with a timestamp, so the
 # BENCH_*.json numbers gain a trajectory instead of being overwritten.
 BENCH_FILES = ("BENCH_search.json", "BENCH_stream.json", "BENCH_api.json",
-               "BENCH_sharded.json")
+               "BENCH_sharded.json", "BENCH_obs.json")
+
+
+@functools.lru_cache(maxsize=1)
+def _provenance() -> dict:
+    """Code + toolchain identity stamped into every history record, so a
+    number can always be traced back to the commit and jax build that
+    produced it (computed once per process; 'unknown' outside a checkout)."""
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=ROOT, capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+    except Exception:
+        commit = "unknown"
+    import jax
+    return {"commit": commit, "jax_version": jax.__version__,
+            "platform": jax.default_backend()}
 
 
 def _append_history(out_dir: str, bench: str, rows, t_start: float) -> None:
     ts = datetime.now(timezone.utc).isoformat(timespec="seconds")
-    entry = {"ts": ts, "bench": bench,
+    entry = {"ts": ts, "bench": bench, **_provenance(),
              "rows": [{"name": n, "us_per_call": u, "derived": d}
                       for n, u, d in rows]}
     for fname in BENCH_FILES:
@@ -62,6 +80,7 @@ BENCHES = [
     ("stream_churn", lambda: F.bench_stream(quick=False)),
     ("api_registry", lambda: F.bench_api(quick=False)),
     ("sharded_fanout", lambda: F.bench_sharded(quick=False)),
+    ("obs_breakdown", lambda: F.bench_obs(quick=False)),
 ]
 
 
@@ -86,6 +105,12 @@ def main() -> None:
                          "verification inside shard_map at n=100k, us/query "
                          "and recall vs device count over 8 forced host "
                          "devices (writes BENCH_sharded.json)")
+    ap.add_argument("--obs", action="store_true",
+                    help="observability smoke: span-tracer overhead on/off "
+                         "at smoke scale plus the per-phase latency "
+                         "breakdown (frontend/prefilter/verify/merge) at "
+                         "the large-n point, with a Chrome-trace export "
+                         "(writes BENCH_obs.json)")
     args = ap.parse_args()
 
     if args.quick:
@@ -96,6 +121,8 @@ def main() -> None:
         benches = [("api_registry", lambda: F.bench_api(quick=True))]
     elif args.sharded:
         benches = [("sharded_fanout", lambda: F.bench_sharded(quick=True))]
+    elif args.obs:
+        benches = [("obs_breakdown", lambda: F.bench_obs(quick=True))]
     else:
         benches = BENCHES
     os.makedirs(args.out, exist_ok=True)

@@ -132,6 +132,40 @@ print(f"sharded perf guard: fused_vs_batched=x{speedup:.2f} "
 sys.exit(0 if ok else 1)
 PY
 
+echo "== observability tier (span tracer + metrics registry) =="
+python -m pytest -q tests/test_obs.py
+
+echo "== obs smoke (tracer overhead on/off + fenced per-phase breakdown) =="
+python -m benchmarks.run --obs --out results/bench
+
+echo "== obs guard (disabled <1%, enabled <5%, spans account for e2e) =="
+python - <<'PY'
+import json, sys
+rec = json.load(open("BENCH_obs.json"))
+ok = True
+dis = rec["smoke"]["overhead_disabled_frac"]
+en = rec["smoke"]["overhead_enabled_frac"]
+if dis >= 0.01:
+    print(f"OBS GUARD FAIL: disabled-tracer overhead {dis:+.4f} >= 1%")
+    ok = False
+if en >= 0.05:
+    print(f"OBS GUARD FAIL: enabled-tracer overhead {en:+.4f} >= 5%")
+    ok = False
+frac = rec["large_n"]["phase_sum_frac"]
+if not 0.85 <= frac <= 1.15:
+    print(f"OBS GUARD FAIL: phase sum / e2e = {frac:.3f} outside "
+          "[0.85, 1.15] — the spans do not account for the batch latency")
+    ok = False
+if rec["undeclared"]:
+    print(f"OBS GUARD FAIL: metric names outside the declared glossary: "
+          f"{rec['undeclared']}")
+    ok = False
+print(f"obs guard: overhead_disabled={dis:+.4f} overhead_enabled={en:+.4f} "
+      f"phase_sum_frac={frac:.3f} "
+      f"metrics={len(rec['registered_metrics'])} declared")
+sys.exit(0 if ok else 1)
+PY
+
 echo "== stream smoke (insert throughput + latency vs delta fraction) =="
 python -m benchmarks.run --stream --out results/bench
 
@@ -149,3 +183,6 @@ cat BENCH_api.json
 
 echo "== BENCH_sharded.json =="
 cat BENCH_sharded.json
+
+echo "== BENCH_obs.json =="
+cat BENCH_obs.json

@@ -62,6 +62,41 @@ def roofline_table():
     return "\n" + "\n".join(rows) + "\n"
 
 
+def obs_report():
+    """Per-phase latency table from BENCH_obs.json -> results/obs/report.md
+    (DESIGN.md §14's numbers, regenerated per run)."""
+    src = os.path.join(ROOT, "BENCH_obs.json")
+    if not os.path.exists(src):
+        return None
+    rec = json.load(open(src))
+    ln = rec["large_n"]
+    lines = [
+        "# Observability report (BENCH_obs.json)",
+        "",
+        f"Smoke overhead (n={rec['smoke']['n']}, "
+        f"{rec['smoke']['rounds']} interleaved rounds): "
+        f"disabled {rec['smoke']['overhead_disabled_frac']:+.4f}, "
+        f"enabled {rec['smoke']['overhead_enabled_frac']:+.4f} "
+        "vs the uninstrumented baseline.",
+        "",
+        f"Large-n fenced breakdown (n={ln['n']}, batch={ln['batch']}, "
+        f"reps={ln['reps']}, e2e {ln['e2e_us']:.0f} us/batch, "
+        f"phase sum / e2e = {ln['phase_sum_frac']:.3f}):",
+        "",
+        "| phase | us/batch | % of e2e |",
+        "|---|---|---|",
+    ]
+    for ph, us in ln["phases_us"].items():
+        lines.append(f"| {ph} | {us:.0f} | {100 * us / ln['e2e_us']:.1f} |")
+    lines += ["", f"Chrome trace (load in Perfetto): `{ln['chrome_trace']}`",
+              f"Registered metrics: {len(rec['registered_metrics'])} "
+              f"(undeclared: {rec['undeclared'] or 'none'})", ""]
+    out = os.path.join(ROOT, "results", "obs", "report.md")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    open(out, "w").write("\n".join(lines))
+    return out
+
+
 def splice(text, start, end, payload):
     pat = re.compile(re.escape(start) + r".*?" + re.escape(end), re.S)
     return pat.sub(start + "\n" + payload + end, text)
@@ -69,15 +104,19 @@ def splice(text, start, end, payload):
 
 def main():
     path = os.path.join(ROOT, "EXPERIMENTS.md")
-    text = open(path).read()
-    if os.path.isdir(f"{ROOT}/results/dryrun"):
-        text = splice(text, "<!-- DRYRUN_TABLE_START -->",
-                      "<!-- DRYRUN_TABLE_END -->", dryrun_table())
-    if os.path.isdir(f"{ROOT}/results/roofline"):
-        text = splice(text, "<!-- ROOFLINE_TABLE_START -->",
-                      "<!-- ROOFLINE_TABLE_END -->", roofline_table())
-    open(path, "w").write(text)
-    print("EXPERIMENTS.md tables refreshed")
+    if os.path.exists(path):
+        text = open(path).read()
+        if os.path.isdir(f"{ROOT}/results/dryrun"):
+            text = splice(text, "<!-- DRYRUN_TABLE_START -->",
+                          "<!-- DRYRUN_TABLE_END -->", dryrun_table())
+        if os.path.isdir(f"{ROOT}/results/roofline"):
+            text = splice(text, "<!-- ROOFLINE_TABLE_START -->",
+                          "<!-- ROOFLINE_TABLE_END -->", roofline_table())
+        open(path, "w").write(text)
+        print("EXPERIMENTS.md tables refreshed")
+    out = obs_report()
+    if out:
+        print(f"obs report written to {out}")
 
 
 if __name__ == "__main__":

@@ -43,13 +43,15 @@ from .types import Capabilities, GuaranteeConfig
 def _runtime_from_opts(guarantee: GuaranteeConfig, mode: str,
                        verification: str, norm_adaptive: Optional[bool],
                        cs_prune: Optional[bool], budget, budget2,
-                       prefilter: bool = False, prefilter_eps: float = 1.0
-                       ) -> RuntimeConfig:
+                       prefilter: bool = False, prefilter_eps: float = 1.0,
+                       obs: bool = False) -> RuntimeConfig:
     """Map facade opts onto a `RuntimeConfig` with guarantee-safe defaults:
     budgets stay None (scan every selected block — the Theorem-2 bound
     requires no truncation) unless the caller explicitly trades them.
     ``prefilter`` turns on the quantized-sketch block prefilter; at the
-    default ``prefilter_eps=1.0`` it is lossless, so the guarantee holds."""
+    default ``prefilter_eps=1.0`` it is lossless, so the guarantee holds.
+    ``obs`` turns on per-call span/metric instrumentation (DESIGN.md §14);
+    results are bit-identical either way."""
     if mode == "progressive":
         norm_adaptive = True if norm_adaptive is None else norm_adaptive
         cs_prune = True if cs_prune is None else cs_prune
@@ -58,7 +60,8 @@ def _runtime_from_opts(guarantee: GuaranteeConfig, mode: str,
         verification=verification,
         norm_adaptive=bool(norm_adaptive) if norm_adaptive is not None else False,
         cs_prune=bool(cs_prune) if cs_prune is not None else False,
-        prefilter=bool(prefilter), prefilter_eps=float(prefilter_eps))
+        prefilter=bool(prefilter), prefilter_eps=float(prefilter_eps),
+        obs=bool(obs))
 
 
 @register
@@ -89,7 +92,7 @@ class PromipsSearcher(Searcher):
     def build(cls, x, *, guarantee, seed, page_bytes, m=None,
               mode="two_phase", verification="fused", norm_adaptive=None,
               cs_prune=None, budget=None, budget2=None, norm_strata=None,
-              prefilter=False, prefilter_eps=1.0,
+              prefilter=False, prefilter_eps=1.0, obs=False,
               search_path="device", **index_opts) -> "PromipsSearcher":
         plan = guarantee.derive(len(x))
         if norm_strata is None:
@@ -103,7 +106,7 @@ class PromipsSearcher(Searcher):
         return cls(pm, _runtime_from_opts(guarantee, mode, verification,
                                           norm_adaptive, cs_prune,
                                           budget, budget2, prefilter,
-                                          prefilter_eps), search_path)
+                                          prefilter_eps, obs), search_path)
 
     def _search_host(self, queries, k, cfg: RuntimeConfig
                      ) -> Tuple[np.ndarray, np.ndarray, dict]:
@@ -201,7 +204,7 @@ class StreamSearcher(_MutableMixin, Searcher):
     def build(cls, x, *, guarantee, seed, page_bytes, ids=None, m=None,
               mode="two_phase", verification="fused", norm_adaptive=None,
               cs_prune=None, budget=None, budget2=None, norm_strata=1,
-              prefilter=False, prefilter_eps=1.0,
+              prefilter=False, prefilter_eps=1.0, obs=False,
               delta_capacity=None, auto_compact=False, **index_opts
               ) -> "StreamSearcher":
         plan = guarantee.derive(len(x))
@@ -213,7 +216,7 @@ class StreamSearcher(_MutableMixin, Searcher):
         return cls(stream, _runtime_from_opts(guarantee, mode, verification,
                                               norm_adaptive, cs_prune,
                                               budget, budget2, prefilter,
-                                              prefilter_eps))
+                                              prefilter_eps, obs))
 
     def _search(self, queries, k, runtime: Optional[RuntimeConfig] = None
                 ) -> Tuple[np.ndarray, np.ndarray, dict]:
@@ -257,7 +260,7 @@ class ShardedSearcher(_MutableMixin, Searcher):
     def build(cls, x, *, guarantee, seed, page_bytes, n_shards=2, m=None,
               mode="two_phase", verification="fused", norm_adaptive=None,
               cs_prune=None, budget=None, budget2=None, norm_strata=1,
-              prefilter=False, prefilter_eps=1.0,
+              prefilter=False, prefilter_eps=1.0, obs=False,
               delta_capacity=None, auto_compact=False, **index_opts
               ) -> "ShardedSearcher":
         # m* is derived from the PER-SHARD corpus size (each shard owns its
@@ -271,7 +274,7 @@ class ShardedSearcher(_MutableMixin, Searcher):
         return cls(sharded, _runtime_from_opts(guarantee, mode, verification,
                                                norm_adaptive, cs_prune,
                                                budget, budget2, prefilter,
-                                               prefilter_eps))
+                                               prefilter_eps, obs))
 
     def _search(self, queries, k, runtime: Optional[RuntimeConfig] = None
                 ) -> Tuple[np.ndarray, np.ndarray, dict]:

@@ -61,7 +61,7 @@ class ProMIPS:
                budget: Optional[int] = None, budget2: Optional[int] = None,
                norm_adaptive: bool = False, cs_prune: bool = False,
                verification: str = "fused", prefilter: bool = False,
-               prefilter_eps: float = 1.0):
+               prefilter_eps: float = 1.0, obs: bool = False):
         """Batched device-mode c-k-AMIP search. queries: (B, d).
 
         ``verification`` picks the candidate-scoring backend ("fused" =
@@ -73,12 +73,15 @@ class ProMIPS:
         per-query lax.scan). "fused" and "batched" are bit-identical at
         every budget and identical to "scan" at the default full budget; a
         finite ``budget`` caps the shared union tile under "fused"/"batched"
-        vs each query's own selection under "scan".
+        vs each query's own selection under "scan". ``obs=True`` records
+        per-phase spans + metrics for this call (DESIGN.md §14); results are
+        bit-identical either way.
         """
         cfg = RuntimeConfig(k=k, budget=budget, budget2=budget2,
                             mode="two_phase", verification=verification,
                             norm_adaptive=norm_adaptive, cs_prune=cs_prune,
-                            prefilter=prefilter, prefilter_eps=prefilter_eps)
+                            prefilter=prefilter, prefilter_eps=prefilter_eps,
+                            obs=obs)
         return runtime_search(self.arrays, self.meta, queries, cfg)
 
     def search_progressive(self, queries: np.ndarray, k: int = 10,

@@ -38,6 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
+from ..obs import trace as _trace
+from ..obs.trace import span as _span
 from .index import IndexArrays, IndexMeta
 from .search_common import next_pow2
 from .search_device import SearchStats, search_batch, search_batch_progressive
@@ -86,6 +88,9 @@ class RuntimeConfig:
     prefilter: bool = False            # quantized-sketch block prefilter
     prefilter_eps: float = 1.0         # sketch-bound scale; 1.0 = lossless,
                                        # smaller prunes harder (DESIGN.md §13)
+    obs: bool = False                  # per-call span/metric instrumentation
+                                       # (also on whenever obs.trace is
+                                       # globally enabled; DESIGN.md §14)
 
     def __post_init__(self):
         self.validate()
@@ -110,6 +115,8 @@ class RuntimeConfig:
         if not isinstance(self.prefilter, bool):
             raise ValueError(f"prefilter must be a bool, got "
                              f"{self.prefilter!r}")
+        if not isinstance(self.obs, bool):
+            raise ValueError(f"obs must be a bool, got {self.obs!r}")
         eps = self.prefilter_eps
         if not isinstance(eps, (int, float, np.floating)) or isinstance(
                 eps, bool) or not 0.0 < float(eps) <= 1.0:
@@ -137,36 +144,47 @@ def search(arrays: IndexArrays, meta: IndexMeta, queries,
     budget2 = int(min(cfg.budget2 if cfg.budget2 is not None else budget,
                       meta.n_blocks))
     q = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
-    if cfg.mode == "progressive":
-        ids, _, stats = search_batch_progressive(arrays, meta, q, k=cfg.k,
-                                                 budget=budget,
-                                                 cs_prune=cfg.cs_prune)
-    elif cfg.mode == "two_phase":
-        if cfg.verification == "fused" and jax.core.trace_state_clean():
-            # Host-orchestrated fused rounds (tiles sized on host, an empty
-            # round skipped outright, the dense-round score cache on the CPU
-            # oracle). Under ANY ambient trace (jit / shard_map — even when
-            # `queries` itself is a closed-over concrete array, the index
-            # arrays may be traced) `search_batch` runs the bit-identical
-            # IN-GRAPH fused driver (`core/search_graph.py`) instead: same
-            # block_mips kernel, pow2 tile buckets as lax.switch branches.
-            ids, _, stats = search_batch_fused(
-                arrays, meta, q, k=cfg.k, budget=budget, budget2=budget2,
-                norm_adaptive=cfg.norm_adaptive, cs_prune=cfg.cs_prune,
-                use_pallas=cfg.use_pallas, prefilter=cfg.prefilter,
-                prefilter_eps=cfg.prefilter_eps)
+    # Host spans only make sense OUTSIDE an ambient trace (inside one they
+    # would time jaxpr construction, not work — DESIGN.md §14); the check is
+    # shared with the fused-driver routing below.
+    clean = jax.core.trace_state_clean()
+    active = clean and (cfg.obs or _trace.enabled())
+    with _span("search", active=active, metric="search.batch_us") as sp_e2e:
+        if cfg.mode == "progressive":
+            ids, _, stats = search_batch_progressive(arrays, meta, q,
+                                                     k=cfg.k, budget=budget,
+                                                     cs_prune=cfg.cs_prune)
+        elif cfg.mode == "two_phase":
+            if cfg.verification == "fused" and clean:
+                # Host-orchestrated fused rounds (tiles sized on host, an
+                # empty round skipped outright, the dense-round score cache
+                # on the CPU oracle). Under ANY ambient trace (jit /
+                # shard_map — even when `queries` itself is a closed-over
+                # concrete array, the index arrays may be traced)
+                # `search_batch` runs the bit-identical IN-GRAPH fused
+                # driver (`core/search_graph.py`) instead: same block_mips
+                # kernel, pow2 tile buckets as lax.switch branches.
+                ids, _, stats = search_batch_fused(
+                    arrays, meta, q, k=cfg.k, budget=budget, budget2=budget2,
+                    norm_adaptive=cfg.norm_adaptive, cs_prune=cfg.cs_prune,
+                    use_pallas=cfg.use_pallas, prefilter=cfg.prefilter,
+                    prefilter_eps=cfg.prefilter_eps, obs=active)
+            else:
+                ids, _, stats = search_batch(arrays, meta, q, k=cfg.k,
+                                             budget=budget, budget2=budget2,
+                                             norm_adaptive=cfg.norm_adaptive,
+                                             cs_prune=cfg.cs_prune,
+                                             verification=cfg.verification,
+                                             use_pallas=cfg.use_pallas,
+                                             prefilter=cfg.prefilter,
+                                             prefilter_eps=cfg.prefilter_eps)
         else:
-            ids, _, stats = search_batch(arrays, meta, q, k=cfg.k,
-                                         budget=budget, budget2=budget2,
-                                         norm_adaptive=cfg.norm_adaptive,
-                                         cs_prune=cfg.cs_prune,
-                                         verification=cfg.verification,
-                                         use_pallas=cfg.use_pallas,
-                                         prefilter=cfg.prefilter,
-                                         prefilter_eps=cfg.prefilter_eps)
-    else:
-        raise ValueError(f"unknown search mode: {cfg.mode!r}")
-    return ids, _rescore(arrays.x, stats.rows, q), stats
+            raise ValueError(f"unknown search mode: {cfg.mode!r}")
+        with _span("rescore", active=active,
+                   metric="search.rescore_us") as sp:
+            scores = sp.fence(_rescore(arrays.x, stats.rows, q))
+        sp_e2e.fence((ids, scores))
+    return ids, scores, stats
 
 
 # ---------------------------------------------------------------------------
@@ -228,9 +246,15 @@ def search_segments(snap, queries, cfg: RuntimeConfig = RuntimeConfig()):
                           else 0), meta.n_pad)
     ids_b, scores_b, stats = search(snap.arrays, meta, q,
                                     dataclasses.replace(cfg, k=k_base))
-    ids, scores = _merge_segments(snap.base_alive, stats.rows, ids_b, scores_b,
-                                  snap.delta_x, snap.delta_gids,
-                                  snap.delta_valid, q, cfg.k, cfg.use_pallas)
+    active = ((cfg.obs or _trace.enabled())
+              and jax.core.trace_state_clean())
+    with _span("segments_merge", active=active,
+               metric="search.merge_us") as sp:
+        ids, scores = _merge_segments(snap.base_alive, stats.rows, ids_b,
+                                      scores_b, snap.delta_x, snap.delta_gids,
+                                      snap.delta_valid, q, cfg.k,
+                                      cfg.use_pallas)
+        sp.fence((ids, scores))
     delta_pages = -(-snap.delta_count // meta.page_rows)  # logical delta sweep
     return ids, scores, StreamStats(
         pages=stats.pages + jnp.int32(delta_pages),

@@ -163,15 +163,21 @@ def select_frontend(arrays: IndexArrays, meta: IndexMeta, queries):
     Returns (q_proj (B, m), q_l2sq (B,), d_sp (B, S), r0 (B,), probe_ok (B,),
     c_half (B,), mask0 (B, NB)); ``d_sp`` is reused by the compensation
     round so the center-distance matmul runs once per search.
+
+    The `jax.named_scope` labels cost nothing at runtime; they tag the HLO
+    so these phases are identifiable in XLA profiles / `jax.profiler.trace`
+    captures even for the fully-traced drivers (DESIGN.md §14).
     """
-    q_proj = queries @ arrays.a
-    q_l1 = jnp.sum(jnp.abs(queries), axis=1)
-    q_l2sq = jnp.sum(queries * queries, axis=1)
-    _, r0, probe_ok = quick_probe_batch(_group_table(arrays), q_proj, q_l1,
-                                        meta.c, meta.x_p)
-    c_half = sc.condition_a_threshold(arrays.max_l2sq, q_l2sq, meta.c)
-    d_sp = subpart_distances(arrays, q_proj)
-    mask0 = blocks_from_radii(arrays, d_sp, r0)
+    with jax.named_scope("select_frontend"):
+        q_proj = queries @ arrays.a
+        q_l1 = jnp.sum(jnp.abs(queries), axis=1)
+        q_l2sq = jnp.sum(queries * queries, axis=1)
+        with jax.named_scope("quick_probe_batch"):
+            _, r0, probe_ok = quick_probe_batch(_group_table(arrays), q_proj,
+                                                q_l1, meta.c, meta.x_p)
+        c_half = sc.condition_a_threshold(arrays.max_l2sq, q_l2sq, meta.c)
+        d_sp = subpart_distances(arrays, q_proj)
+        mask0 = blocks_from_radii(arrays, d_sp, r0)
     return q_proj, q_l2sq, d_sp, r0, probe_ok, c_half, mask0
 
 
@@ -183,19 +189,21 @@ def compensation_masks(arrays: IndexArrays, meta: IndexMeta, d_sp, q_l2sq,
     matrix. Returns (need2 (B,), r1 (B,), mask1 (B, NB)) with ``mask1``
     already restricted to blocks NOT scanned in round 1.
     """
-    cond_b = sc.condition_b(r0 * r0, s_k, arrays.max_l2sq, q_l2sq,
-                            meta.c, meta.x_p, xp=jnp)
-    r1 = sc.compensation_radius(s_k, arrays.max_l2sq, q_l2sq,
+    with jax.named_scope("compensation_masks"):
+        cond_b = sc.condition_b(r0 * r0, s_k, arrays.max_l2sq, q_l2sq,
                                 meta.c, meta.x_p, xp=jnp)
-    need2 = ~(cond_b | done_a)
-    if norm_adaptive:
-        r_comp = sc.adaptive_radii(arrays.sp_max_l2sq[None, :], s_k[:, None],
-                                   q_l2sq[:, None], meta.c, meta.x_p,
-                                   cs_prune=cs_prune, xp=jnp)     # (B, S)
-        r_comp = jnp.where(need2[:, None], r_comp, -1.0)
-    else:
-        r_comp = jnp.where(need2, r1, -1.0)[:, None]              # (B, 1)
-    mask1 = blocks_from_radii(arrays, d_sp, r_comp) & ~mask0
+        r1 = sc.compensation_radius(s_k, arrays.max_l2sq, q_l2sq,
+                                    meta.c, meta.x_p, xp=jnp)
+        need2 = ~(cond_b | done_a)
+        if norm_adaptive:
+            r_comp = sc.adaptive_radii(arrays.sp_max_l2sq[None, :],
+                                       s_k[:, None], q_l2sq[:, None], meta.c,
+                                       meta.x_p, cs_prune=cs_prune,
+                                       xp=jnp)                    # (B, S)
+            r_comp = jnp.where(need2[:, None], r_comp, -1.0)
+        else:
+            r_comp = jnp.where(need2, r1, -1.0)[:, None]          # (B, 1)
+        mask1 = blocks_from_radii(arrays, d_sp, r_comp) & ~mask0
     return need2, r1, mask1
 
 
@@ -210,17 +218,19 @@ def prefilter_round1(arrays: IndexArrays, queries, mask0, k: int,
     evaluation. Shared by every backend (host fused driver jit-wraps it,
     the in-graph driver and batched/scan paths call it in-trace), which is
     what keeps all of them bit-identical with the prefilter on."""
-    est = ops.sketch_scores(queries, arrays.sk_mu, arrays.sk_codebooks,
-                            arrays.sk_codes, use_pallas=use_pallas)
-    bnd = sc.sketch_margin(queries, arrays.sk_err, eps)
-    bvalid = sc.block_valid_from_ids(arrays.ids, page_rows)
-    surv = sc.sketch_survivors_round1(mask0, est, bnd, bvalid, k)
+    with jax.named_scope("prefilter_round1"):
+        est = ops.sketch_scores(queries, arrays.sk_mu, arrays.sk_codebooks,
+                                arrays.sk_codes, use_pallas=use_pallas)
+        bnd = sc.sketch_margin(queries, arrays.sk_err, eps)
+        bvalid = sc.block_valid_from_ids(arrays.ids, page_rows)
+        surv = sc.sketch_survivors_round1(mask0, est, bnd, bvalid, k)
     return surv, est, bnd, bvalid
 
 
 def prefilter_round2(mask1, est, bnd, bvalid, s_k):
     """Compensation-round sketch pruning against the realized k-th score."""
-    return sc.sketch_survivors_round2(mask1, est, bnd, bvalid, s_k)
+    with jax.named_scope("prefilter_round2"):
+        return sc.sketch_survivors_round2(mask1, est, bnd, bvalid, s_k)
 
 
 def _merge_topk(top: TopK, scores, rows, k: int) -> TopK:

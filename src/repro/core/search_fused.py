@@ -41,6 +41,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
+from ..obs import metrics as _metrics
+from ..obs.trace import span as _span
 from .index import IndexArrays, IndexMeta
 from .search_common import next_pow2
 from .search_device import (SearchStats, TopK, compensation_masks,
@@ -52,10 +54,53 @@ from .search_device import (SearchStats, TopK, compensation_masks,
 # batched full tile), skipping the row gather entirely.
 DENSE_FRAC = 0.9
 
-# (n_slots, batch, k, dense) recorded each time `_verify` RETRACES — the
-# pow2 bucketing's jit-cache bound is asserted against this in
-# tests/test_fused_verification.py.
-VERIFY_TRACES: list = []
+
+class TraceRing:
+    """Bounded record of `_verify` retraces.
+
+    Each jit retrace appends one (n_slots, batch, k, flavor, want_scores)
+    tuple. A long-lived serve process retraces whenever a new pow2 bucket /
+    batch shape first appears, so the storage is a RING (default 256 — far
+    above the O(log n_blocks) bound the tests assert) instead of the old
+    unbounded module list, while keeping the list surface those tests use
+    (`clear()`, `list(...)`, `len()`, slicing). ``total`` counts every
+    retrace ever (monotonic, survives `clear()`) and is exported through
+    the metrics registry as the ``fused.verify_retraces`` gauge.
+    """
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = int(capacity)
+        self.total = 0
+        self._items: list = []
+
+    def append(self, item) -> None:
+        self.total += 1
+        self._items.append(item)
+        if len(self._items) > self.capacity:
+            del self._items[: len(self._items) - self.capacity]
+
+    def clear(self) -> None:
+        self._items.clear()
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __iter__(self):
+        return iter(self._items)
+
+    def __getitem__(self, i):
+        return self._items[i]
+
+    def __bool__(self) -> bool:
+        return bool(self._items)
+
+
+# Recorded each time `_verify` RETRACES — the pow2 bucketing's jit-cache
+# bound is asserted against this in tests/test_fused_verification.py.
+VERIFY_TRACES = TraceRing()
+
+_metrics.register_collector(
+    lambda: _metrics.gauge("fused.verify_retraces").set(VERIFY_TRACES.total))
 
 
 @functools.partial(jax.jit, static_argnames=("meta",))
@@ -172,6 +217,7 @@ def search_batch_fused(
     use_pallas: Optional[bool] = None,
     prefilter: bool = False,
     prefilter_eps: float = 1.0,
+    obs: bool = False,
 ):
     """c-k-AMIP search, fused backend. Same contract as `search_batch`.
 
@@ -185,20 +231,31 @@ def search_batch_fused(
     block BEFORE any page is fetched and verifies only the survivors; both
     rounds' selections shrink, the Theorem-1/2 accounting is untouched (the
     survivor rules are lossless at ``prefilter_eps=1``; see DESIGN.md §13).
+
+    ``obs`` activates the per-phase spans and round-shape counters
+    (DESIGN.md §14). Off (the default), each phase pays one no-op span
+    call; no jit graph differs either way — the instrumentation is pure
+    host code between the same device calls.
     """
     n_blocks = meta.n_blocks
     n_batch = queries.shape[0]
     cap = min(budget, n_blocks)
     cap2 = min(budget2, n_blocks)
 
-    q_proj, q_l2sq, d_sp, r0, probe_ok, c_half, mask0 = _frontend(
-        arrays, meta, queries)
+    with _span("select_frontend", active=obs,
+               metric="search.frontend_us") as sp:
+        q_proj, q_l2sq, d_sp, r0, probe_ok, c_half, mask0 = _frontend(
+            arrays, meta, queries)
+        sp.fence(mask0)
     mask_r1 = mask0
     sk_est = sk_bnd = sk_bvalid = None
     if prefilter:
-        mask_r1, sk_est, sk_bnd, sk_bvalid = _prefilter1(
-            arrays, queries, mask0, k, meta.page_rows, prefilter_eps,
-            use_pallas)
+        with _span("prefilter_round1", active=obs,
+                   metric="search.prefilter_us") as sp:
+            mask_r1, sk_est, sk_bnd, sk_bvalid = _prefilter1(
+                arrays, queries, mask0, k, meta.page_rows, prefilter_eps,
+                use_pallas)
+            sp.fence(mask_r1)
     zero = jnp.zeros(n_batch, jnp.int32)
     false = jnp.zeros(n_batch, bool)
     # strong f32 (explicit dtype): round-2 carries _verify's strong-typed
@@ -208,41 +265,73 @@ def search_batch_fused(
                rows=jnp.full((n_batch, k), -1, jnp.int32))
 
     scores_cache = None
-    plan = _plan_tile(np.asarray(mask_r1), cap, n_blocks)
+    with _span("plan_tile_round1", active=obs, metric="search.plan_us"):
+        mask_np = np.asarray(mask_r1)
+        if obs and prefilter:
+            n_sel = float(np.asarray(mask0).sum())
+            _metrics.gauge("search.prefilter_survivor_frac").set(
+                float(mask_np.sum()) / max(n_sel, 1.0))
+        plan = _plan_tile(mask_np, cap, n_blocks)
     if plan is None:
+        if obs:
+            _metrics.counter("fused.rounds_skipped").inc()
         pages1, cand1, done_a, lost1 = zero, zero, false, false
     else:
         slots, sel, lost_np, dense = plan
+        if obs:
+            _metrics.counter("fused.rounds_dense" if dense
+                             else "fused.rounds_sparse").inc()
         # A dense oracle round scores the whole corpus in place; keep that
         # (B, n_pad) product so the compensation round needs NO new matmul.
         want_scores = dense and not ops._resolve(use_pallas)
-        top, pages1, cand1, done_a, scores_cache = _verify(
-            arrays, queries, jnp.asarray(slots), jnp.asarray(sel),
-            top.scores, top.rows, c_half, k, meta.page_rows, dense,
-            use_pallas, want_scores)
+        with _span("verify_round1", active=obs,
+                   metric="search.verify_round_us") as sp:
+            top, pages1, cand1, done_a, scores_cache = _verify(
+                arrays, queries, jnp.asarray(slots), jnp.asarray(sel),
+                top.scores, top.rows, c_half, k, meta.page_rows, dense,
+                use_pallas, want_scores)
+            sp.fence(top.scores)
         lost1 = jnp.asarray(lost_np)
 
-    s_k = top.scores[:, k - 1]
-    need2, r1, mask1 = _round2(arrays, meta, d_sp, q_l2sq, s_k, r0, done_a,
-                               mask0, norm_adaptive, cs_prune)
+    with _span("compensation", active=obs,
+               metric="search.compensation_us") as sp:
+        s_k = top.scores[:, k - 1]
+        need2, r1, mask1 = _round2(arrays, meta, d_sp, q_l2sq, s_k, r0,
+                                   done_a, mask0, norm_adaptive, cs_prune)
+        sp.fence(mask1)
     mask_r2 = mask1
     if prefilter:
-        mask_r2 = _prefilter2(mask1, sk_est, sk_bnd, sk_bvalid, s_k)
+        with _span("prefilter_round2", active=obs,
+                   metric="search.prefilter_us") as sp:
+            mask_r2 = _prefilter2(mask1, sk_est, sk_bnd, sk_bvalid, s_k)
+            sp.fence(mask_r2)
 
-    plan = _plan_tile(np.asarray(mask_r2), cap2, n_blocks)
+    with _span("plan_tile_round2", active=obs, metric="search.plan_us"):
+        plan = _plan_tile(np.asarray(mask_r2), cap2, n_blocks)
     if plan is None:
+        if obs:
+            _metrics.counter("fused.rounds_skipped").inc()
         pages2, cand2, lost2 = zero, zero, false
     else:
         slots, sel, lost_np, dense = plan
-        if scores_cache is not None:
-            top, pages2, cand2, _ = _verify_cached(
-                arrays, scores_cache, jnp.asarray(slots), jnp.asarray(sel),
-                top.scores, top.rows, c_half, k, meta.page_rows)
-        else:
-            top, pages2, cand2, _, _ = _verify(
-                arrays, queries, jnp.asarray(slots), jnp.asarray(sel),
-                top.scores, top.rows, c_half, k, meta.page_rows, dense,
-                use_pallas, False)
+        with _span("verify_round2", active=obs,
+                   metric="search.verify_round_us") as sp:
+            if scores_cache is not None:
+                if obs:
+                    _metrics.counter("fused.rounds_cached").inc()
+                top, pages2, cand2, _ = _verify_cached(
+                    arrays, scores_cache, jnp.asarray(slots),
+                    jnp.asarray(sel), top.scores, top.rows, c_half, k,
+                    meta.page_rows)
+            else:
+                if obs:
+                    _metrics.counter("fused.rounds_dense" if dense
+                                     else "fused.rounds_sparse").inc()
+                top, pages2, cand2, _, _ = _verify(
+                    arrays, queries, jnp.asarray(slots), jnp.asarray(sel),
+                    top.scores, top.rows, c_half, k, meta.page_rows, dense,
+                    use_pallas, False)
+            sp.fence(top.scores)
         lost2 = jnp.asarray(lost_np)
 
     stats = SearchStats(
@@ -259,4 +348,4 @@ def search_batch_fused(
     return ids, top.scores, stats
 
 
-__all__ = ["search_batch_fused", "VERIFY_TRACES", "DENSE_FRAC"]
+__all__ = ["search_batch_fused", "TraceRing", "VERIFY_TRACES", "DENSE_FRAC"]

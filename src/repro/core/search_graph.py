@@ -75,7 +75,9 @@ def _fused_round_graph(arrays: IndexArrays, queries, mask, top: TopK, c_half,
 
     Returns (TopK, pages (B,), cand (B,), done_a (B,), lost (B,)) with the
     exact semantics of one host-driver round (`search_fused._verify` over
-    `search_fused._plan_tile`'s tile) — bucket choice and all.
+    `search_fused._plan_tile`'s tile) — bucket choice and all. The body sits
+    under a `jax.named_scope` so the rounds are identifiable in XLA profiles
+    even though this driver never leaves the trace (DESIGN.md §14).
     """
     union = jnp.any(mask, axis=0)                              # (NB,)
     n_union = jnp.sum(union.astype(jnp.int32))
@@ -116,23 +118,24 @@ def _fused_round_graph(arrays: IndexArrays, queries, mask, top: TopK, c_half,
                           len(sizes) - 1)
         return jax.lax.switch(idx, branches, None)
 
-    if have_dense:
-        # The dense fast path sits OUTSIDE the bucket switch, behind a plain
-        # two-way cond: on the XLA CPU backend a many-branch switch carrying
-        # the full corpus in every branch closure costs real per-call
-        # overhead, while a cond is free — and in the dense regime (union >=
-        # DENSE_FRAC) the bucket switch would pick a full-size tile anyway.
-        # Small unions take the switch, whose branches then only carry
-        # small tiles.
-        top_s, top_r, pages, cand, hits, lost = jax.lax.cond(
-            n_union >= DENSE_FRAC * n_blocks,
-            make_branch(n_blocks, True), bucketed, None)
-    else:
-        top_s, top_r, pages, cand, hits, lost = bucketed(None)
-    # "running k-th best >= threshold" <=> "n0 + total selected hits >= k"
-    # (same reduction as search_fused._verify)
-    n0 = jnp.sum(top.scores >= c_half[:, None], axis=1)
-    done_a = (n0 + hits) >= k
+    with jax.named_scope("fused_verify_round"):
+        if have_dense:
+            # The dense fast path sits OUTSIDE the bucket switch, behind a
+            # plain two-way cond: on the XLA CPU backend a many-branch switch
+            # carrying the full corpus in every branch closure costs real
+            # per-call overhead, while a cond is free — and in the dense
+            # regime (union >= DENSE_FRAC) the bucket switch would pick a
+            # full-size tile anyway. Small unions take the switch, whose
+            # branches then only carry small tiles.
+            top_s, top_r, pages, cand, hits, lost = jax.lax.cond(
+                n_union >= DENSE_FRAC * n_blocks,
+                make_branch(n_blocks, True), bucketed, None)
+        else:
+            top_s, top_r, pages, cand, hits, lost = bucketed(None)
+        # "running k-th best >= threshold" <=> "n0 + total selected hits >= k"
+        # (same reduction as search_fused._verify)
+        n0 = jnp.sum(top.scores >= c_half[:, None], axis=1)
+        done_a = (n0 + hits) >= k
     return TopK(scores=top_s, rows=top_r), pages, cand, done_a, lost
 
 

@@ -22,6 +22,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from ..obs import trace as _trace
+from ..obs.trace import span as _span
 from .index import IndexArrays, IndexMeta, build_index
 from .runtime import RuntimeConfig
 from .runtime import search as runtime_search
@@ -47,8 +49,8 @@ class ShardedStats(NamedTuple):
 
     def to_dict(self) -> dict:
         from .stats import stats_totals
-        return dict(stats_totals(self.pages, self.candidates, self.exhausted),
-                    queries=int(self.queries))
+        return stats_totals(self.pages, self.candidates, self.exhausted,
+                            queries=self.queries)
 
 
 def _pad_to(arr: np.ndarray, n: int, fill):
@@ -146,7 +148,10 @@ def sharded_search(
         mode="progressive", cs_prune=cs_prune, budget=budget)
     cfg = dataclasses.replace(cfg, k=k)
     fn = _sharded_search_fn(meta, k, mesh, axis, cfg)
-    return fn(sharded.arrays, jnp.asarray(queries, jnp.float32))
+    active = jax.core.trace_state_clean() and (cfg.obs or _trace.enabled())
+    with _span("sharded_fanout", active=active,
+               metric="sharded.fanout_us") as sp:
+        return sp.fence(fn(sharded.arrays, jnp.asarray(queries, jnp.float32)))
 
 
 @functools.lru_cache(maxsize=32)
@@ -255,23 +260,35 @@ class MutableShardedProMIPS:
         computations overlap under JAX's async dispatch.
 
         Returns (ids (B, k), scores (B, k), `ShardedStats`)."""
-        launched = [shard.search(queries, k=k, runtime=runtime)
-                    for shard in self.shards]
-        ids_all = [np.asarray(ids) for ids, _, _ in launched]
-        scores_all = [np.asarray(scores) for _, scores, _ in launched]
-        pages = sum(int(np.sum(np.asarray(st.pages))) for _, _, st in launched)
-        cand = sum(int(np.sum(np.asarray(st.candidates)))
-                   for _, _, st in launched)
-        exhausted = int(np.sum(np.any(
-            np.stack([np.asarray(st.exhausted) for _, _, st in launched]),
-            axis=0)))
-        flat_i = np.concatenate(ids_all, axis=1)
-        flat_s = np.concatenate(scores_all, axis=1)
-        pos = np.argsort(-flat_s, axis=1, kind="stable")[:, :k]
-        stats = ShardedStats(pages=pages, candidates=cand, exhausted=exhausted,
-                             queries=int(flat_i.shape[0]))
-        return (np.take_along_axis(flat_i, pos, axis=1),
-                np.take_along_axis(flat_s, pos, axis=1), stats)
+        active = jax.core.trace_state_clean() and (
+            _trace.enabled() or (runtime is not None and runtime.obs))
+        # the dispatch span is deliberately UNFENCED: fencing each launch
+        # would serialize the shards and destroy the async-dispatch overlap
+        # this loop exists to create (it times enqueue, not device work)
+        with _span("sharded_dispatch", active=active,
+                   metric="sharded.dispatch_us"):
+            launched = [shard.search(queries, k=k, runtime=runtime)
+                        for shard in self.shards]
+        with _span("sharded_merge", active=active,
+                   metric="sharded.merge_us") as sp:
+            ids_all = [np.asarray(ids) for ids, _, _ in launched]
+            scores_all = [np.asarray(scores) for _, scores, _ in launched]
+            pages = sum(int(np.sum(np.asarray(st.pages)))
+                        for _, _, st in launched)
+            cand = sum(int(np.sum(np.asarray(st.candidates)))
+                       for _, _, st in launched)
+            exhausted = int(np.sum(np.any(
+                np.stack([np.asarray(st.exhausted) for _, _, st in launched]),
+                axis=0)))
+            flat_i = np.concatenate(ids_all, axis=1)
+            flat_s = np.concatenate(scores_all, axis=1)
+            pos = np.argsort(-flat_s, axis=1, kind="stable")[:, :k]
+            stats = ShardedStats(pages=pages, candidates=cand,
+                                 exhausted=exhausted,
+                                 queries=int(flat_i.shape[0]))
+            out = sp.fence((np.take_along_axis(flat_i, pos, axis=1),
+                            np.take_along_axis(flat_s, pos, axis=1)))
+        return out[0], out[1], stats
 
     # -- persistence (repro.api save/load, DESIGN.md §9) ---------------------
     def state_dict(self) -> tuple[dict, dict]:

@@ -5,22 +5,33 @@ Every stats type in the repo — `SearchStats` (device), `HostStats` (host),
 by calling :func:`stats_totals`, so the keys `repro.api.SearchResult.stats`
 carries are defined in exactly one place (`repro/api/types.STAT_KEYS` names
 them plus the facade-stamped ``wall_time_s``).
+
+Being the single choke point also makes it the one feed into the metrics
+registry (DESIGN.md §14): when `repro.obs.metrics` is enabled, every batch's
+pages/candidates/exhausted/queries totals land in the ``search.*`` counters;
+disabled, the feed is one bool check.
 """
 from __future__ import annotations
 
 import numpy as np
 
+from ..obs import metrics as _metrics
 
-def stats_totals(pages, candidates, exhausted) -> dict:
+
+def stats_totals(pages, candidates, exhausted, queries=None) -> dict:
     """Batch totals as python ints. Accepts per-query arrays (device paths)
-    or scalars (single-query host path — ``queries`` is then 1)."""
+    or scalars (single-query host path — ``queries`` is then 1). Callers
+    whose totals are pre-aggregated (`ShardedStats`) pass ``queries``
+    explicitly so both the dict and the metrics feed stay accurate."""
     pages = np.asarray(pages)
-    return {
+    totals = {
         "pages": int(pages.sum()),
         "candidates": int(np.asarray(candidates).sum()),
         "exhausted": int(np.asarray(exhausted).sum()),
-        "queries": int(pages.size),
+        "queries": int(pages.size) if queries is None else int(queries),
     }
+    _metrics.observe_search(totals)
+    return totals
 
 
 __all__ = ["stats_totals"]

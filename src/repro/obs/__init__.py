@@ -1,0 +1,23 @@
+"""Observability substrate (DESIGN.md §14).
+
+Two small, dependency-free-within-the-repo modules:
+
+  obs.trace    near-zero-overhead-when-disabled span tracer with a
+               thread-safe bounded ring buffer, opt-in `block_until_ready`
+               fencing (honest device timings under JAX async dispatch),
+               optional `jax.profiler.TraceAnnotation` pass-through, and
+               Chrome trace-event JSON export (viewable in Perfetto).
+  obs.metrics  process-wide registry of counters / gauges / log2-bucket
+               histograms with a DECLARED name glossary, `snapshot()`,
+               JSONL flush and Prometheus text exposition. Fed from the
+               `core/stats.stats_totals` choke point and the span tracer.
+
+Neither module imports anything from `repro.core` (the core imports THEM),
+so there are no cycles and `import repro.obs` stays cheap.
+"""
+from . import metrics, trace
+from .trace import (configure, disable, enable, enabled, export_chrome_trace,
+                    span)
+
+__all__ = ["metrics", "trace", "span", "configure", "enable", "disable",
+           "enabled", "export_chrome_trace"]

@@ -25,6 +25,7 @@ compaction folds the churn back into the immutable base off the decode path.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional
 
 import jax
@@ -34,6 +35,7 @@ import numpy as np
 from .. import api
 from ..core.runtime import RuntimeConfig
 from ..models import transformer as model_lib
+from ..obs import metrics as _metrics
 
 
 @dataclasses.dataclass
@@ -42,6 +44,10 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: Optional[List[int]] = None
     slot: int = -1
+    # lifecycle timestamps (time.perf_counter seconds; 0.0 = not yet reached)
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_done: float = 0.0
 
 
 class DecodeEngine:
@@ -49,7 +55,8 @@ class DecodeEngine:
                  logits_mode: str = "exact", promips_kwargs: Optional[dict] = None,
                  promips_budget: Optional[int] = None, eos_id: int = 0,
                  search_runtime: Optional[RuntimeConfig] = None,
-                 index: Optional[api.Searcher] = None):
+                 index: Optional[api.Searcher] = None,
+                 obs: bool = False, max_queue: Optional[int] = None):
         if index is not None:
             # validated before any allocation: any MUTABLE Searcher works,
             # gated by capability rather than by concrete stream type
@@ -70,6 +77,11 @@ class DecodeEngine:
         self.b, self.max_len = batch_slots, max_len
         self.logits_mode = logits_mode
         self.eos_id = eos_id
+        # serve-path telemetry (DESIGN.md §14): counters/histograms in the
+        # repro.obs.metrics registry, one `if self.obs` check when disabled.
+        # max_queue bounds admission backlog; submits past it are SHED.
+        self.obs = bool(obs)
+        self.max_queue = max_queue
         self.cache = model_lib.init_cache(cfg, batch_slots, max_len,
                                           params["embed"].dtype)
         self.active = np.zeros(batch_slots, bool)
@@ -147,16 +159,29 @@ class DecodeEngine:
         ids = np.atleast_1d(np.asarray(ids, np.int64))
         self.index.delete(ids)
         self._retired[ids] = True  # admission prefill masks these too
+        if self.obs:
+            _metrics.counter("serve.tombstones").inc(len(ids))
 
     def join_compaction(self, timeout: Optional[float] = None) -> None:
         if self.logits_mode == "promips":
             self.index.flush(timeout)
 
     # -- request lifecycle ---------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
+    def submit(self, prompt: np.ndarray,
+               max_new_tokens: int = 16) -> Optional[Request]:
+        """Enqueue a request. Returns None (request SHED) when ``max_queue``
+        is set and the admission backlog is already at the cap — the caller
+        decides whether to retry; nothing is buffered."""
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            if self.obs:
+                _metrics.counter("serve.requests_shed").inc()
+            return None
         req = Request(prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=max_new_tokens, out_tokens=[])
+                      max_new_tokens=max_new_tokens, out_tokens=[],
+                      t_submit=time.perf_counter())
         self.queue.append(req)
+        if self.obs:
+            _metrics.counter("serve.requests_submitted").inc()
         return req
 
     def _admit(self):
@@ -196,14 +221,22 @@ class DecodeEngine:
                 # dense prefill argmax consistent with the decode path
                 lg[: self.cfg.vocab][self._retired] = -np.inf
             req.out_tokens.append(int(np.argmax(lg)))
+            req.t_admit = time.perf_counter()
+            if self.obs:
+                _metrics.histogram("serve.queue_wait_us").observe(
+                    (req.t_admit - req.t_submit) * 1e6)
             self.active[slot] = True
             self.requests[slot] = req
 
     # -- main loop -----------------------------------------------------------
     def step(self) -> bool:
         """One engine step: admit, decode one token for all active slots."""
+        t0 = time.perf_counter() if self.obs else 0.0
         self._admit()
         if not self.active.any():
+            if self.obs:
+                _metrics.gauge("serve.slot_occupancy").set(0.0)
+                _metrics.gauge("serve.queue_depth").set(len(self.queue))
             return False
         tokens = np.zeros((self.b, 1), np.int32)
         for slot in range(self.b):
@@ -215,6 +248,8 @@ class DecodeEngine:
             res = self.index.search(hidden, k=self.search_runtime.k,
                                     runtime=self.search_runtime)
             self.pages += res.stats["pages"]
+            if self.obs:
+                _metrics.counter("serve.pages").inc(res.stats["pages"])
             nxt = res.ids[:, 0]
             # a slot starved by a finite promips_budget (stats.exhausted)
             # returns id -1; end that sequence instead of decoding token -1
@@ -237,8 +272,33 @@ class DecodeEngine:
                     or int(nxt[slot]) == self.eos_id):
                 self.active[slot] = False
                 self.requests[slot] = None
+                req.t_done = time.perf_counter()
+                if self.obs:
+                    _metrics.counter("serve.requests_completed").inc()
+                    _metrics.histogram("serve.request_us").observe(
+                        (req.t_done - req.t_submit) * 1e6)
+        if self.obs:
+            _metrics.counter("serve.decode_steps").inc()
+            _metrics.histogram("serve.step_us").observe(
+                (time.perf_counter() - t0) * 1e6)
+            _metrics.gauge("serve.slot_occupancy").set(
+                float(self.active.sum()) / max(self.b, 1))
+            _metrics.gauge("serve.queue_depth").set(len(self.queue))
         return True
 
     def run(self, max_steps: int = 10_000):
         while (self.queue or self.active.any()) and self.steps < max_steps:
             self.step()
+
+    # -- telemetry -----------------------------------------------------------
+    def metrics_snapshot(self) -> dict:
+        """Engine-state view plus every live ``serve.*`` registry entry
+        (counters as ints, gauges as floats, histograms as their summary
+        dicts). Cheap enough to poll per scrape; with ``obs=False`` only the
+        engine-state keys are populated."""
+        snap = {"steps": self.steps, "pages": self.pages,
+                "queue_depth": len(self.queue),
+                "active_slots": int(self.active.sum())}
+        snap.update({name: val for name, val in _metrics.snapshot().items()
+                     if name.startswith("serve.")})
+        return snap

@@ -27,6 +27,9 @@ import numpy as np
 
 from ..core.index import IndexArrays, IndexMeta, ProMIPSIndex
 from ..core.runtime import RuntimeConfig, next_pow2, search_segments
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
+from ..obs.trace import span as _span
 from .compaction import CompactionConfig, Compactor, rebuild_base
 from .segments import DeltaSegment, Snapshot
 
@@ -171,6 +174,8 @@ class MutableProMIPS:
                     self._next_id = max(self._next_id, int(gids.max()) + 1)
                     self._log(("insert", gids.copy(), rows.copy()))
                     self._dirty()
+                    if _metrics.enabled():
+                        _metrics.counter("stream.delta_appends").inc(len(gids))
                     return
             if not _wait_ok or self.compactor is None:
                 raise RuntimeError("delta full while compaction in flight")
@@ -215,6 +220,8 @@ class MutableProMIPS:
                     self._n_base_dead += 1
             self._log(("delete", gids.copy()))
             self._dirty()
+            if _metrics.enabled():
+                _metrics.counter("stream.deletes").inc(len(gids))
 
     def update(self, ids, rows) -> None:
         """Replace the rows of live ids (tombstone old + append new).
@@ -316,6 +323,10 @@ class MutableProMIPS:
                     self.insert(op[1], op[2])
                 else:
                     self.delete(op[1])
+        # counted HERE (not in compact()) so the background Compactor's
+        # installs land in the same counter as synchronous compactions
+        if _metrics.enabled():
+            _metrics.counter("stream.compactions").inc()
 
     def _abandon_compaction(self) -> None:
         """Close the op log without swapping (failed rebuild). The freeze only
@@ -332,16 +343,19 @@ class MutableProMIPS:
         rebuild a base FROM: the rebuild is skipped and the op log closed.
         Tombstones then simply persist, which is semantically invisible —
         searches already mask every dead row."""
-        gids, rows = self._freeze_for_compaction()
-        if len(gids) == 0:
-            self._abandon_compaction()
-            return
-        try:
-            new_base = rebuild_base(gids, rows, self.build_kwargs)
-        except BaseException:
-            self._abandon_compaction()
-            raise
-        self._install_compacted(new_base)
+        with _span("stream_compact",
+                   active=_trace.enabled() or _metrics.enabled(),
+                   metric="stream.compaction_us"):
+            gids, rows = self._freeze_for_compaction()
+            if len(gids) == 0:
+                self._abandon_compaction()
+                return
+            try:
+                new_base = rebuild_base(gids, rows, self.build_kwargs)
+            except BaseException:
+                self._abandon_compaction()
+                raise
+            self._install_compacted(new_base)
 
     def join_compaction(self, timeout: Optional[float] = None) -> None:
         if self.compactor is not None:
