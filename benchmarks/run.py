@@ -35,7 +35,7 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 # fresh record to results/bench/history.jsonl with a timestamp, so the
 # BENCH_*.json numbers gain a trajectory instead of being overwritten.
 BENCH_FILES = ("BENCH_search.json", "BENCH_stream.json", "BENCH_api.json",
-               "BENCH_sharded.json", "BENCH_obs.json")
+               "BENCH_sharded.json", "BENCH_obs.json", "BENCH_tune.json")
 
 
 @functools.lru_cache(maxsize=1)
@@ -81,6 +81,7 @@ BENCHES = [
     ("api_registry", lambda: F.bench_api(quick=False)),
     ("sharded_fanout", lambda: F.bench_sharded(quick=False)),
     ("obs_breakdown", lambda: F.bench_obs(quick=False)),
+    ("tune_autotuner", lambda: F.bench_tune(smoke=True)),
 ]
 
 
@@ -111,6 +112,14 @@ def main() -> None:
                          "breakdown (frontend/prefilter/verify/merge) at "
                          "the large-n point, with a Chrome-trace export "
                          "(writes BENCH_obs.json)")
+    ap.add_argument("--tune", action="store_true",
+                    help="offline autotuner bench: coordinate-descent "
+                         "tuning run on a temp cache, tuned-vs-hand-picked "
+                         "interleaved ratio, parity + empty-cache-noop "
+                         "audits (writes BENCH_tune.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --tune: smallest cutout + tightest budget "
+                         "(the ci.sh tune tier)")
     args = ap.parse_args()
 
     if args.quick:
@@ -123,6 +132,8 @@ def main() -> None:
         benches = [("sharded_fanout", lambda: F.bench_sharded(quick=True))]
     elif args.obs:
         benches = [("obs_breakdown", lambda: F.bench_obs(quick=True))]
+    elif args.tune:
+        benches = [("tune_autotuner", lambda: F.bench_tune(smoke=args.smoke))]
     else:
         benches = BENCHES
     os.makedirs(args.out, exist_ok=True)

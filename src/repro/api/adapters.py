@@ -41,20 +41,40 @@ from .types import Capabilities, GuaranteeConfig
 
 
 def _runtime_from_opts(guarantee: GuaranteeConfig, mode: str,
-                       verification: str, norm_adaptive: Optional[bool],
+                       verification: Optional[str],
+                       norm_adaptive: Optional[bool],
                        cs_prune: Optional[bool], budget, budget2,
-                       prefilter: bool = False, prefilter_eps: float = 1.0,
-                       obs: bool = False) -> RuntimeConfig:
+                       prefilter: bool = False,
+                       prefilter_eps: Optional[float] = None,
+                       obs: bool = False,
+                       shape: Optional[tuple] = None) -> RuntimeConfig:
     """Map facade opts onto a `RuntimeConfig` with guarantee-safe defaults:
     budgets stay None (scan every selected block — the Theorem-2 bound
     requires no truncation) unless the caller explicitly trades them.
     ``prefilter`` turns on the quantized-sketch block prefilter; at the
     default ``prefilter_eps=1.0`` it is lossless, so the guarantee holds.
     ``obs`` turns on per-call span/metric instrumentation (DESIGN.md §14);
-    results are bit-identical either way."""
+    results are bit-identical either way.
+
+    ``verification=None`` / ``prefilter_eps=None`` consult the offline
+    tuning cache for the ``shape=(n, d)`` point (`repro.tune`, DESIGN.md
+    §15) and fall back to the hand-picked "fused" / 1.0 on a miss —
+    bit-identical to passing them explicitly. The `RuntimeConfig` keeps its
+    own None sentinels for dense_frac/tile_cap (resolved per-search)."""
     if mode == "progressive":
         norm_adaptive = True if norm_adaptive is None else norm_adaptive
         cs_prune = True if cs_prune is None else cs_prune
+    if verification is None or prefilter_eps is None:
+        from ..tune import cache as _tune_cache
+        tuned = (_tune_cache.resolved("runtime", *shape) if shape is not None
+                 else dict(_tune_cache.space.HAND_PICKED["runtime"]))
+        if verification is None:
+            verification = str(tuned["verification"])
+        if prefilter_eps is None:
+            # a tuned eps only ever describes a prefiltered workload; with
+            # the prefilter off the knob is dead and stays at lossless 1.0
+            prefilter_eps = (float(tuned["prefilter_eps"]) if prefilter
+                             else 1.0)
     return RuntimeConfig(
         k=guarantee.k, budget=budget, budget2=budget2, mode=mode,
         verification=verification,
@@ -90,9 +110,9 @@ class PromipsSearcher(Searcher):
 
     @classmethod
     def build(cls, x, *, guarantee, seed, page_bytes, m=None,
-              mode="two_phase", verification="fused", norm_adaptive=None,
+              mode="two_phase", verification=None, norm_adaptive=None,
               cs_prune=None, budget=None, budget2=None, norm_strata=None,
-              prefilter=False, prefilter_eps=1.0, obs=False,
+              prefilter=False, prefilter_eps=None, obs=False,
               search_path="device", **index_opts) -> "PromipsSearcher":
         plan = guarantee.derive(len(x))
         if norm_strata is None:
@@ -106,7 +126,9 @@ class PromipsSearcher(Searcher):
         return cls(pm, _runtime_from_opts(guarantee, mode, verification,
                                           norm_adaptive, cs_prune,
                                           budget, budget2, prefilter,
-                                          prefilter_eps, obs), search_path)
+                                          prefilter_eps, obs,
+                                          shape=(len(x), int(x.shape[1]))),
+                   search_path)
 
     def _search_host(self, queries, k, cfg: RuntimeConfig
                      ) -> Tuple[np.ndarray, np.ndarray, dict]:
@@ -202,9 +224,9 @@ class StreamSearcher(_MutableMixin, Searcher):
 
     @classmethod
     def build(cls, x, *, guarantee, seed, page_bytes, ids=None, m=None,
-              mode="two_phase", verification="fused", norm_adaptive=None,
+              mode="two_phase", verification=None, norm_adaptive=None,
               cs_prune=None, budget=None, budget2=None, norm_strata=1,
-              prefilter=False, prefilter_eps=1.0, obs=False,
+              prefilter=False, prefilter_eps=None, obs=False,
               delta_capacity=None, auto_compact=False, **index_opts
               ) -> "StreamSearcher":
         plan = guarantee.derive(len(x))
@@ -216,7 +238,9 @@ class StreamSearcher(_MutableMixin, Searcher):
         return cls(stream, _runtime_from_opts(guarantee, mode, verification,
                                               norm_adaptive, cs_prune,
                                               budget, budget2, prefilter,
-                                              prefilter_eps, obs))
+                                              prefilter_eps, obs,
+                                              shape=(len(x),
+                                                     int(x.shape[1]))))
 
     def _search(self, queries, k, runtime: Optional[RuntimeConfig] = None
                 ) -> Tuple[np.ndarray, np.ndarray, dict]:
@@ -258,9 +282,9 @@ class ShardedSearcher(_MutableMixin, Searcher):
 
     @classmethod
     def build(cls, x, *, guarantee, seed, page_bytes, n_shards=2, m=None,
-              mode="two_phase", verification="fused", norm_adaptive=None,
+              mode="two_phase", verification=None, norm_adaptive=None,
               cs_prune=None, budget=None, budget2=None, norm_strata=1,
-              prefilter=False, prefilter_eps=1.0, obs=False,
+              prefilter=False, prefilter_eps=None, obs=False,
               delta_capacity=None, auto_compact=False, **index_opts
               ) -> "ShardedSearcher":
         # m* is derived from the PER-SHARD corpus size (each shard owns its
@@ -271,10 +295,13 @@ class ShardedSearcher(_MutableMixin, Searcher):
             auto_compact=auto_compact, m=plan.m if m is None else int(m),
             c=guarantee.c, p=guarantee.p0, page_bytes=page_bytes, seed=seed,
             norm_strata=int(norm_strata), **index_opts)
-        return cls(sharded, _runtime_from_opts(guarantee, mode, verification,
-                                               norm_adaptive, cs_prune,
-                                               budget, budget2, prefilter,
-                                               prefilter_eps, obs))
+        # shards each hold ~n/n_shards points, which is what the tuned-entry
+        # shape key should match (the per-shard search is what runs)
+        return cls(sharded, _runtime_from_opts(
+            guarantee, mode, verification, norm_adaptive, cs_prune,
+            budget, budget2, prefilter, prefilter_eps, obs,
+            shape=(max(len(x) // max(int(n_shards), 1), 1),
+                   int(x.shape[1]))))
 
     def _search(self, queries, k, runtime: Optional[RuntimeConfig] = None
                 ) -> Tuple[np.ndarray, np.ndarray, dict]:

@@ -50,7 +50,8 @@ def iter_backends() -> Iterator[Tuple[str, Type[Searcher]]]:
 
 def build(x: np.ndarray, backend: str = "promips", *,
           guarantee: Optional[GuaranteeConfig] = None,
-          seed: int = 0, page_bytes: int = 4096, **opts) -> Searcher:
+          seed: int = 0, page_bytes: Optional[int] = None,
+          **opts) -> Searcher:
     """Build an index over ``x`` with the named backend.
 
     ``guarantee`` is the declarative contract (c, p0, k); backends with
@@ -58,12 +59,20 @@ def build(x: np.ndarray, backend: str = "promips", *,
     (`GuaranteeConfig.derive`), the rest use it for tuning only. ``seed``
     makes the build bit-reproducible; ``opts`` are backend-specific
     overrides (e.g. ``m=8``, ``mode="progressive"``, ``n_shards=4``).
+
+    ``page_bytes=None`` (default) consults the offline tuning cache
+    (`repro.tune.cache`) for this data shape; an explicit value always
+    wins, and with no cache entry the hand-picked 4096 is used.
     """
     cls = get_backend(backend)
     guarantee = GuaranteeConfig() if guarantee is None else guarantee
     x = np.ascontiguousarray(x, np.float32)
     if x.ndim != 2:
         raise ValueError(f"x must be (n, d), got shape {x.shape}")
+    if page_bytes is None:
+        from ..tune import cache as _tune_cache
+        page_bytes = int(_tune_cache.resolved(
+            "build", x.shape[0], x.shape[1])["page_bytes"])
     t0 = time.perf_counter()
     searcher = cls.build(x, guarantee=guarantee, seed=int(seed),
                          page_bytes=int(page_bytes), **opts)

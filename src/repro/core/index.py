@@ -76,6 +76,9 @@ class IndexMeta:
     norm_strata: int = 1
     sk_subspaces: int = 0    # sketch PQ subspaces (0 = index has no sketch)
     sk_codewords: int = 0    # sketch PQ codewords per subspace
+    max_probe_groups: Optional[int] = None  # Quick-Probe group-table cap
+                             # (tuner build knob; None = all sign codes —
+                             # defaulted so pre-PR-8 saved indexes load)
 
     @property
     def index_bytes(self) -> int:
@@ -164,12 +167,16 @@ def build_index(
     page_bytes: int = 4096,
     seed: int = 0,
     norm_strata: int = 1,
+    max_probe_groups: Optional[int] = None,
 ) -> ProMIPSIndex:
     """Pre-process (paper Fig. 2 left box + Algorithm 4).
 
     x: (n, d) float32 data points. Returns the host-side index; call
     ``jax.device_put(idx.arrays, ...)`` (or the sharded helper) to ship it.
     ``norm_strata > 1`` enables the beyond-paper norm-stratified layout.
+    ``max_probe_groups`` caps the Quick-Probe group table (a tuner build
+    knob — `quick_probe.build_group_table` keeps the easiest Test-A
+    passers; None = every distinct sign code, the paper's table).
     """
     x = np.ascontiguousarray(x, np.float32)
     n, d = x.shape
@@ -187,7 +194,8 @@ def build_index(
     l2sq = (xs * xs).sum(axis=1).astype(np.float32)
 
     codes = pack_codes_np(ps)
-    groups: GroupTable = build_group_table(codes, l1, ps)
+    groups: GroupTable = build_group_table(codes, l1, ps,
+                                           max_groups=max_probe_groups)
 
     page_rows = max(1, page_bytes // (4 * d))
     n_pad = int(math.ceil(n / page_rows)) * page_rows
@@ -259,5 +267,6 @@ def build_index(
         n_groups=len(groups.code), n_subparts=len(layout.sp_radius),
         k_p=k_p, n_key=n_key, k_sp=k_sp, seed=seed, norm_strata=norm_strata,
         sk_subspaces=sk_subspaces, sk_codewords=sk_codewords,
+        max_probe_groups=max_probe_groups,
     )
     return ProMIPSIndex(arrays=arrays, meta=meta, layout=layout)

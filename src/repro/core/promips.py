@@ -61,7 +61,9 @@ class ProMIPS:
                budget: Optional[int] = None, budget2: Optional[int] = None,
                norm_adaptive: bool = False, cs_prune: bool = False,
                verification: str = "fused", prefilter: bool = False,
-               prefilter_eps: float = 1.0, obs: bool = False):
+               prefilter_eps: float = 1.0, obs: bool = False,
+               dense_frac: Optional[float] = None,
+               tile_cap: Optional[int] = None):
         """Batched device-mode c-k-AMIP search. queries: (B, d).
 
         ``verification`` picks the candidate-scoring backend ("fused" =
@@ -81,7 +83,7 @@ class ProMIPS:
                             mode="two_phase", verification=verification,
                             norm_adaptive=norm_adaptive, cs_prune=cs_prune,
                             prefilter=prefilter, prefilter_eps=prefilter_eps,
-                            obs=obs)
+                            obs=obs, dense_frac=dense_frac, tile_cap=tile_cap)
         return runtime_search(self.arrays, self.meta, queries, cfg)
 
     def search_progressive(self, queries: np.ndarray, k: int = 10,

@@ -68,11 +68,20 @@ class GroupTable(NamedTuple):
     count: jnp.ndarray
 
 
-def build_group_table(codes: np.ndarray, l1: np.ndarray, p_pts: np.ndarray) -> GroupTable:
+def build_group_table(codes: np.ndarray, l1: np.ndarray, p_pts: np.ndarray,
+                      max_groups: int | None = None) -> GroupTable:
     """Host-side group construction (pre-processing phase).
 
     ``codes``/``l1``/``p_pts`` are in the final sorted data layout, so
     ``rep_row`` indexes directly into the index's sorted arrays.
+
+    ``max_groups`` (a tuner build knob, `repro.tune`) caps the table at the
+    groups with the SMALLEST min ||o||_1 — the easiest Test-A passers (the
+    l1 term sits in the test's denominator). Dropping a group is safe: the
+    probe still returns some valid data point and the fallback-to-recorded-
+    maximum rule is unchanged — but the chosen radius can differ from the
+    uncapped table's, so the tuner's parity gate decides whether a capped
+    table ships. None (default) keeps every distinct sign code.
     """
     order = np.lexsort((l1, codes))
     sc = codes[order]
@@ -88,6 +97,17 @@ def build_group_table(codes: np.ndarray, l1: np.ndarray, p_pts: np.ndarray) -> G
         g_rep_proj.append(p_pts[rep])
         g_rep_row.append(rep)
         g_count.append(e - s)
+    if max_groups is not None and len(g_code) > int(max_groups):
+        # smallest-min_l1 subset, kept in the original (code-sorted) order —
+        # group order is irrelevant to the probe's argmin/argmax selection,
+        # but a deterministic layout keeps rebuilds bit-reproducible
+        keep = np.sort(np.argsort(np.asarray(g_min_l1, np.float32),
+                                  kind="stable")[: int(max_groups)])
+        g_code = [g_code[i] for i in keep]
+        g_min_l1 = [g_min_l1[i] for i in keep]
+        g_rep_proj = [g_rep_proj[i] for i in keep]
+        g_rep_row = [g_rep_row[i] for i in keep]
+        g_count = [g_count[i] for i in keep]
     return GroupTable(
         code=np.asarray(g_code, np.uint32),
         min_l1=np.asarray(g_min_l1, np.float32),

@@ -41,7 +41,7 @@ from ..kernels import ops
 from ..obs import trace as _trace
 from ..obs.trace import span as _span
 from .index import IndexArrays, IndexMeta
-from .search_common import next_pow2
+from .search_common import DENSE_FRAC, next_pow2
 from .search_device import SearchStats, search_batch, search_batch_progressive
 from .search_fused import search_batch_fused
 
@@ -91,8 +91,25 @@ class RuntimeConfig:
     obs: bool = False                  # per-call span/metric instrumentation
                                        # (also on whenever obs.trace is
                                        # globally enabled; DESIGN.md §14)
+    # Fused tile knobs, promoted from `search_fused` module constants so the
+    # offline tuner (`repro.tune`, DESIGN.md §15) can set them per shape.
+    # None => consult the tuning cache (results/tune/tuning.json) for this
+    # index's (n-bucket, d, platform, jax version) key; a missing key falls
+    # back to the hand-picked values (dense_frac=0.9, no extra cap) —
+    # bit-identical to the pre-tuner behavior. Explicit values always win;
+    # pass ``tile_cap >= n_blocks`` for an explicit "no cap".
+    dense_frac: Optional[float] = None  # dense-path threshold (result-
+                                        # bit-identical at any value)
+    tile_cap: Optional[int] = None      # extra clamp on both rounds' fused
+                                        # verification tiles (below budget)
 
     def __post_init__(self):
+        # integer-valued knobs are accepted and coerced (prefilter_eps=1 is
+        # the lossless sketch bound, not an error)
+        for field_name in ("prefilter_eps", "dense_frac"):
+            v = getattr(self, field_name)
+            if isinstance(v, (int, np.integer)) and not isinstance(v, bool):
+                object.__setattr__(self, field_name, float(v))
         self.validate()
 
     def validate(self) -> None:
@@ -122,6 +139,17 @@ class RuntimeConfig:
                 eps, bool) or not 0.0 < float(eps) <= 1.0:
             raise ValueError(f"prefilter_eps must be a float in (0, 1], got "
                              f"{eps!r}")
+        df = self.dense_frac
+        if df is not None and (
+                not isinstance(df, (int, float, np.floating))
+                or isinstance(df, bool) or not 0.0 < float(df) <= 1.0):
+            raise ValueError(f"dense_frac must be None (= tuned/default) or "
+                             f"a float in (0, 1], got {df!r}")
+        tc = self.tile_cap
+        if tc is not None and (not isinstance(tc, (int, np.integer))
+                               or isinstance(tc, bool) or tc < 1):
+            raise ValueError(f"tile_cap must be None (= tuned/default) or a "
+                             f"positive int, got {tc!r}")
 
 
 def search(arrays: IndexArrays, meta: IndexMeta, queries,
@@ -143,6 +171,23 @@ def search(arrays: IndexArrays, meta: IndexMeta, queries,
                      meta.n_blocks))
     budget2 = int(min(cfg.budget2 if cfg.budget2 is not None else budget,
                       meta.n_blocks))
+    # Resolve the tuner-promoted fused tile knobs: explicit cfg values win;
+    # None consults the offline tuning cache for this index's shape key and
+    # falls back to the hand-picked defaults on a miss (bit-identical to the
+    # pre-tuner behavior — guarded by tests/test_tune.py). Pure host-side
+    # python over static meta fields, so it is trace-safe.
+    dense_frac, tile_cap = cfg.dense_frac, cfg.tile_cap
+    if cfg.mode == "two_phase" and cfg.verification == "fused" and (
+            dense_frac is None or tile_cap is None):
+        from ..tune import cache as _tune_cache
+        tuned = _tune_cache.resolved("runtime", meta.n, meta.d)
+        if dense_frac is None:
+            dense_frac = float(tuned.get("dense_frac", DENSE_FRAC))
+        if tile_cap is None:
+            tc = tuned.get("tile_cap")
+            tile_cap = int(tc) if tc is not None else None
+    elif dense_frac is None:
+        dense_frac = DENSE_FRAC
     q = jnp.atleast_2d(jnp.asarray(queries, jnp.float32))
     # Host spans only make sense OUTSIDE an ambient trace (inside one they
     # would time jaxpr construction, not work — DESIGN.md §14); the check is
@@ -168,7 +213,8 @@ def search(arrays: IndexArrays, meta: IndexMeta, queries,
                     arrays, meta, q, k=cfg.k, budget=budget, budget2=budget2,
                     norm_adaptive=cfg.norm_adaptive, cs_prune=cfg.cs_prune,
                     use_pallas=cfg.use_pallas, prefilter=cfg.prefilter,
-                    prefilter_eps=cfg.prefilter_eps, obs=active)
+                    prefilter_eps=cfg.prefilter_eps, obs=active,
+                    dense_frac=dense_frac, tile_cap=tile_cap)
             else:
                 ids, _, stats = search_batch(arrays, meta, q, k=cfg.k,
                                              budget=budget, budget2=budget2,
@@ -177,7 +223,9 @@ def search(arrays: IndexArrays, meta: IndexMeta, queries,
                                              verification=cfg.verification,
                                              use_pallas=cfg.use_pallas,
                                              prefilter=cfg.prefilter,
-                                             prefilter_eps=cfg.prefilter_eps)
+                                             prefilter_eps=cfg.prefilter_eps,
+                                             dense_frac=dense_frac,
+                                             tile_cap=tile_cap)
         else:
             raise ValueError(f"unknown search mode: {cfg.mode!r}")
         with _span("rescore", active=active,

@@ -27,6 +27,13 @@ import numpy as np
 # Condition-B denominator (matches the device paths' -inf guard).
 MIN_SCORE = -1e30
 
+# Hand-picked default for the fused drivers' dense-path threshold: unions
+# covering at least this fraction of all blocks take the dense in-place
+# tile. Promoted to a `RuntimeConfig` field (PR 8) so the offline tuner
+# (`repro.tune`) can override it per shape without monkeypatching; this
+# module-level value is the fallback when no tuned entry exists.
+DENSE_FRAC = 0.9
+
 
 def next_pow2(t: int) -> int:
     """Shared jit-shape-bucketing quantizer: the fused verification tiles

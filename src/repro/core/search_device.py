@@ -458,7 +458,7 @@ def _search_batch_scan(arrays, meta, queries, k, budget, budget2,
     jax.jit,
     static_argnames=("meta", "k", "budget", "budget2", "norm_adaptive",
                      "cs_prune", "verification", "use_pallas", "prefilter",
-                     "prefilter_eps"),
+                     "prefilter_eps", "dense_frac", "tile_cap"),
 )
 def search_batch(
     arrays: IndexArrays,
@@ -473,6 +473,8 @@ def search_batch(
     use_pallas: Optional[bool] = None,
     prefilter: bool = False,
     prefilter_eps: float = 1.0,
+    dense_frac: float = sc.DENSE_FRAC,
+    tile_cap: Optional[int] = None,
 ):
     """c-k-AMIP search for a batch of queries. queries: (B, d).
 
@@ -482,6 +484,9 @@ def search_batch(
     into one Pallas matmul per round (budget semantics differ when finite —
     see module docstring). ``prefilter`` enables the quantized-sketch block
     prefilter on every backend (`prefilter_round1/2`, DESIGN.md §13).
+    ``dense_frac`` / ``tile_cap`` are the fused tile knobs the offline tuner
+    (`repro.tune`) adjusts; the other backends ignore them (their tile is
+    always the budget rule).
     """
     if verification == "fused":
         # the in-graph fused driver: pow2 tile buckets as lax.switch
@@ -492,7 +497,8 @@ def search_batch(
         from .search_graph import search_batch_fused_graph
         return search_batch_fused_graph(arrays, meta, queries, k, budget,
                                         budget2, norm_adaptive, cs_prune,
-                                        use_pallas, prefilter, prefilter_eps)
+                                        use_pallas, prefilter, prefilter_eps,
+                                        dense_frac, tile_cap)
     if verification == "batched":
         return _search_batch_batched(arrays, meta, queries, k, budget, budget2,
                                      norm_adaptive, cs_prune, use_pallas,

@@ -44,15 +44,16 @@ from ..kernels import ops
 from ..obs import metrics as _metrics
 from ..obs.trace import span as _span
 from .index import IndexArrays, IndexMeta
-from .search_common import next_pow2
+# DENSE_FRAC lives in search_common (re-exported here for compatibility):
+# unions covering at least this fraction of all blocks take the dense path —
+# the tile is every block in place (sel still masks per query — exactly the
+# batched full tile), skipping the row gather entirely. Since PR 8 it is a
+# per-call knob (`dense_frac`), promoted to `RuntimeConfig` and tunable via
+# the offline tuner (`repro.tune`); this constant is the hand-picked default.
+from .search_common import DENSE_FRAC, next_pow2
 from .search_device import (SearchStats, TopK, compensation_masks,
                             prefilter_round1, prefilter_round2,
                             select_frontend)
-
-# Unions covering at least this fraction of all blocks take the dense path:
-# the tile is every block in place (sel still masks per query — exactly the
-# batched full tile), skipping the row gather entirely.
-DENSE_FRAC = 0.9
 
 
 class TraceRing:
@@ -168,7 +169,8 @@ _prefilter1 = jax.jit(prefilter_round1,
 _prefilter2 = jax.jit(prefilter_round2)
 
 
-def _plan_tile(mask: np.ndarray, cap: int, n_blocks: int):
+def _plan_tile(mask: np.ndarray, cap: int, n_blocks: int,
+               dense_frac: float = DENSE_FRAC):
     """Size one verification tile from the host-side (B, NB) selection.
 
     Returns (slots (NS,) i32, sel (B, NS) bool, lost (B,) bool, dense) or
@@ -178,8 +180,10 @@ def _plan_tile(mask: np.ndarray, cap: int, n_blocks: int):
 
     NS = min(next_pow2(union), cap): at most 2x the live work, from a set
     of O(log n_blocks) distinct shapes. When the union would cover nearly
-    everything anyway (>= DENSE_FRAC) and the cap allows, the tile is ALL
-    blocks in place (``dense``) so the kernel/oracle skips the row gather.
+    everything anyway (>= ``dense_frac``) and the cap allows, the tile is
+    ALL blocks in place (``dense``) so the kernel/oracle skips the row
+    gather — dense and sparse tiles are result-bit-identical, so
+    ``dense_frac`` is a pure performance knob (tunable via `repro.tune`).
     ``lost`` flags queries whose selection exceeds the ``cap``-block tile —
     the same union-tile budget rule as ``verification="batched"``.
     """
@@ -188,7 +192,7 @@ def _plan_tile(mask: np.ndarray, cap: int, n_blocks: int):
     if n_union == 0:
         return None
     n_batch = mask.shape[0]
-    if n_union >= DENSE_FRAC * n_blocks and cap >= n_blocks:
+    if n_union >= dense_frac * n_blocks and cap >= n_blocks:
         slots = np.arange(n_blocks, dtype=np.int32)
         return slots, mask, np.zeros(n_batch, bool), True
     n_slots = min(next_pow2(n_union), cap)
@@ -218,6 +222,8 @@ def search_batch_fused(
     prefilter: bool = False,
     prefilter_eps: float = 1.0,
     obs: bool = False,
+    dense_frac: float = DENSE_FRAC,
+    tile_cap: Optional[int] = None,
 ):
     """c-k-AMIP search, fused backend. Same contract as `search_batch`.
 
@@ -236,11 +242,22 @@ def search_batch_fused(
     (DESIGN.md §14). Off (the default), each phase pays one no-op span
     call; no jit graph differs either way — the instrumentation is pure
     host code between the same device calls.
+
+    ``dense_frac`` / ``tile_cap`` are the tuner-promoted tile knobs
+    (DESIGN.md §15): ``dense_frac`` moves the dense-path threshold
+    (result-bit-identical at any value), ``tile_cap`` additionally clamps
+    both rounds' verification tiles below the budget rule (``tile_cap >=
+    n_blocks`` is a no-op; a cap below a round's union truncates it under
+    the SAME first-blocks-in-layout-order rule as a finite budget, flagging
+    the affected queries ``exhausted``).
     """
     n_blocks = meta.n_blocks
     n_batch = queries.shape[0]
     cap = min(budget, n_blocks)
     cap2 = min(budget2, n_blocks)
+    if tile_cap is not None:
+        cap = min(cap, int(tile_cap))
+        cap2 = min(cap2, int(tile_cap))
 
     with _span("select_frontend", active=obs,
                metric="search.frontend_us") as sp:
@@ -271,7 +288,7 @@ def search_batch_fused(
             n_sel = float(np.asarray(mask0).sum())
             _metrics.gauge("search.prefilter_survivor_frac").set(
                 float(mask_np.sum()) / max(n_sel, 1.0))
-        plan = _plan_tile(mask_np, cap, n_blocks)
+        plan = _plan_tile(mask_np, cap, n_blocks, dense_frac)
     if plan is None:
         if obs:
             _metrics.counter("fused.rounds_skipped").inc()
@@ -307,7 +324,7 @@ def search_batch_fused(
             sp.fence(mask_r2)
 
     with _span("plan_tile_round2", active=obs, metric="search.plan_us"):
-        plan = _plan_tile(np.asarray(mask_r2), cap2, n_blocks)
+        plan = _plan_tile(np.asarray(mask_r2), cap2, n_blocks, dense_frac)
     if plan is None:
         if obs:
             _metrics.counter("fused.rounds_skipped").inc()

@@ -70,7 +70,8 @@ def _tile_buckets(cap: int) -> tuple:
 
 def _fused_round_graph(arrays: IndexArrays, queries, mask, top: TopK, c_half,
                        k: int, cap: int, n_blocks: int, page_rows: int,
-                       use_pallas: Optional[bool]):
+                       use_pallas: Optional[bool],
+                       dense_frac: float = DENSE_FRAC):
     """One traceable fused verification round over the (B, NB) ``mask``.
 
     Returns (TopK, pages (B,), cand (B,), done_a (B,), lost (B,)) with the
@@ -124,11 +125,11 @@ def _fused_round_graph(arrays: IndexArrays, queries, mask, top: TopK, c_half,
             # plain two-way cond: on the XLA CPU backend a many-branch switch
             # carrying the full corpus in every branch closure costs real
             # per-call overhead, while a cond is free — and in the dense
-            # regime (union >= DENSE_FRAC) the bucket switch would pick a
+            # regime (union >= dense_frac) the bucket switch would pick a
             # full-size tile anyway. Small unions take the switch, whose
             # branches then only carry small tiles.
             top_s, top_r, pages, cand, hits, lost = jax.lax.cond(
-                n_union >= DENSE_FRAC * n_blocks,
+                n_union >= dense_frac * n_blocks,
                 make_branch(n_blocks, True), bucketed, None)
         else:
             top_s, top_r, pages, cand, hits, lost = bucketed(None)
@@ -151,6 +152,8 @@ def search_batch_fused_graph(
     use_pallas: Optional[bool] = None,
     prefilter: bool = False,
     prefilter_eps: float = 1.0,
+    dense_frac: float = DENSE_FRAC,
+    tile_cap: Optional[int] = None,
 ):
     """c-k-AMIP search, fused backend, fully in-graph. Same contract (and
     bit-identical results at every budget) as `search_fused.search_batch_fused`
@@ -166,6 +169,11 @@ def search_batch_fused_graph(
     n_batch = queries.shape[0]
     cap = min(budget, n_blocks)
     cap2 = min(budget2, n_blocks)
+    if tile_cap is not None:
+        # same clamp as the host driver: the tuner-promoted tile knob caps
+        # both rounds below the budget rule (a no-op when >= n_blocks)
+        cap = min(cap, int(tile_cap))
+        cap2 = min(cap2, int(tile_cap))
 
     q_proj, q_l2sq, d_sp, r0, probe_ok, c_half, mask0 = select_frontend(
         arrays, meta, queries)
@@ -182,7 +190,7 @@ def search_batch_fused_graph(
 
     top, pages1, cand1, done_a, lost1 = _fused_round_graph(
         arrays, queries, mask_r1, top, c_half, k, cap, n_blocks,
-        meta.page_rows, use_pallas)
+        meta.page_rows, use_pallas, dense_frac)
     # same barrier as the batched graph: stops XLA CPU re-materializing
     # round-1 fusions inside the round-2 consumers
     top, done_a, mask0 = jax.lax.optimization_barrier((top, done_a, mask0))
@@ -202,7 +210,7 @@ def search_batch_fused_graph(
         mask_r2, top = args
         out_top, pages, cand, _, lost = _fused_round_graph(
             arrays, queries, mask_r2, top, c_half, k, cap2, n_blocks,
-            meta.page_rows, use_pallas)
+            meta.page_rows, use_pallas, dense_frac)
         return out_top, pages, cand, lost
 
     def skip2(args):

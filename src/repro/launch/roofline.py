@@ -57,6 +57,15 @@ def kernel_cost(fn, *args):
     cell-level analysis above uses, without the unroll/extrapolation
     machinery. Used by the search benchmark to report ACHIEVED bytes/flops
     next to the v5e roofline bound for the fused-verification graph.
+
+    The figures are a compile-time STATIC UPPER BOUND, not a measurement:
+    cost_analysis sums EVERY branch of a `lax.switch`/`lax.cond` (the fused
+    drivers compile one branch per pow2 tile bucket, of which exactly one
+    executes per round) and counts a while body once regardless of trip
+    count. The returned record carries ``static_upper_bound: True`` so
+    BENCH consumers do not read it as achieved traffic; for measured
+    per-stage wall-clock against this bound use the offline cutout runner,
+    `repro.tune.cutout.stage_records` (DESIGN.md §15).
     """
     jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
     compiled = jitted.lower(*args).compile()
@@ -70,7 +79,8 @@ def kernel_cost(fn, *args):
     return {"flops": flops, "bytes": nbytes,
             "t_compute_s": t_comp, "t_memory_s": t_mem,
             "roofline_s": bound,
-            "bound": "compute" if t_comp >= t_mem else "memory"}
+            "bound": "compute" if t_comp >= t_mem else "memory",
+            "static_upper_bound": True}
 
 
 def _cost(cfg, shape, mesh, *, microbatches=None):

@@ -51,7 +51,8 @@ class Request:
 
 
 class DecodeEngine:
-    def __init__(self, params, cfg, *, batch_slots: int = 4, max_len: int = 512,
+    def __init__(self, params, cfg, *, batch_slots: Optional[int] = None,
+                 max_len: int = 512,
                  logits_mode: str = "exact", promips_kwargs: Optional[dict] = None,
                  promips_budget: Optional[int] = None, eos_id: int = 0,
                  search_runtime: Optional[RuntimeConfig] = None,
@@ -73,6 +74,12 @@ class DecodeEngine:
                     "promips_kwargs only tunes the default-built index; "
                     "with index= they would be silently ignored — configure "
                     "the injected searcher at its own build() instead")
+        if batch_slots is None:
+            # tuned default keyed on the logit-index shape (vocab, d_model);
+            # hand-picked fallback is 4 when the tuning cache has no entry
+            from ..tune import cache as _tune_cache
+            batch_slots = int(_tune_cache.resolved(
+                "serve", cfg.vocab, cfg.d_model)["decode_batch_slots"])
         self.params, self.cfg = params, cfg
         self.b, self.max_len = batch_slots, max_len
         self.logits_mode = logits_mode

@@ -1,0 +1,27 @@
+"""Roofline-driven offline autotuner (DESIGN.md §15).
+
+Makes the search runtime's HARDWARE knobs — the fused tile's dense-path
+threshold and cap, the verification backend, the sketch-prefilter eps, the
+page geometry, the Quick-Probe group count, the serve decode batch — self-
+optimizing: `tune.search.tune_point` measures candidates on stage cutouts
+and full-search A/B pairs (`tune.cutout`), gates every candidate on bitwise
+result parity, and records winners in `results/tune/tuning.json`
+(`tune.cache`) keyed by (n-bucket, d, platform, jax version). The runtime
+(`core.runtime.search`), `api.build` and the serve engine consult the cache
+by default whenever a promoted knob is left at ``None``; explicit kwargs
+always win and a missing key is bit-identical to the hand-picked defaults.
+
+  PYTHONPATH=src python -m repro.tune --n 100000 --d 128 --prefilter \\
+      --budget-s 120 --write
+
+This module stays import-light (space + cache only): `core.runtime`
+lazy-imports `tune.cache` on the search path, so pulling the measurement
+machinery (`cutout`, `search`) in here would create an import cycle and
+put benchmark code on the serving path.
+"""
+from . import cache, space
+from .cache import lookup, resolved, save_entry
+from .space import HAND_PICKED, KNOBS, shape_key
+
+__all__ = ["cache", "space", "lookup", "resolved", "save_entry",
+           "HAND_PICKED", "KNOBS", "shape_key"]

@@ -1,0 +1,162 @@
+"""Tuning cache: measured winners, consulted by default (DESIGN.md §15).
+
+One JSON file (default ``results/tune/tuning.json`` at the repo root) maps
+`space.shape_key(n, d)` keys to entries:
+
+  {"version": 1,
+   "entries": {
+     "n131072:d128:cpu:jax0.x.y": {
+       "key": {"n_bucket": ..., "d": ..., "platform": ..., "jax_version": ...},
+       "provenance": {"commit": <git sha>, "ts": <utc iso>, ...},
+       "runtime": {"verification": ..., "dense_frac": ..., "tile_cap": ...,
+                   "prefilter_eps": ...},
+       "build":   {"page_bytes": ..., "max_probe_groups": ...},
+       "serve":   {"decode_batch_slots": ...},
+       "trace":   [per-candidate tuning measurements]}}}
+
+`core.runtime.search`, `api.build` and `serve.engine` consult `resolved()`
+whenever the caller left a promoted knob at its ``None`` sentinel; explicit
+kwargs never reach this module. A missing file, missing key, or unknown
+field resolves to `space.HAND_PICKED` — bit-identical to the pre-tuner
+behavior. The env var ``REPRO_TUNE_CACHE`` overrides the path (set it to
+the empty string to disable lookups entirely — what CI's empty-cache guard
+and the fallback tests use).
+
+Reads are memoized on (path, mtime, size): the steady-state per-search cost
+is one `os.stat`, noise next to a single device dispatch.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+from datetime import datetime, timezone
+from typing import Any, Dict, Optional
+
+from . import space
+
+ENV_VAR = "REPRO_TUNE_CACHE"
+_REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+DEFAULT_PATH = os.path.join(_REPO_ROOT, "results", "tune", "tuning.json")
+
+_memo: Dict[str, tuple] = {}
+
+
+def cache_path() -> Optional[str]:
+    """Active cache path, or None when lookups are disabled
+    (``REPRO_TUNE_CACHE=""``)."""
+    env = os.environ.get(ENV_VAR)
+    if env is not None:
+        return env or None
+    return DEFAULT_PATH
+
+
+def clear_memo() -> None:
+    """Drop the mtime memo (tests that rewrite the cache in-place within
+    one mtime granule call this; normal writers go through `save_entry`,
+    which clears it automatically)."""
+    _memo.clear()
+
+
+def load(path: Optional[str] = None) -> dict:
+    """Parsed cache contents ({} when absent/disabled/corrupt — a broken
+    cache must never break a search, only lose its tuned values)."""
+    if path is None:
+        path = cache_path()
+    if not path:
+        return {}
+    try:
+        st = os.stat(path)
+    except OSError:
+        return {}
+    stamp = (st.st_mtime_ns, st.st_size)
+    hit = _memo.get(path)
+    if hit is not None and hit[0] == stamp:
+        return hit[1]
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        data = {}
+    if not isinstance(data, dict):
+        data = {}
+    _memo[path] = (stamp, data)
+    return data
+
+
+def lookup(n: int, d: int, path: Optional[str] = None) -> Optional[dict]:
+    """The full tuned entry for this point's shape key, or None."""
+    entries = load(path).get("entries")
+    if not isinstance(entries, dict):
+        return None
+    entry = entries.get(space.shape_key(n, d))
+    return entry if isinstance(entry, dict) else None
+
+
+def resolved(section: str, n: int, d: int,
+             path: Optional[str] = None) -> Dict[str, Any]:
+    """Hand-picked defaults for ``section`` overlaid with the tuned entry
+    for this point (only knobs declared in `space.HAND_PICKED[section]` are
+    taken from the entry — a cache written by a newer revision cannot
+    smuggle unknown knobs in)."""
+    out = dict(space.HAND_PICKED[section])
+    entry = lookup(n, d, path)
+    if entry:
+        tuned = entry.get(section)
+        if isinstance(tuned, dict):
+            out.update({k: v for k, v in tuned.items() if k in out})
+    return out
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=_REPO_ROOT, capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def save_entry(n: int, d: int, *, runtime: Optional[dict] = None,
+               build: Optional[dict] = None, serve: Optional[dict] = None,
+               trace: Optional[list] = None,
+               path: Optional[str] = None) -> str:
+    """Write/replace the entry for this point's shape key (atomic rename),
+    stamped with git-SHA provenance like `results/bench/history.jsonl`
+    records. Returns the shape key written."""
+    if path is None:
+        path = cache_path() or DEFAULT_PATH
+    import jax
+    key = space.shape_key(n, d)
+    data = load(path)
+    data.setdefault("version", 1)
+    entries = data.setdefault("entries", {})
+    entry: Dict[str, Any] = {
+        "key": {"n_bucket": space.n_bucket(n), "d": int(d),
+                "platform": jax.default_backend(),
+                "jax_version": jax.__version__},
+        "provenance": {
+            "commit": _git_sha(),
+            "ts": datetime.now(timezone.utc).isoformat(timespec="seconds"),
+        },
+    }
+    for name, section in (("runtime", runtime), ("build", build),
+                          ("serve", serve)):
+        if section is not None:
+            entry[name] = dict(section)
+    if trace is not None:
+        entry["trace"] = trace
+    entries[key] = entry
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    _memo.pop(path, None)
+    return key
+
+
+__all__ = ["ENV_VAR", "DEFAULT_PATH", "cache_path", "clear_memo", "load",
+           "lookup", "resolved", "save_entry"]

@@ -1,0 +1,264 @@
+"""Tuning strategy: budgeted coordinate descent with a parity gate.
+
+One knob at a time, in a fixed order (verification backend, dense_frac,
+tile_cap, prefilter_eps, then the rebuild-requiring build knobs when
+enabled), each candidate measured against the INCUMBENT config with the
+interleaved median-of-adjacent-pairs protocol (`cutout.interleaved_ratio`)
+and accepted only when it is faster by more than the noise margin.
+
+Every candidate must first pass the PARITY GATE: its (ids, scores) on the
+cutout workload must be bitwise identical to the hand-picked baseline's.
+A candidate that changes results — a lossy ``prefilter_eps``, a truncating
+``tile_cap``, a ``page_bytes`` that moves the block geometry — is recorded
+in the trace with ``status: "rejected_parity"`` and never shipped, so a
+tuned cache can only ever change WHERE time goes, not what comes back
+(the tuned-vs-default parity test in tests/test_tune.py, and the ci.sh
+guard, both lean on this). The warm-up/compile run doubles as the parity
+check, so the gate costs nothing extra.
+
+The whole descent is capped in measured seconds (``budget_s``): when the
+budget runs out, remaining candidates are recorded ``skipped_budget``
+instead of silently dropped. If nothing beats the baseline, the entry
+honestly ships the hand-picked values with the measured ~1.0 ratios in its
+trace — "already on the frontier" is a valid tuning result.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from ..core.promips import ProMIPS
+from ..core.search_common import next_pow2
+from . import cache as _cache
+from . import cutout as _cutout
+from . import space as _space
+
+# accept a candidate only when the incumbent/candidate time ratio clears
+# this margin — below it, host wall-clock jitter wins coin flips
+ACCEPT_MARGIN = 0.02
+
+
+def _search_fn(pm: ProMIPS, queries, opts: dict, knobs: dict):
+    """Zero-arg search closure for one (workload opts, tuned knobs) pair.
+    Every tuned knob is passed EXPLICITLY (tile_cap's "no cap" is
+    n_blocks), so the measurement never consults the cache being written."""
+    tile_cap = knobs["tile_cap"]
+    if tile_cap is None:
+        tile_cap = pm.meta.n_blocks
+    eps = knobs["prefilter_eps"] if opts.get("prefilter") else 1.0
+
+    def call():
+        return pm.search(
+            queries, k=opts.get("k", 10), budget=opts.get("budget"),
+            budget2=opts.get("budget2"),
+            norm_adaptive=opts.get("norm_adaptive", False),
+            cs_prune=opts.get("cs_prune", False),
+            verification=knobs["verification"],
+            prefilter=opts.get("prefilter", False), prefilter_eps=eps,
+            dense_frac=knobs["dense_frac"], tile_cap=int(tile_cap))
+    return call
+
+
+def _result_parity(res_a, res_b) -> bool:
+    ids_a, scores_a, _ = res_a
+    ids_b, scores_b, _ = res_b
+    return (np.array_equal(np.asarray(ids_a), np.asarray(ids_b))
+            and np.array_equal(np.asarray(scores_a), np.asarray(scores_b)))
+
+
+def _candidate_roofline(pm: ProMIPS, queries, opts: dict, knobs: dict,
+                        measured_s: float) -> dict:
+    """Static roofline bound of the candidate's full in-graph search next
+    to its measured time (best-effort: cost_analysis can be unavailable)."""
+    from ..core import runtime as rt
+    from ..launch.roofline import kernel_cost
+    try:
+        tile_cap = knobs["tile_cap"]
+        cfg = rt.RuntimeConfig(
+            k=opts.get("k", 10), budget=opts.get("budget"),
+            budget2=opts.get("budget2"),
+            norm_adaptive=opts.get("norm_adaptive", False),
+            cs_prune=opts.get("cs_prune", False),
+            verification=knobs["verification"],
+            prefilter=opts.get("prefilter", False),
+            prefilter_eps=(knobs["prefilter_eps"] if opts.get("prefilter")
+                           else 1.0),
+            dense_frac=knobs["dense_frac"],
+            tile_cap=int(tile_cap) if tile_cap is not None
+            else pm.meta.n_blocks)
+        qj = jax.numpy.asarray(queries, jax.numpy.float32)
+        fn = jax.jit(lambda a, q: rt.search(a, pm.meta, q, cfg))
+        cost = kernel_cost(fn, pm.arrays, qj)
+        return {"roofline_s": cost["roofline_s"], "bound": cost["bound"],
+                "flops": cost["flops"], "bytes": cost["bytes"],
+                "roofline_frac": cost["roofline_s"] / max(measured_s, 1e-12)}
+    except Exception as e:
+        return {"roofline_error": f"{type(e).__name__}: {e}"}
+
+
+def _tile_cap_candidates(pm: ProMIPS, queries, opts: dict) -> list:
+    """Derived per point: the exact round-1 union (removes the pow2
+    padding) and a 25%-headroom variant, when they undercut the bucketed
+    tile the default rule would pick."""
+    u1 = _cutout.round1_union(
+        pm.arrays, pm.meta, queries, k=opts.get("k", 10),
+        prefilter=opts.get("prefilter", False),
+        prefilter_eps=opts.get("prefilter_eps", 1.0))
+    if u1 == 0:
+        return []
+    default_tile = min(next_pow2(u1), pm.meta.n_blocks)
+    cands = sorted({u1, min(-(-u1 * 5 // 4), pm.meta.n_blocks)})
+    return [c for c in cands if c < default_tile]
+
+
+def tune_point(x: np.ndarray, queries: np.ndarray, *, build_opts: dict,
+               search_opts: dict, budget_s: float = 60.0, reps: int = 5,
+               include_build: bool = False, stages: bool = True,
+               roofline: bool = True, write: bool = False,
+               path: Optional[str] = None, progress=None) -> dict:
+    """Tune one ``(n, d)`` point; returns the cache-entry-shaped record.
+
+    ``build_opts`` go to `ProMIPS.build`; ``search_opts`` fix the workload
+    (k, budgets, norm_adaptive, cs_prune, prefilter, prefilter_eps) — the
+    statistical contract is never tuned, only the hardware knobs declared
+    in `tune.space`. The baseline is the hand-picked config; the returned
+    entry's ``runtime`` section is the coordinate-descent winner (== the
+    baseline when nothing beats it) and its ``trace`` carries every
+    candidate's measured ratio, parity verdict and roofline fraction.
+    ``write=True`` saves the entry via `cache.save_entry`.
+    """
+    say = progress if progress is not None else (lambda *_: None)
+    t_start = time.monotonic()
+    n, d = int(x.shape[0]), int(x.shape[1])
+
+    pm = ProMIPS.build(x, **build_opts)
+    opts = dict(search_opts)
+    baseline = dict(_space.HAND_PICKED["runtime"])
+    baseline["prefilter_eps"] = float(opts.get("prefilter_eps", 1.0))
+
+    best = dict(baseline)
+    fn_best = _search_fn(pm, queries, opts, best)
+    ref = fn_best()                       # compile + parity reference
+    jax.block_until_ready(ref[1])
+    n_q = max(int(np.atleast_2d(queries).shape[0]), 1)
+    t_base = _cutout.time_call(fn_best, reps=reps, warmup=0)
+    trace: list = []
+
+    def out_of_budget() -> bool:
+        return time.monotonic() - t_start > budget_s
+
+    def try_candidate(name: str, value, make_fn):
+        rec = {"knob": name, "value": value, "incumbent": best.get(name)}
+        if out_of_budget():
+            rec["status"] = "skipped_budget"
+            trace.append(rec)
+            return None
+        fn_c = make_fn()
+        try:
+            res_c = fn_c()                # compile; doubles as parity check
+            jax.block_until_ready(res_c[1])
+        except Exception as e:
+            rec["status"] = f"error: {type(e).__name__}: {e}"
+            trace.append(rec)
+            return None
+        if not _result_parity(ref, res_c):
+            rec["status"] = "rejected_parity"
+            trace.append(rec)
+            say(f"  {name}={value!r}: rejected (changes results)")
+            return None
+        t_inc, t_cand, ratio = _cutout.interleaved_ratio(fn_best, fn_c, reps)
+        rec.update(incumbent_us_per_query=t_inc * 1e6 / n_q,
+                   candidate_us_per_query=t_cand * 1e6 / n_q,
+                   ratio_incumbent_over_candidate=ratio)
+        if roofline:
+            rec.update(_candidate_roofline(pm, queries, opts,
+                                           {**best, name: value}, t_cand))
+        accepted = ratio > 1.0 + ACCEPT_MARGIN
+        rec["status"] = "accepted" if accepted else "rejected_slower"
+        trace.append(rec)
+        say(f"  {name}={value!r}: x{ratio:.3f} "
+            f"({'accepted' if accepted else 'kept incumbent'})")
+        return fn_c if accepted else None
+
+    # -- coordinate descent over the runtime knobs --------------------------
+    say(f"tuning ({n}, {d}) runtime knobs, budget {budget_s:.0f}s")
+    for name in ("verification", "dense_frac", "tile_cap", "prefilter_eps"):
+        if name == "prefilter_eps" and not opts.get("prefilter"):
+            continue
+        if (name in ("dense_frac", "tile_cap")
+                and best["verification"] != "fused"):
+            # fused-only tile knobs: measuring them against a non-fused
+            # incumbent would accept pure wall-clock noise
+            trace.append({"knob": name, "status": "skipped_not_fused"})
+            continue
+        if name == "tile_cap":
+            cands = _tile_cap_candidates(pm, queries, opts)
+        else:
+            cands = [c for c in _space.knob(name).candidates
+                     if c != best[name]]
+        for value in cands:
+            won = try_candidate(
+                name, value,
+                lambda v=value: _search_fn(pm, queries, opts,
+                                           {**best, name: v}))
+            if won is not None:
+                best[name] = value
+                fn_best = won
+
+    # -- build knobs (rebuild per candidate; smoke/CLI only by default) -----
+    build_best = dict(_space.HAND_PICKED["build"])
+    if "page_bytes" in build_opts:
+        build_best["page_bytes"] = int(build_opts["page_bytes"])
+    if include_build:
+        for name in ("page_bytes", "max_probe_groups"):
+            for value in [c for c in _space.knob(name).candidates
+                          if c != build_best[name]]:
+                def rebuild(v=value, knob_name=name):
+                    pm2 = ProMIPS.build(x, **{**build_opts, knob_name: v})
+                    return _search_fn(pm2, queries, opts, best)
+                won = try_candidate(name, value, rebuild)
+                if won is not None:
+                    build_best[name] = value
+                    fn_best = won
+    else:
+        trace.append({"knob": "build", "status": "skipped_disabled",
+                      "note": "rebuild-per-candidate tuning off "
+                              "(include_build=False)"})
+
+    t_best = _cutout.time_call(fn_best, reps=reps, warmup=0)
+    summary = {
+        "n": n, "d": d, "n_blocks": int(pm.meta.n_blocks),
+        "baseline": baseline, "workload": opts,
+        "baseline_us_per_query": t_base * 1e6 / n_q,
+        "best_us_per_query": t_best * 1e6 / n_q,
+        "speedup_tuned_vs_default": t_base / max(t_best, 1e-12),
+        "budget_s": budget_s, "elapsed_s": time.monotonic() - t_start,
+        "n_candidates": sum(1 for r in trace if "knob" in r
+                            and "ratio_incumbent_over_candidate" in r),
+    }
+    entry_trace = {"summary": summary, "candidates": trace}
+    if stages:
+        tc = best["tile_cap"]
+        entry_trace["stages_best"] = _cutout.stage_records(
+            pm.arrays, pm.meta, queries, k=opts.get("k", 10),
+            prefilter=opts.get("prefilter", False),
+            prefilter_eps=(best["prefilter_eps"] if opts.get("prefilter")
+                           else 1.0),
+            dense_frac=best["dense_frac"],
+            tile_cap=int(tc) if tc is not None else None, reps=reps)
+    say(f"tuned ({n}, {d}): x{summary['speedup_tuned_vs_default']:.3f} "
+        f"vs hand-picked in {summary['elapsed_s']:.1f}s "
+        f"({summary['n_candidates']} candidates measured)")
+
+    entry = {"runtime": best, "build": build_best, "trace": entry_trace}
+    if write:
+        key = _cache.save_entry(n, d, runtime=best, build=build_best,
+                                trace=entry_trace, path=path)
+        entry["key"] = key
+    return entry
+
+
+__all__ = ["tune_point", "ACCEPT_MARGIN"]

@@ -1,0 +1,97 @@
+"""Declared parameter space of the offline autotuner (DESIGN.md §15).
+
+Every hardware knob the search runtime exposes — as opposed to the
+STATISTICAL knobs the paper derives (m*, x_p, Theorem-2 budgets), which the
+tuner never touches — is declared here once, with its legal range, the
+hand-picked default the codebase shipped with before the tuner existed, and
+the section of the tuning-cache entry it lands in:
+
+  runtime   per-search `RuntimeConfig` knobs (no rebuild needed)
+  build     `api.build` / `build_index` knobs (changing one rebuilds)
+  serve     `serve.engine.DecodeEngine` knobs
+
+Cache entries are keyed by `shape_key(n, d)` = the pow2 n-bucket, exact d,
+jax platform and jax version — the four things that change which config
+wins (`results/tune/tuning.json`; see `tune.cache`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+
+def n_bucket(n: int) -> int:
+    """pow2 bucketing of the corpus size (same quantizer as the fused tile
+    shapes): a tuned entry covers every n in (bucket/2, bucket]."""
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+def shape_key(n: int, d: int, platform: Optional[str] = None,
+              jax_version: Optional[str] = None) -> str:
+    """Cache key for one tuning point. Platform/version default to the
+    CURRENT process's jax backend — a cache tuned on another box or jax
+    build simply never matches, falling back to the hand-picked defaults."""
+    if platform is None or jax_version is None:
+        import jax
+        platform = platform or jax.default_backend()
+        jax_version = jax_version or jax.__version__
+    return f"n{n_bucket(n)}:d{int(d)}:{platform}:jax{jax_version}"
+
+
+@dataclass(frozen=True)
+class Knob:
+    """One tunable knob: its cache section, hand-picked default, and the
+    candidate values the coordinate-descent search tries (a () candidates
+    tuple means the candidates are derived per point at tune time, e.g.
+    ``tile_cap`` from the observed union sizes)."""
+
+    name: str
+    section: str                 # "runtime" | "build" | "serve"
+    default: Any
+    candidates: Tuple[Any, ...]
+    description: str
+
+
+KNOBS: Tuple[Knob, ...] = (
+    Knob("verification", "runtime", "fused", ("fused", "batched"),
+         "candidate-scoring backend (bit-identical results at every budget)"),
+    Knob("dense_frac", "runtime", 0.9, (0.5, 0.7, 0.8, 0.9, 1.0),
+         "union fraction above which the fused tile is every block in place "
+         "(dense and sparse tiles are result-bit-identical)"),
+    Knob("tile_cap", "runtime", None, (),
+         "extra clamp on both fused rounds' tile sizes below the budget "
+         "rule; candidates derived from the observed union sizes (an exact-"
+         "fit cap removes the next_pow2 padding)"),
+    Knob("prefilter_eps", "runtime", 1.0, (0.05, 0.08, 0.1, 0.15, 0.2),
+         "quantized-sketch bound scale; 1.0 is lossless, smaller prunes "
+         "harder (only tuned when the workload runs with prefilter=True)"),
+    Knob("page_bytes", "build", 4096, (2048, 4096, 8192),
+         "block page size -> page_rows geometry (requires rebuild)"),
+    Knob("max_probe_groups", "build", None, (256, 512, 1024),
+         "cap on the Quick-Probe group table (None = all distinct sign "
+         "codes; dropping groups is conservative — the probe still returns "
+         "a valid point — but weakens r0; requires rebuild)"),
+    Knob("decode_batch_slots", "serve", 4, (2, 4, 8),
+         "serve-engine decode batch slots (continuous-batching width)"),
+)
+
+# The pre-tuner defaults, by cache section: `tune.cache.resolved` overlays a
+# tuned entry on top of this dict, so a missing cache / missing key / partial
+# entry always resolves to EXACTLY the hand-picked behavior (the bit-identity
+# fallback tests/test_tune.py pins).
+HAND_PICKED = {
+    "runtime": {"verification": "fused", "dense_frac": 0.9, "tile_cap": None,
+                "prefilter_eps": 1.0},
+    "build": {"page_bytes": 4096, "max_probe_groups": None},
+    "serve": {"decode_batch_slots": 4},
+}
+
+
+def knob(name: str) -> Knob:
+    for k in KNOBS:
+        if k.name == name:
+            return k
+    raise KeyError(f"unknown knob: {name!r}")
+
+
+__all__ = ["Knob", "KNOBS", "HAND_PICKED", "knob", "n_bucket", "shape_key"]
