@@ -35,7 +35,8 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 # fresh record to results/bench/history.jsonl with a timestamp, so the
 # BENCH_*.json numbers gain a trajectory instead of being overwritten.
 BENCH_FILES = ("BENCH_search.json", "BENCH_stream.json", "BENCH_api.json",
-               "BENCH_sharded.json", "BENCH_obs.json", "BENCH_tune.json")
+               "BENCH_sharded.json", "BENCH_obs.json", "BENCH_tune.json",
+               "BENCH_robust.json")
 
 
 @functools.lru_cache(maxsize=1)
@@ -82,6 +83,7 @@ BENCHES = [
     ("sharded_fanout", lambda: F.bench_sharded(quick=False)),
     ("obs_breakdown", lambda: F.bench_obs(quick=False)),
     ("tune_autotuner", lambda: F.bench_tune(smoke=True)),
+    ("robust_durability", lambda: F.bench_robust(quick=False)),
 ]
 
 
@@ -117,6 +119,13 @@ def main() -> None:
                          "tuning run on a temp cache, tuned-vs-hand-picked "
                          "interleaved ratio, parity + empty-cache-noop "
                          "audits (writes BENCH_tune.json)")
+    ap.add_argument("--robust", action="store_true",
+                    help="robustness smoke: WAL'd vs plain stream workload "
+                         "overhead, crash-recovery wall time + replay "
+                         "rows/s + bit-parity, and the serve degradation "
+                         "ladder under open-loop overload with per-tier "
+                         "p50/p99 + recall vs declared floors (writes "
+                         "BENCH_robust.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="with --tune: smallest cutout + tightest budget "
                          "(the ci.sh tune tier)")
@@ -134,6 +143,8 @@ def main() -> None:
         benches = [("obs_breakdown", lambda: F.bench_obs(quick=True))]
     elif args.tune:
         benches = [("tune_autotuner", lambda: F.bench_tune(smoke=args.smoke))]
+    elif args.robust:
+        benches = [("robust_durability", lambda: F.bench_robust(quick=True))]
     else:
         benches = BENCHES
     os.makedirs(args.out, exist_ok=True)

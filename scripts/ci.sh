@@ -213,6 +213,53 @@ print(f"tune guard: cached_vs_handpicked=x{ratio:.2f} "
 sys.exit(0 if ok else 1)
 PY
 
+echo "== robust smoke (WAL overhead + crash recovery + degradation ladder) =="
+# tests/test_robust.py (crash-at-every-boundary parity sweep, corruption
+# matrix, retry/backoff, ladder) already ran in tier-1 above; this tier
+# guards the three MEASURED robustness numbers
+python -m benchmarks.run --robust --out results/bench
+
+echo "== robust guard (bit-parity, WAL workload overhead <=5%, tier floors) =="
+python - <<'PY'
+import json, sys
+rec = json.load(open("BENCH_robust.json"))
+ok = True
+if not rec.get("recovery_bit_parity"):
+    print("ROBUST GUARD FAIL: recovered searcher is NOT bit-identical to "
+          "the live one (ids/scores diverged after snapshot+WAL replay)")
+    ok = False
+wl = rec.get("wal_workload_overhead_frac", 1.0)
+if wl >= 0.05:
+    print(f"ROBUST GUARD FAIL: WAL overhead on the streaming workload "
+          f"{wl:+.4f} >= 5% (fsync={rec.get('wal_fsync')}; the bare "
+          f"append-path ratio {rec.get('wal_append_overhead_frac'):+.3f} "
+          "is informational — see bench_robust docstring)")
+    ok = False
+for t in rec.get("tiers", []):
+    if not t["meets_floor"]:
+        print(f"ROBUST GUARD FAIL: tier {t['tier']} (budget {t['budget']}) "
+              f"recall {t['recall_vs_full']:.3f} < declared floor "
+              f"{t['declared_floor']}")
+        ok = False
+ov = rec.get("overload", {})
+if ov.get("stepdowns", 0) < 1:
+    print("ROBUST GUARD FAIL: open-loop overload never stepped the ladder "
+          f"down (queue backlog {ov.get('requests')} requests, "
+          f"shed_rate={ov.get('shed_rate')})")
+    ok = False
+if ov.get("final_state") != "ok":
+    print(f"ROBUST GUARD FAIL: engine did not recover to 'ok' after the "
+          f"overload drained (final_state={ov.get('final_state')!r})")
+    ok = False
+print(f"robust guard: bit_parity={rec.get('recovery_bit_parity')} "
+      f"wal_workload_overhead={wl:+.4f} "
+      f"replay_rows_per_s={rec.get('replay_rows_per_s', 0):.0f} "
+      f"shed_rate={ov.get('shed_rate', 0):.2f} "
+      f"stepdowns={ov.get('stepdowns')} stepups={ov.get('stepups')} "
+      f"tier_recalls={[round(t['recall_vs_full'], 3) for t in rec.get('tiers', [])]}")
+sys.exit(0 if ok else 1)
+PY
+
 echo "== stream smoke (insert throughput + latency vs delta fraction) =="
 python -m benchmarks.run --stream --out results/bench
 
@@ -236,3 +283,6 @@ cat BENCH_obs.json
 
 echo "== BENCH_tune.json =="
 cat BENCH_tune.json
+
+echo "== BENCH_robust.json =="
+cat BENCH_robust.json

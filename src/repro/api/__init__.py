@@ -12,7 +12,8 @@ build-and-search engine in the repo.
 Backends declare `Capabilities`; `supports_mutation` gates the uniform
 insert/delete/update surface (`promips-stream`, `sharded`).
 """
-from .base import Searcher, UnsupportedOperation, read_header, saved_bytes
+from .base import (CorruptSnapshotError, Searcher, UnsupportedOperation,
+                   read_header, saved_bytes)
 from .registry import backends, build, get_backend, iter_backends, load, register
 from .types import (Capabilities, GuaranteeConfig, GuaranteePlan,
                     SearchResult, STAT_KEYS)
@@ -21,7 +22,8 @@ from .types import (Capabilities, GuaranteeConfig, GuaranteePlan,
 from . import adapters as _builtin_adapters  # noqa: E402,F401
 
 __all__ = [
-    "Searcher", "UnsupportedOperation", "read_header", "saved_bytes",
+    "CorruptSnapshotError", "Searcher", "UnsupportedOperation",
+    "read_header", "saved_bytes",
     "backends", "build", "get_backend", "iter_backends", "load", "register",
     "Capabilities", "GuaranteeConfig", "GuaranteePlan", "SearchResult",
     "STAT_KEYS",

@@ -24,6 +24,7 @@ baselines take (c, p0) as tuning hints only and report guaranteed=False.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Optional, Tuple
 
 import numpy as np
@@ -167,6 +168,10 @@ class PromipsSearcher(Searcher):
         return self.pm.meta.n
 
     @property
+    def dim(self) -> int:
+        return self.pm.meta.d
+
+    @property
     def index_bytes(self) -> int:
         return self.pm.meta.index_bytes
 
@@ -209,6 +214,10 @@ class _MutableMixin:
     def n(self) -> int:
         return self.inner.n_alive
 
+    @property
+    def dim(self) -> int:
+        return self.inner.d
+
 
 @register
 class StreamSearcher(_MutableMixin, Searcher):
@@ -250,6 +259,47 @@ class StreamSearcher(_MutableMixin, Searcher):
 
     def flush(self, timeout=None) -> None:
         self.inner.join_compaction(timeout)
+
+    # -- durability (robust/wal.py, DESIGN.md §16) ---------------------------
+    def enable_wal(self, wal_dir: str, fsync: str = "os") -> str:
+        """Make this index crash-safe: write an initial checksummed snapshot
+        under ``wal_dir/snapshot`` and attach a write-ahead log at
+        ``wal_dir/wal.log`` — every subsequent acknowledged mutation is
+        logged before it is applied. `repro.robust.recover(wal_dir)`
+        restores the exact state after a crash."""
+        from ..robust.wal import WriteAheadLog
+        self.flush()
+        self.save(os.path.join(wal_dir, "snapshot"))
+        self.inner.mark_wal_floor()
+        self.inner.attach_wal(
+            WriteAheadLog(os.path.join(wal_dir, "wal.log"), fsync=fsync,
+                          fresh=True))
+        self._wal_dir = wal_dir
+        return wal_dir
+
+    def checkpoint(self) -> str:
+        """Fold the WAL into a fresh snapshot: save (atomic, checksummed),
+        then truncate the log. A crash at ANY point is safe — the snapshot
+        persists ``wal_seq`` and replay skips records at or below it, so
+        dying between the save and the truncate only replays no-ops."""
+        if getattr(self, "_wal_dir", None) is None:
+            raise RuntimeError("no WAL attached (build with wal_dir= or "
+                               "call enable_wal() first)")
+        self.flush()
+        self.save(os.path.join(self._wal_dir, "snapshot"))
+        self.inner.mark_wal_floor()
+        self.inner._wal.reset()
+        return self._wal_dir
+
+    def wal_lag(self) -> int:
+        return self.inner.wal_lag()
+
+    def maintenance_status(self) -> dict:
+        """Compaction + WAL health for `engine.health()`."""
+        comp = (self.inner.compactor.status()
+                if self.inner.compactor is not None else None)
+        return {"compaction": comp, "wal_attached": self.inner._wal is not None,
+                "wal_lag": self.inner.wal_lag()}
 
     @property
     def index_bytes(self) -> int:
@@ -322,6 +372,31 @@ class ShardedSearcher(_MutableMixin, Searcher):
             shard.join_compaction(timeout)
 
     @property
+    def dim(self) -> int:
+        return self.inner.shards[0].d
+
+    def maintenance_status(self) -> dict:
+        """Aggregated per-shard compaction health (`engine.health()` hook):
+        worst-case rollup — any shard's latched error surfaces in the
+        ``compaction`` rollup; per-shard detail rides along."""
+        per = [s.compactor.status() if s.compactor is not None else None
+               for s in self.inner.shards]
+        live = [p for p in per if p is not None]
+        comp = None
+        if live:
+            comp = {
+                "in_flight": any(p["in_flight"] for p in live),
+                "runs": sum(p["runs"] for p in live),
+                "failures": sum(p["failures"] for p in live),
+                "retries": sum(p["retries"] for p in live),
+                "error_latched": any(p["error_latched"] for p in live),
+                "last_error": next((p["last_error"] for p in live
+                                    if p["last_error"]), None),
+                "shards": per,
+            }
+        return {"compaction": comp, "wal_attached": False, "wal_lag": 0}
+
+    @property
     def index_bytes(self) -> int:
         return sum(s.meta.index_bytes for s in self.inner.shards)
 
@@ -382,6 +457,10 @@ class _BaselineSearcher(Searcher):
     @property
     def n(self) -> int:
         return len(self._x)
+
+    @property
+    def dim(self) -> int:
+        return int(self._x.shape[1])
 
     @property
     def index_bytes(self) -> int:

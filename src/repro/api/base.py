@@ -24,8 +24,11 @@ import time
 from typing import ClassVar, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from ..robust.snapshot import (CorruptSnapshotError, verify_dir,
+                               write_atomic_dir)
 from .types import Capabilities, GuaranteeConfig, SearchResult
 
 FORMAT_NAME = "repro.api-index"
@@ -74,11 +77,13 @@ class Searcher(abc.ABC):
         Device (jax) query arrays are passed through WITHOUT a host round
         trip — the serve engine calls this with on-device activations every
         decode step; numpy-only backends convert for themselves.
+
+        Malformed queries (NaN/Inf, non-float dtype on device arrays, wrong
+        dimensionality) are rejected with a ValueError HERE, before the jit
+        path — a NaN would otherwise poison every score silently and a shape
+        mismatch would surface as a cryptic retrace three layers down.
         """
-        if isinstance(queries, jax.Array):
-            q = queries if queries.ndim == 2 else queries[None, :]
-        else:
-            q = np.atleast_2d(np.asarray(queries, np.float32))
+        q = self._validate_queries(queries)
         k = int(self.guarantee.k if k is None else k)
         if k < 1:
             raise ValueError(f"k must be a positive int, got {k!r}")
@@ -88,6 +93,44 @@ class Searcher(abc.ABC):
         stats.setdefault("queries", q.shape[0])
         stats["wall_time_s"] = time.perf_counter() - t0
         return SearchResult(ids=ids, scores=scores, stats=stats)
+
+    def _validate_queries(self, queries):
+        """Boundary validation shared by every backend (and reused verbatim
+        by `serve.DecodeEngine.submit` for prompt token arrays).
+
+        Device arrays are validated on STATIC properties only (dtype, rank,
+        trailing dim) — a finiteness check would force a device sync on the
+        decode hot path; NaNs from a model bug still surface in the numpy
+        path tests and the engine's own prompt validation.
+        """
+        d = self.dim
+        if isinstance(queries, jax.Array):
+            if not jnp.issubdtype(queries.dtype, jnp.floating):
+                raise ValueError(
+                    f"queries must be floating point, got dtype "
+                    f"{queries.dtype} (cast activations before search)")
+            if queries.ndim not in (1, 2):
+                raise ValueError(f"queries must be (B, d) or (d,), got "
+                                 f"shape {queries.shape}")
+            q = queries if queries.ndim == 2 else queries[None, :]
+        else:
+            try:
+                q = np.atleast_2d(np.asarray(queries, np.float32))
+            except (TypeError, ValueError) as e:
+                raise ValueError(f"queries are not castable to float32: {e}")
+            if q.ndim != 2:
+                raise ValueError(f"queries must be (B, d) or (d,), got "
+                                 f"shape {np.asarray(queries).shape}")
+            if not np.isfinite(q).all():
+                bad = int(np.sum(~np.isfinite(q)))
+                raise ValueError(
+                    f"queries contain {bad} non-finite value(s) (NaN/Inf); "
+                    "a NaN scores -inf against every row and silently "
+                    "returns garbage neighbors — rejecting at the boundary")
+        if d is not None and q.shape[1] != d:
+            raise ValueError(f"queries have dimension {q.shape[1]}, index "
+                             f"has dimension {d}")
+        return q
 
     # -- capability-gated mutation surface -----------------------------------
     def _require_mutation(self, op: str) -> None:
@@ -128,6 +171,12 @@ class Searcher(abc.ABC):
     def index_bytes(self) -> int:
         """In-memory index size (the paper's Fig. 4a metric; 0 = no index)."""
 
+    @property
+    def dim(self) -> Optional[int]:
+        """Row dimensionality, for boundary validation; None = unknown
+        (validation then skips the trailing-dim check)."""
+        return None
+
     # -- persistence ---------------------------------------------------------
     @abc.abstractmethod
     def state(self) -> Tuple[dict, dict]:
@@ -141,8 +190,10 @@ class Searcher(abc.ABC):
         """Inverse of :meth:`state`."""
 
     def save(self, path: str) -> str:
-        """Persist to ``path`` (a directory): arrays.npz + meta.json."""
-        os.makedirs(path, exist_ok=True)
+        """Persist to ``path`` (a directory): arrays.npz + meta.json +
+        manifest.json, written ATOMICALLY (temp dir + rename) with per-file
+        SHA256 checksums — a crash mid-save leaves the previous snapshot
+        intact, never a torn mix (DESIGN.md §16)."""
         arrays, backend_meta = self.state()
         header = {
             "format": FORMAT_NAME,
@@ -152,9 +203,15 @@ class Searcher(abc.ABC):
             "guarantee": dataclasses.asdict(self.guarantee),
             "backend_meta": backend_meta,
         }
-        np.savez_compressed(os.path.join(path, _ARRAYS_FILE), **arrays)
-        with open(os.path.join(path, _META_FILE), "w") as f:
-            json.dump(header, f, indent=1)
+        def _write_meta(p):
+            with open(p, "w") as f:
+                json.dump(header, f, indent=1)
+
+        write_atomic_dir(path, {
+            _ARRAYS_FILE: lambda p: np.savez_compressed(p, **arrays),
+            _META_FILE: _write_meta,
+        }, manifest_extra={"format": FORMAT_NAME,
+                           "version": FORMAT_VERSION})
         return path
 
     @classmethod
@@ -182,11 +239,16 @@ def saved_bytes(path: str) -> int:
 
 
 def read_header(path: str) -> dict:
-    """Parse and validate the ``meta.json`` header of a saved index."""
+    """Parse and validate the ``meta.json`` header of a saved index.
+
+    Integrity first: every manifest-listed file is re-hashed and a mismatch
+    raises `CorruptSnapshotError` naming the failing file (a manifest-less
+    legacy directory loads unverified, with a warning)."""
     meta_path = os.path.join(path, _META_FILE)
     if not os.path.exists(meta_path):
         raise FileNotFoundError(f"no saved index at {path!r} "
                                 f"(missing {_META_FILE})")
+    verify_dir(path)
     with open(meta_path) as f:
         header = json.load(f)
     if header.get("format") != FORMAT_NAME:
@@ -197,5 +259,5 @@ def read_header(path: str) -> dict:
     return header
 
 
-__all__ = ["Searcher", "UnsupportedOperation", "read_header", "saved_bytes",
-           "FORMAT_NAME", "FORMAT_VERSION"]
+__all__ = ["Searcher", "UnsupportedOperation", "CorruptSnapshotError",
+           "read_header", "saved_bytes", "FORMAT_NAME", "FORMAT_VERSION"]

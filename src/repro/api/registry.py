@@ -51,6 +51,7 @@ def iter_backends() -> Iterator[Tuple[str, Type[Searcher]]]:
 def build(x: np.ndarray, backend: str = "promips", *,
           guarantee: Optional[GuaranteeConfig] = None,
           seed: int = 0, page_bytes: Optional[int] = None,
+          wal_dir: Optional[str] = None, wal_fsync: str = "os",
           **opts) -> Searcher:
     """Build an index over ``x`` with the named backend.
 
@@ -63,6 +64,13 @@ def build(x: np.ndarray, backend: str = "promips", *,
     ``page_bytes=None`` (default) consults the offline tuning cache
     (`repro.tune.cache`) for this data shape; an explicit value always
     wins, and with no cache entry the hand-picked 4096 is used.
+
+    ``wal_dir`` (mutable backends only) makes the index crash-safe: an
+    initial checksummed snapshot plus a write-ahead log land under that
+    directory, every acknowledged mutation is logged before it is applied,
+    and `repro.robust.recover(wal_dir)` restores the exact pre-crash state
+    (DESIGN.md §16). ``wal_fsync`` picks the durability/latency trade
+    ("always" | "os" | "never").
     """
     cls = get_backend(backend)
     guarantee = GuaranteeConfig() if guarantee is None else guarantee
@@ -79,6 +87,14 @@ def build(x: np.ndarray, backend: str = "promips", *,
     searcher.guarantee = guarantee
     searcher.seed = int(seed)
     searcher.build_seconds = time.perf_counter() - t0
+    if wal_dir is not None:
+        # after the guarantee/seed stamps, so the initial snapshot's header
+        # carries them (recover() round-trips the full facade state)
+        if not hasattr(searcher, "enable_wal"):
+            raise ValueError(f"backend {backend!r} does not support wal_dir= "
+                             "(write-ahead logging needs a mutable "
+                             "promips-stream index)")
+        searcher.enable_wal(wal_dir, fsync=wal_fsync)
     return searcher
 
 

@@ -43,8 +43,12 @@ backends by construction. Verification backends:
   bit-identical to the scan backend (the parity test in
   tests/test_search_runtime.py asserts this). With a FINITE budget the two
   backends budget differently: "scan" caps each query's own selection at
-  ``budget`` blocks, "batched" caps the union tile shared by the whole
-  batch — queries whose selection does not fit are flagged ``exhausted``.
+  ``budget`` blocks in layout order, "batched" caps the union tile shared
+  by the whole batch, keeping the ``budget`` most PROMISING union blocks
+  (`truncate_union` on `block_priority`'s projected-IP upper bound — the
+  lever the serve degradation ladder pulls, DESIGN.md §16) — queries whose
+  selection
+  does not fit are flagged ``exhausted``.
 
 ``verification="scan"`` — the legacy per-query `lax.scan` of per-block
   matvecs, kept as the semantics reference and for the benchmark baseline.
@@ -145,6 +149,50 @@ def select_blocks_batch(arrays: IndexArrays, q_proj, radius):
     return blocks_from_radii(arrays, subpart_distances(arrays, q_proj), radius)
 
 
+def block_priority(arrays: IndexArrays, q_proj):
+    """Best-first key for budget truncation: per block, the NEGATED upper
+    bound on any batch query's projected inner product with any point in
+    the block's sub-partition balls — ``max_b(q_proj . center + |q_proj| *
+    radius)`` by Cauchy-Schwarz, maximized over the block's sub-partitions.
+    Ascending = more promising.
+
+    Norm-awareness is the whole point: with norm-strata layouts the
+    MIPS-dominating high-norm blocks sit at the END of the layout and are
+    often FAR from the query in projection space, so both layout order and
+    the ball-gap distance (the progressive driver's key, which re-tests
+    every block against an adaptive radius and so can afford it) rank them
+    last — a truncating budget would shed exactly the blocks that matter.
+    Clamped finite so sub-partition-less blocks still rank strictly ahead
+    of non-union blocks in `truncate_union`.
+    """
+    q_norm = jnp.sqrt(jnp.sum(q_proj * q_proj, axis=1))            # (B,)
+    ub = (q_proj @ arrays.sp_center.T
+          + q_norm[:, None] * arrays.sp_radius[None, :])           # (B, S)
+    ub = jnp.max(ub, axis=0)                                       # (S,)
+    gathered = jnp.where(arrays.block_sp_idx >= 0,
+                         ub[jnp.maximum(arrays.block_sp_idx, 0)], -jnp.inf)
+    return jnp.minimum(-jnp.max(gathered, axis=1), jnp.float32(1e30))
+
+
+def truncate_union(union, prio, cap: int):
+    """Blocks surviving a ``cap``-slot verification tile.
+
+    With ``prio=None`` (full budget — no ranking computed) the union is
+    returned unchanged, preserving the historical semantics bit-for-bit.
+    With a priority vector, the ``cap`` BEST union blocks survive (ties by
+    layout index via the stable sort) instead of the first ``cap`` in
+    layout order — a finite budget then sheds the least promising blocks,
+    which is what makes it a quality ladder (DESIGN.md §16) rather than an
+    arbitrary cut. Callers still lay the surviving set out in layout order,
+    so the Condition-A sequential-scan reconstruction is untouched.
+    """
+    if prio is None:
+        return union
+    key = jnp.where(union, prio, jnp.inf)
+    best = jnp.argsort(key, stable=True)[:cap]
+    return jnp.zeros(union.shape[0], bool).at[best].set(True) & union
+
+
 def adaptive_radii(arrays: IndexArrays, meta: IndexMeta, s_k, q_l2sq, cs_prune: bool):
     """Per-sub-partition norm-adaptive radii (delegates to `search_common`)."""
     return sc.adaptive_radii(arrays.sp_max_l2sq, s_k, q_l2sq, meta.c, meta.x_p,
@@ -243,7 +291,8 @@ def _merge_topk(top: TopK, scores, rows, k: int) -> TopK:
 # ---------------------------------------------------------------------------
 
 def _verify_batched(arrays: IndexArrays, meta: IndexMeta, queries, block_masks,
-                    tops: TopK, c_half, k: int, budget: int, use_pallas):
+                    tops: TopK, c_half, k: int, budget: int, use_pallas,
+                    prio=None):
     """One verification round for the whole query batch.
 
     queries: (B, d); block_masks: (B, NB) per-query selected blocks;
@@ -251,7 +300,10 @@ def _verify_batched(arrays: IndexArrays, meta: IndexMeta, queries, block_masks,
     thresholds. Returns (tops', pages (B,), candidates (B,), done_a (B,),
     lost (B,)) with the exact sequential-scan semantics (see module
     docstring); ``lost`` flags queries whose selection did not fit the
-    ``budget``-block union tile.
+    ``budget``-block union tile. ``prio`` (NB,), when given, decides WHICH
+    union blocks survive a truncating budget (`truncate_union` — best
+    blocks first instead of first-in-layout); the surviving set is still
+    walked in layout order.
     """
     n_batch = queries.shape[0]
     page_rows = meta.page_rows
@@ -261,9 +313,10 @@ def _verify_batched(arrays: IndexArrays, meta: IndexMeta, queries, block_masks,
     # Union tile: blocks selected by ANY query, in layout order (the
     # sequential-disk pattern the sub-partition layout is designed for).
     union = jnp.any(block_masks, axis=0)                      # (NB,)
-    order = jnp.argsort(~union, stable=True)                  # union first
+    keep = truncate_union(union, prio, budget)
+    order = jnp.argsort(~keep, stable=True)                   # kept first
     slots = order[:budget]                                    # (budget,)
-    slot_valid = jnp.arange(budget) < jnp.sum(union.astype(jnp.int32))
+    slot_valid = jnp.arange(budget) < jnp.sum(keep.astype(jnp.int32))
     in_tile = jnp.zeros(n_blocks, bool).at[slots].set(slot_valid)
 
     # Gather candidate rows once and score all queries in one kernel call.
@@ -307,8 +360,13 @@ def _search_batch_batched(arrays, meta, queries, k, budget, budget2,
                           prefilter=False, prefilter_eps=1.0):
     """Two-phase runtime: batched selection + one mips_score call per round."""
     n_batch = queries.shape[0]
+    n_blocks = arrays.block_sp_lo.shape[0]
     q_proj, q_l2sq, d_sp, r0, probe_ok, c_half, mask0 = select_frontend(
         arrays, meta, queries)
+    # best-first truncation key, only materialized when a finite budget can
+    # actually truncate (the full-budget graph stays byte-identical)
+    prio = (block_priority(arrays, q_proj)
+            if min(budget, budget2) < n_blocks else None)
     mask_r1 = mask0
     sk_est = sk_bnd = sk_bvalid = None
     if prefilter:
@@ -318,7 +376,8 @@ def _search_batch_batched(arrays, meta, queries, k, budget, budget2,
     empty = TopK(scores=jnp.full((n_batch, k), -jnp.inf),
                  rows=jnp.full((n_batch, k), -1, jnp.int32))
     top, pages1, cand1, done_a, lost1 = _verify_batched(
-        arrays, meta, queries, mask_r1, empty, c_half, k, budget, use_pallas)
+        arrays, meta, queries, mask_r1, empty, c_half, k, budget, use_pallas,
+        prio=prio)
     # Without this barrier XLA CPU re-materializes round-1 fusions inside the
     # round-2 consumers (~2x wall clock); semantically an identity.
     top, done_a, mask0 = jax.lax.optimization_barrier((top, done_a, mask0))
@@ -338,7 +397,7 @@ def _search_batch_batched(arrays, meta, queries, k, budget, budget2,
     def round2(args):
         mask_r2, top = args
         return _verify_batched(arrays, meta, queries, mask_r2, top, c_half, k,
-                               budget2, use_pallas)
+                               budget2, use_pallas, prio=prio)
 
     def skip2(args):
         _, top = args

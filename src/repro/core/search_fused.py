@@ -25,9 +25,10 @@ block *selection* on device but the *tile sizing* on host:
      outright — no `lax.cond` that still pays a full-tile gather.
 
 Results (ids, scores, and every `SearchStats` field) are bit-identical to
-``verification="batched"`` at EVERY budget: the tile-cap rule — the first
-``budget`` union blocks in layout order — is the same; the bucketed tile
-only drops slots the batched tile masks out anyway. The parity suite in
+``verification="batched"`` at EVERY budget: the tile-cap rule — the
+``budget`` best-priority union blocks (`search_device.truncate_union`),
+laid out in layout order — is the same; the bucketed tile only drops slots
+the batched tile masks out anyway. The parity suite in
 tests/test_fused_verification.py asserts this three-way (fused / batched /
 scan) at full budget and pairwise (fused / batched) at finite budgets.
 """
@@ -51,9 +52,9 @@ from .index import IndexArrays, IndexMeta
 # per-call knob (`dense_frac`), promoted to `RuntimeConfig` and tunable via
 # the offline tuner (`repro.tune`); this constant is the hand-picked default.
 from .search_common import DENSE_FRAC, next_pow2
-from .search_device import (SearchStats, TopK, compensation_masks,
-                            prefilter_round1, prefilter_round2,
-                            select_frontend)
+from .search_device import (SearchStats, TopK, block_priority,
+                            compensation_masks, prefilter_round1,
+                            prefilter_round2, select_frontend)
 
 
 class TraceRing:
@@ -170,7 +171,7 @@ _prefilter2 = jax.jit(prefilter_round2)
 
 
 def _plan_tile(mask: np.ndarray, cap: int, n_blocks: int,
-               dense_frac: float = DENSE_FRAC):
+               dense_frac: float = DENSE_FRAC, prio=None):
     """Size one verification tile from the host-side (B, NB) selection.
 
     Returns (slots (NS,) i32, sel (B, NS) bool, lost (B,) bool, dense) or
@@ -185,7 +186,10 @@ def _plan_tile(mask: np.ndarray, cap: int, n_blocks: int,
     gather — dense and sparse tiles are result-bit-identical, so
     ``dense_frac`` is a pure performance knob (tunable via `repro.tune`).
     ``lost`` flags queries whose selection exceeds the ``cap``-block tile —
-    the same union-tile budget rule as ``verification="batched"``.
+    the same union-tile budget rule as ``verification="batched"``;
+    ``prio`` (NB,), when given, keeps the BEST union blocks under a
+    truncating cap (ties by layout index — `search_device.truncate_union`'s
+    rule, applied host-side) instead of the first in layout order.
     """
     union = mask.any(axis=0)
     n_union = int(union.sum())
@@ -197,15 +201,22 @@ def _plan_tile(mask: np.ndarray, cap: int, n_blocks: int,
         return slots, mask, np.zeros(n_batch, bool), True
     n_slots = min(next_pow2(n_union), cap)
     ublocks = np.nonzero(union)[0]                  # ascending layout order
-    take = ublocks[: min(n_union, n_slots)]
+    if n_union > n_slots:
+        if prio is not None:                        # best blocks survive,
+            best = np.argsort(prio[ublocks], kind="stable")[:n_slots]
+            take = np.sort(ublocks[best])           # ...laid out in order
+        else:
+            take = ublocks[:n_slots]
+        in_tile = np.zeros(n_blocks, bool)
+        in_tile[take] = True
+        lost = (mask & ~in_tile[None, :]).any(axis=1)
+    else:
+        take = ublocks
+        lost = np.zeros(n_batch, bool)
     slots = np.zeros(n_slots, np.int32)
     slots[: len(take)] = take
     sel = np.zeros((n_batch, n_slots), bool)
     sel[:, : len(take)] = mask[:, take]
-    if n_union > n_slots:
-        lost = mask[:, ublocks[n_slots:]].any(axis=1)
-    else:
-        lost = np.zeros(n_batch, bool)
     return slots, sel, lost, False
 
 
@@ -264,6 +275,10 @@ def search_batch_fused(
         q_proj, q_l2sq, d_sp, r0, probe_ok, c_half, mask0 = _frontend(
             arrays, meta, queries)
         sp.fence(mask0)
+    # host-side copy of the shared best-first truncation key (same rule as
+    # the batched / in-graph drivers), only when a cap can truncate
+    prio_np = (np.asarray(block_priority(arrays, q_proj))
+               if min(cap, cap2) < n_blocks else None)
     mask_r1 = mask0
     sk_est = sk_bnd = sk_bvalid = None
     if prefilter:
@@ -288,7 +303,7 @@ def search_batch_fused(
             n_sel = float(np.asarray(mask0).sum())
             _metrics.gauge("search.prefilter_survivor_frac").set(
                 float(mask_np.sum()) / max(n_sel, 1.0))
-        plan = _plan_tile(mask_np, cap, n_blocks, dense_frac)
+        plan = _plan_tile(mask_np, cap, n_blocks, dense_frac, prio=prio_np)
     if plan is None:
         if obs:
             _metrics.counter("fused.rounds_skipped").inc()
@@ -324,7 +339,8 @@ def search_batch_fused(
             sp.fence(mask_r2)
 
     with _span("plan_tile_round2", active=obs, metric="search.plan_us"):
-        plan = _plan_tile(np.asarray(mask_r2), cap2, n_blocks, dense_frac)
+        plan = _plan_tile(np.asarray(mask_r2), cap2, n_blocks, dense_frac,
+                          prio=prio_np)
     if plan is None:
         if obs:
             _metrics.counter("fused.rounds_skipped").inc()

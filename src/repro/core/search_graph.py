@@ -13,9 +13,10 @@ branch of a `jax.lax.switch`:
 
   buckets  = [1, 2, 4, ..., cap]  (pow2s below the budget cap, then the cap)
   branch b = one `ops.block_mips` round over a ``buckets[b]``-slot tile whose
-             slot list is the first ``buckets[b]`` union blocks in layout
-             order (`argsort(~union, stable)` — the same union-first
-             ascending order as the batched backend's tile)
+             slot list is the cap-surviving union blocks in layout order
+             (`truncate_union` then `argsort(~keep, stable)` — the same
+             best-first truncation + layout-order walk as the batched
+             backend's tile)
   index    = searchsorted(buckets, union_count): the smallest bucket that
              holds the union, i.e. exactly the host driver's
              ``min(next_pow2(union), cap)`` rule
@@ -36,7 +37,8 @@ is needed for round 1; the compensation round keeps the batched backend's
 
 Results (ids, scores, every `SearchStats` field) are bit-identical to BOTH
 `search_fused.search_batch_fused` and ``verification="batched"`` at every
-budget: the tile-cap rule (first ``budget`` union blocks in layout order) and
+budget: the tile-cap rule (the ``budget`` best-priority union blocks, walked
+in layout order) and
 the per-round accounting are the same; a bucketed tile only carries padding
 slots whose ``sel`` column is False. tests/test_fused_verification.py
 asserts this under jit and tests/test_distributed.py under shard_map.
@@ -50,9 +52,10 @@ import jax.numpy as jnp
 
 from ..kernels import ops
 from .index import IndexArrays, IndexMeta
-from .search_device import (SearchStats, TopK, compensation_masks,
-                            prefilter_round1, prefilter_round2,
-                            select_frontend)
+from .search_device import (SearchStats, TopK, block_priority,
+                            compensation_masks, prefilter_round1,
+                            prefilter_round2, select_frontend,
+                            truncate_union)
 from .search_fused import DENSE_FRAC
 
 
@@ -71,18 +74,22 @@ def _tile_buckets(cap: int) -> tuple:
 def _fused_round_graph(arrays: IndexArrays, queries, mask, top: TopK, c_half,
                        k: int, cap: int, n_blocks: int, page_rows: int,
                        use_pallas: Optional[bool],
-                       dense_frac: float = DENSE_FRAC):
+                       dense_frac: float = DENSE_FRAC, prio=None):
     """One traceable fused verification round over the (B, NB) ``mask``.
 
     Returns (TopK, pages (B,), cand (B,), done_a (B,), lost (B,)) with the
     exact semantics of one host-driver round (`search_fused._verify` over
-    `search_fused._plan_tile`'s tile) — bucket choice and all. The body sits
-    under a `jax.named_scope` so the rounds are identifiable in XLA profiles
-    even though this driver never leaves the trace (DESIGN.md §14).
+    `search_fused._plan_tile`'s tile) — bucket choice and all. ``prio``
+    ranks union blocks for a truncating ``cap`` (`truncate_union`), the
+    same rule both other drivers apply. The body sits under a
+    `jax.named_scope` so the rounds are identifiable in XLA profiles even
+    though this driver never leaves the trace (DESIGN.md §14).
     """
     union = jnp.any(mask, axis=0)                              # (NB,)
     n_union = jnp.sum(union.astype(jnp.int32))
-    order = jnp.argsort(~union, stable=True).astype(jnp.int32)  # union first
+    keep = truncate_union(union, prio, cap)
+    n_keep = jnp.sum(keep.astype(jnp.int32))
+    order = jnp.argsort(~keep, stable=True).astype(jnp.int32)  # kept first
     valid = arrays.ids >= 0
     sizes = _tile_buckets(cap)
     have_dense = cap >= n_blocks
@@ -95,7 +102,7 @@ def _fused_round_graph(arrays: IndexArrays, queries, mask, top: TopK, c_half,
                 slot_valid = jnp.ones((n_blocks,), bool)
             else:
                 slots = order[:n_slots]
-                slot_valid = jnp.arange(n_slots) < n_union
+                slot_valid = jnp.arange(n_slots) < n_keep
                 sel = jnp.take(mask, slots, axis=1) & slot_valid[None, :]
             top_s, top_r, cnt, pages, cand = ops.block_mips(
                 arrays.x, valid, queries, slots, sel, top.scores, top.rows,
@@ -177,6 +184,10 @@ def search_batch_fused_graph(
 
     q_proj, q_l2sq, d_sp, r0, probe_ok, c_half, mask0 = select_frontend(
         arrays, meta, queries)
+    # same best-first truncation key as the batched / host-fused drivers,
+    # only materialized when a finite cap can actually truncate
+    prio = (block_priority(arrays, q_proj)
+            if min(cap, cap2) < n_blocks else None)
     mask_r1 = mask0
     sk_est = sk_bnd = sk_bvalid = None
     if prefilter:
@@ -190,7 +201,7 @@ def search_batch_fused_graph(
 
     top, pages1, cand1, done_a, lost1 = _fused_round_graph(
         arrays, queries, mask_r1, top, c_half, k, cap, n_blocks,
-        meta.page_rows, use_pallas, dense_frac)
+        meta.page_rows, use_pallas, dense_frac, prio=prio)
     # same barrier as the batched graph: stops XLA CPU re-materializing
     # round-1 fusions inside the round-2 consumers
     top, done_a, mask0 = jax.lax.optimization_barrier((top, done_a, mask0))
@@ -210,7 +221,7 @@ def search_batch_fused_graph(
         mask_r2, top = args
         out_top, pages, cand, _, lost = _fused_round_graph(
             arrays, queries, mask_r2, top, c_half, k, cap2, n_blocks,
-            meta.page_rows, use_pallas, dense_frac)
+            meta.page_rows, use_pallas, dense_frac, prio=prio)
         return out_top, pages, cand, lost
 
     def skip2(args):

@@ -5,6 +5,9 @@
   deadline-based *data skip*: the step's batch indices are consumed (the
   stream is stateless in `step`, so every healthy worker advances
   identically) and the checkpoint cadence tightens until latency recovers.
+  The implementation is `repro.robust.EwmaWatchdog` — ONE shared EWMA
+  detector for the trainer and the serve engine's degradation ladder
+  (DESIGN.md §16); this name is the trainer-facing alias.
 - restart_plan: on resume, recompute the exact data position from the
   restored step — no data is replayed or skipped (determinism comes from
   TokenStream.batch_at(step)).
@@ -14,32 +17,11 @@
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
+from ..robust.watchdog import EwmaWatchdog
 
-@dataclass
-class StragglerMonitor:
-    threshold: float = 2.5
-    alpha: float = 0.2
-    ewma: float = 0.0
-    events: int = 0
-    _t0: float = field(default=0.0, repr=False)
-
-    def start(self):
-        self._t0 = time.perf_counter()
-
-    def stop(self) -> bool:
-        """Returns True if this step was a straggler."""
-        dt = time.perf_counter() - self._t0
-        if self.ewma == 0.0:
-            self.ewma = dt
-            return False
-        slow = dt > self.threshold * self.ewma
-        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
-        if slow:
-            self.events += 1
-        return slow
+StragglerMonitor = EwmaWatchdog
 
 
 def restart_plan(restored_step: int, total_steps: int):

@@ -85,6 +85,14 @@ GLOSSARY: Dict[str, tuple] = {
     "stream.deletes": ("counter", "rows tombstoned"),
     "stream.compactions": ("counter", "compactions installed (sync + bg)"),
     "stream.compaction_us": ("histogram", "synchronous compact() span µs"),
+    # durability + fault handling (DESIGN.md §16)
+    "stream.compaction_errors": ("counter", "background rebuild attempts "
+                                            "that raised"),
+    "stream.compaction_retries": ("counter", "failed rebuilds retried with "
+                                             "backoff"),
+    "stream.wal_appends": ("counter", "records appended to the WAL"),
+    "stream.wal_bytes": ("counter", "bytes appended to the WAL"),
+    "robust.faults_injected": ("counter", "armed fault points that fired"),
     # serve engine (DecodeEngine obs=True)
     "serve.requests_submitted": ("counter", "requests accepted by submit()"),
     "serve.requests_completed": ("counter", "requests finished (EOS/len)"),
@@ -97,6 +105,16 @@ GLOSSARY: Dict[str, tuple] = {
     "serve.step_us": ("histogram", "one engine step µs"),
     "serve.slot_occupancy": ("gauge", "active slots / batch slots"),
     "serve.queue_depth": ("gauge", "queued requests after last step"),
+    # serve degradation ladder (DESIGN.md §16)
+    "serve.degradation_tier": ("gauge", "current budget tier (0 = full "
+                                        "quality, higher = cheaper)"),
+    "serve.tier_stepdowns": ("counter", "ladder transitions to a cheaper "
+                                        "tier under overload"),
+    "serve.tier_stepups": ("counter", "ladder recoveries to a richer tier"),
+    "serve.deadline_expired": ("counter", "requests dropped past their "
+                                          "deadline"),
+    "serve.step_latency_ewma": ("gauge", "EWMA of engine step seconds "
+                                         "(the shared robust watchdog)"),
 }
 
 _lock = threading.Lock()

@@ -1,3 +1,3 @@
-from .engine import DecodeEngine, Request
+from .engine import DecodeEngine, DegradationPolicy, Request
 
-__all__ = ["DecodeEngine", "Request"]
+__all__ = ["DecodeEngine", "DegradationPolicy", "Request"]

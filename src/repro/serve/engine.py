@@ -36,6 +36,8 @@ from .. import api
 from ..core.runtime import RuntimeConfig
 from ..models import transformer as model_lib
 from ..obs import metrics as _metrics
+from ..robust.faultpoints import fault
+from ..robust.watchdog import EwmaWatchdog
 
 
 @dataclasses.dataclass
@@ -48,6 +50,51 @@ class Request:
     t_submit: float = 0.0
     t_admit: float = 0.0
     t_done: float = 0.0
+    deadline: float = 0.0             # absolute perf_counter s; 0.0 = none
+    expired: bool = False             # dropped/terminated past its deadline
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradationPolicy:
+    """Serve-path degradation ladder (DESIGN.md §16).
+
+    Under sustained overload the engine steps DOWN through ``tiers`` —
+    each entry is a verification block budget for the decode-time search
+    (``None``/1.0 = the configured full-quality runtime; an int is an
+    absolute block count; a float in (0, 1) is a fraction of the index's
+    selected-block ceiling, resolved at engine init) — trading recall for
+    latency BEFORE the queue cap sheds requests outright. When the queue
+    drains, it steps back UP one tier at a time.
+
+    Overload = queue depth ≥ ``queue_high``, or a step slower than
+    ``latency_factor`` × the EWMA of recent steps (the shared
+    `robust.EwmaWatchdog` — same detector the distributed trainer uses for
+    stragglers), sustained for ``patience`` consecutive steps. Recovery =
+    queue depth ≤ ``queue_low`` for ``recovery`` consecutive steps
+    (hysteresis: the two thresholds and the longer recovery streak stop the
+    ladder from oscillating at the boundary).
+
+    ``recall_floors`` is the DECLARED minimum recall@k per tier, measured
+    against the exact oracle by `benchmarks --robust` and guarded by
+    scripts/ci.sh — the ladder's quality contract, not a runtime check.
+    """
+
+    tiers: tuple = (1.0, 0.5, 0.25)
+    recall_floors: tuple = (0.95, 0.85, 0.6)
+    queue_high: int = 8
+    queue_low: int = 2
+    latency_factor: float = 2.5
+    alpha: float = 0.2                 # EWMA smoothing for step latency
+    patience: int = 3                  # overloaded steps before step-down
+    recovery: int = 8                  # calm steps before step-up
+
+    def __post_init__(self):
+        if not self.tiers:
+            raise ValueError("DegradationPolicy.tiers must be non-empty")
+        if len(self.recall_floors) != len(self.tiers):
+            raise ValueError("recall_floors must declare one floor per tier")
+        if self.queue_low >= self.queue_high:
+            raise ValueError("queue_low must be < queue_high (hysteresis)")
 
 
 class DecodeEngine:
@@ -57,7 +104,9 @@ class DecodeEngine:
                  promips_budget: Optional[int] = None, eos_id: int = 0,
                  search_runtime: Optional[RuntimeConfig] = None,
                  index: Optional[api.Searcher] = None,
-                 obs: bool = False, max_queue: Optional[int] = None):
+                 obs: bool = False, max_queue: Optional[int] = None,
+                 degradation: Optional[DegradationPolicy] = None,
+                 default_deadline_s: Optional[float] = None):
         if index is not None:
             # validated before any allocation: any MUTABLE Searcher works,
             # gated by capability rather than by concrete stream type
@@ -96,6 +145,20 @@ class DecodeEngine:
         self.queue: List[Request] = []
         self.steps = 0
         self.pages = 0
+        # degradation ladder + deadlines (DESIGN.md §16)
+        self.policy = degradation
+        self.default_deadline_s = default_deadline_s
+        self.tier = 0
+        self.stepdowns = 0
+        self.stepups = 0
+        self.shed = 0
+        self.deadline_drops = 0
+        self._watch = EwmaWatchdog(
+            threshold=degradation.latency_factor if degradation else 2.5,
+            alpha=degradation.alpha if degradation else 0.2)
+        self._over_streak = 0
+        self._calm_streak = 0
+        self._tier_cache: dict = {}
         self._decode = jax.jit(
             lambda p, c, t: model_lib.decode_step(p, cfg, c, t))
         self._decode_hidden = jax.jit(
@@ -134,6 +197,78 @@ class DecodeEngine:
                     mode="two_phase", verification="batched",
                     norm_adaptive=True, cs_prune=True, budget=promips_budget)
             self.search_runtime = dataclasses.replace(search_runtime, k=4)
+        self._tier_budgets = (self._resolve_tier_budgets()
+                              if degradation is not None else (None,))
+
+    # -- degradation ladder (DESIGN.md §16) ----------------------------------
+    def _resolve_tier_budgets(self) -> tuple:
+        """Map the policy's tier entries onto absolute block budgets: None /
+        1.0 = the configured runtime, int = absolute, float in (0, 1) = a
+        fraction of the index's block count (resolved here, once)."""
+        blocks = None
+        inner = getattr(getattr(self, "index", None), "inner", None)
+        if inner is not None:
+            if hasattr(inner, "meta"):
+                blocks = int(inner.meta.n_blocks)
+            elif hasattr(inner, "shards"):
+                blocks = min(int(s.meta.n_blocks) for s in inner.shards)
+        out = []
+        for t in self.policy.tiers:
+            if t is None or (isinstance(t, float) and t >= 1.0):
+                out.append(None)
+            elif isinstance(t, float):
+                out.append(max(1, round(blocks * t)) if blocks else None)
+            else:
+                out.append(max(1, int(t)))
+        return tuple(out)
+
+    def _tier_runtime(self) -> RuntimeConfig:
+        """The decode-search runtime for the CURRENT tier (cached per tier —
+        at most len(tiers) distinct compiled budgets over the engine's life)."""
+        b = self._tier_budgets[self.tier]
+        if b is None:
+            return self.search_runtime
+        rt = self._tier_cache.get(self.tier)
+        if rt is None:
+            rt = dataclasses.replace(self.search_runtime, budget=b, budget2=b)
+            self._tier_cache[self.tier] = rt
+        return rt
+
+    def _ladder_tick(self, step_seconds: Optional[float]) -> None:
+        """One hysteresis update: overload (deep queue OR a straggler step)
+        must persist for ``patience`` steps to step down; calm (shallow
+        queue) must persist for ``recovery`` steps to step up. ``None``
+        step_seconds = an idle tick (no latency signal)."""
+        p = self.policy
+        if p is None:
+            return
+        slow = (self._watch.observe(step_seconds)
+                if step_seconds is not None else False)
+        depth = len(self.queue)
+        if depth >= p.queue_high or slow:
+            self._over_streak += 1
+            self._calm_streak = 0
+        elif depth <= p.queue_low:
+            self._calm_streak += 1
+            self._over_streak = 0
+        else:                       # hysteresis band: hold the current tier
+            self._over_streak = 0
+        if (self._over_streak >= p.patience
+                and self.tier < len(self._tier_budgets) - 1):
+            self.tier += 1
+            self.stepdowns += 1
+            self._over_streak = 0
+            if self.obs:
+                _metrics.counter("serve.tier_stepdowns").inc()
+        elif self._calm_streak >= p.recovery and self.tier > 0:
+            self.tier -= 1
+            self.stepups += 1
+            self._calm_streak = 0
+            if self.obs:
+                _metrics.counter("serve.tier_stepups").inc()
+        if self.obs:
+            _metrics.gauge("serve.degradation_tier").set(self.tier)
+            _metrics.gauge("serve.step_latency_ewma").set(self._watch.ewma)
 
     # -- embedding mutation (streaming index, DESIGN.md §8) ------------------
     def update(self, ids, rows) -> None:
@@ -174,28 +309,74 @@ class DecodeEngine:
             self.index.flush(timeout)
 
     # -- request lifecycle ---------------------------------------------------
-    def submit(self, prompt: np.ndarray,
-               max_new_tokens: int = 16) -> Optional[Request]:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               deadline_s: Optional[float] = None) -> Optional[Request]:
         """Enqueue a request. Returns None (request SHED) when ``max_queue``
         is set and the admission backlog is already at the cap — the caller
-        decides whether to retry; nothing is buffered."""
+        decides whether to retry; nothing is buffered.
+
+        Malformed prompts (non-integer, wrong rank, out-of-vocab or negative
+        token ids, empty) are rejected with a ValueError at this boundary —
+        a bad token id would otherwise index the embed table out of range
+        inside the jit'd prefill.
+
+        ``deadline_s`` (seconds from now; defaults to the engine's
+        ``default_deadline_s``) bounds the request's useful life: expired
+        requests are dropped at admission, and an active sequence past its
+        deadline is terminated at the next step (``req.expired`` set, the
+        tokens decoded so far retained).
+        """
+        prompt = self._validate_prompt(prompt)
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.shed += 1
             if self.obs:
                 _metrics.counter("serve.requests_shed").inc()
             return None
-        req = Request(prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=max_new_tokens, out_tokens=[],
-                      t_submit=time.perf_counter())
+        now = time.perf_counter()
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
+        req = Request(prompt=prompt, max_new_tokens=max_new_tokens,
+                      out_tokens=[], t_submit=now,
+                      deadline=now + deadline_s if deadline_s else 0.0)
         self.queue.append(req)
         if self.obs:
             _metrics.counter("serve.requests_submitted").inc()
         return req
+
+    def _validate_prompt(self, prompt) -> np.ndarray:
+        arr = np.asarray(prompt)
+        if arr.ndim != 1 or arr.size == 0:
+            raise ValueError(f"prompt must be a non-empty 1-D token array, "
+                             f"got shape {arr.shape}")
+        if not np.issubdtype(arr.dtype, np.integer):
+            raise ValueError(f"prompt tokens must be integers, got dtype "
+                             f"{arr.dtype}")
+        if int(arr.min()) < 0 or int(arr.max()) >= self.cfg.vocab:
+            raise ValueError(
+                f"prompt token ids must be in [0, {self.cfg.vocab}), got "
+                f"range [{int(arr.min())}, {int(arr.max())}]")
+        return arr.astype(np.int32)
+
+    def _expire(self, req: Request) -> None:
+        req.expired = True
+        req.t_done = time.perf_counter()
+        self.deadline_drops += 1
+        if self.obs:
+            _metrics.counter("serve.deadline_expired").inc()
 
     def _admit(self):
         for slot in range(self.b):
             if self.active[slot] or not self.queue:
                 continue
             req = self.queue.pop(0)
+            # a request whose deadline passed while queued is dead on
+            # arrival: admitting it would burn a prefill + decode steps on
+            # an answer nobody is waiting for
+            while req.deadline and time.perf_counter() > req.deadline:
+                self._expire(req)
+                if not self.queue:
+                    return
+                req = self.queue.pop(0)
             req.slot = slot
             batch = {"tokens": jnp.asarray(req.prompt[None, :])}
             if self.cfg.frontend == "vision":
@@ -237,13 +418,18 @@ class DecodeEngine:
 
     # -- main loop -----------------------------------------------------------
     def step(self) -> bool:
-        """One engine step: admit, decode one token for all active slots."""
-        t0 = time.perf_counter() if self.obs else 0.0
+        """One engine step: admit, decode one token for all active slots.
+        Every step feeds the degradation ladder (when a policy is set): step
+        wall time into the shared EWMA watchdog, queue depth into the
+        overload/calm hysteresis."""
+        t0 = time.perf_counter()
+        fault.at("serve.decode")
         self._admit()
         if not self.active.any():
             if self.obs:
                 _metrics.gauge("serve.slot_occupancy").set(0.0)
                 _metrics.gauge("serve.queue_depth").set(len(self.queue))
+            self._ladder_tick(None)   # idle: queue signal only
             return False
         tokens = np.zeros((self.b, 1), np.int32)
         for slot in range(self.b):
@@ -252,8 +438,8 @@ class DecodeEngine:
         if self.logits_mode == "promips":
             hidden, self.cache = self._decode_hidden(
                 self.params, self.cache, jnp.asarray(tokens))
-            res = self.index.search(hidden, k=self.search_runtime.k,
-                                    runtime=self.search_runtime)
+            rt = self._tier_runtime()
+            res = self.index.search(hidden, k=rt.k, runtime=rt)
             self.pages += res.stats["pages"]
             if self.obs:
                 _metrics.counter("serve.pages").inc(res.stats["pages"])
@@ -270,27 +456,34 @@ class DecodeEngine:
             self.pages += self.cfg.vocab_padded * self.cfg.d_model * 4 // 4096 \
                 * int(self.active.sum()) // max(self.b, 1)
         self.steps += 1
+        now = time.perf_counter()
         for slot in range(self.b):
             if not self.active[slot]:
                 continue
             req = self.requests[slot]
             req.out_tokens.append(int(nxt[slot]))
-            if (len(req.out_tokens) >= req.max_new_tokens
-                    or int(nxt[slot]) == self.eos_id):
+            done = (len(req.out_tokens) >= req.max_new_tokens
+                    or int(nxt[slot]) == self.eos_id)
+            past_deadline = bool(req.deadline) and now > req.deadline
+            if done or past_deadline:
                 self.active[slot] = False
                 self.requests[slot] = None
-                req.t_done = time.perf_counter()
-                if self.obs:
-                    _metrics.counter("serve.requests_completed").inc()
-                    _metrics.histogram("serve.request_us").observe(
-                        (req.t_done - req.t_submit) * 1e6)
+                if past_deadline and not done:
+                    self._expire(req)   # partial tokens retained
+                else:
+                    req.t_done = now
+                    if self.obs:
+                        _metrics.counter("serve.requests_completed").inc()
+                        _metrics.histogram("serve.request_us").observe(
+                            (req.t_done - req.t_submit) * 1e6)
+        dt = time.perf_counter() - t0
         if self.obs:
             _metrics.counter("serve.decode_steps").inc()
-            _metrics.histogram("serve.step_us").observe(
-                (time.perf_counter() - t0) * 1e6)
+            _metrics.histogram("serve.step_us").observe(dt * 1e6)
             _metrics.gauge("serve.slot_occupancy").set(
                 float(self.active.sum()) / max(self.b, 1))
             _metrics.gauge("serve.queue_depth").set(len(self.queue))
+        self._ladder_tick(dt)
         return True
 
     def run(self, max_steps: int = 10_000):
@@ -298,14 +491,59 @@ class DecodeEngine:
             self.step()
 
     # -- telemetry -----------------------------------------------------------
+    def _maintenance(self) -> Optional[dict]:
+        """Index maintenance health (compaction + WAL), None in exact mode
+        or for backends without the hook."""
+        idx = getattr(self, "index", None)
+        if idx is None or not hasattr(idx, "maintenance_status"):
+            return None
+        return idx.maintenance_status()
+
+    def health(self) -> dict:
+        """Liveness/degradation view for an external health check:
+
+          state     "ok" (full quality) | "degraded" (ladder below tier 0)
+                    | "shedding" (admission backlog at the cap — submits
+                    are being rejected right now)
+          plus the current tier + its declared recall floor, queue/slot
+          occupancy, the step-latency EWMA, deadline/shed totals, and the
+          index's compaction + WAL status (a latched background compaction
+          error surfaces HERE, not only on the next join()).
+        """
+        shedding = (self.max_queue is not None
+                    and len(self.queue) >= self.max_queue)
+        maint = self._maintenance()
+        return {
+            "state": ("shedding" if shedding
+                      else "degraded" if self.tier > 0 else "ok"),
+            "tier": self.tier,
+            "tier_budget": (self._tier_budgets[self.tier]
+                            if self.policy is not None else None),
+            "tier_recall_floor": (self.policy.recall_floors[self.tier]
+                                  if self.policy is not None else None),
+            "queue_depth": len(self.queue),
+            "active_slots": int(self.active.sum()),
+            "step_latency_ewma_s": self._watch.ewma,
+            "stepdowns": self.stepdowns,
+            "stepups": self.stepups,
+            "shed": self.shed,
+            "deadline_drops": self.deadline_drops,
+            "compaction": maint["compaction"] if maint else None,
+            "wal_lag": maint["wal_lag"] if maint else 0,
+        }
+
     def metrics_snapshot(self) -> dict:
         """Engine-state view plus every live ``serve.*`` registry entry
         (counters as ints, gauges as floats, histograms as their summary
         dicts). Cheap enough to poll per scrape; with ``obs=False`` only the
-        engine-state keys are populated."""
+        engine-state keys are populated. The index's maintenance status
+        rides along so a latched background-compaction error is visible on
+        every scrape."""
         snap = {"steps": self.steps, "pages": self.pages,
                 "queue_depth": len(self.queue),
-                "active_slots": int(self.active.sum())}
+                "active_slots": int(self.active.sum()),
+                "tier": self.tier,
+                "maintenance": self._maintenance()}
         snap.update({name: val for name, val in _metrics.snapshot().items()
                      if name.startswith("serve.")})
         return snap

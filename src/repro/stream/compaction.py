@@ -15,12 +15,15 @@ whole time; writers never block on the k-means.
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
 
 from ..core.index import ProMIPSIndex, build_index
+from ..obs import metrics as _metrics
+from ..robust.faultpoints import fault
 
 
 @dataclass(frozen=True)
@@ -28,9 +31,21 @@ class CompactionConfig:
     """Trigger math (DESIGN.md §8): compact once the churn fraction
     (delta watermark + base tombstones, over base size + delta watermark)
     exceeds ``threshold``. The O(n log n) rebuild is then amortized over at
-    least ``threshold/(1-threshold) * n`` absorbed writes."""
+    least ``threshold/(1-threshold) * n`` absorbed writes.
+
+    Failure policy (DESIGN.md §16): a failed background rebuild is retried
+    up to ``max_retries`` times with exponential backoff
+    (``backoff_s * backoff_mult**attempt``, plus deterministic seeded jitter
+    up to ``jitter`` of the delay) before latching the error for `join()`.
+    Transient faults (an OOM'd k-means, a blip in the allocator) heal
+    without wedging the stream; the freeze is reused across retries, so the
+    op log keeps absorbing writes throughout."""
 
     threshold: float = 0.3
+    max_retries: int = 0
+    backoff_s: float = 0.05
+    backoff_mult: float = 2.0
+    jitter: float = 0.25
 
 
 def rebuild_base(gids: np.ndarray, rows: np.ndarray, build_kwargs: dict) -> ProMIPSIndex:
@@ -40,6 +55,7 @@ def rebuild_base(gids: np.ndarray, rows: np.ndarray, build_kwargs: dict) -> ProM
     rebuilds over the same surviving set (in any presentation order) are
     bit-identical.
     """
+    fault.at("compaction.rebuild")
     order = np.argsort(gids, kind="stable")
     g = np.asarray(gids)[order]
     idx = build_index(np.ascontiguousarray(rows[order], np.float32), **build_kwargs)
@@ -57,7 +73,10 @@ class Compactor:
         self._thread: Optional[threading.Thread] = None
         self._join_lock = threading.Lock()   # serializes concurrent joiners
         self.runs = 0
+        self.failures = 0                    # rebuild attempts that raised
+        self.retries = 0                     # failures that were retried
         self.error: Optional[BaseException] = None
+        self.last_error: Optional[str] = None  # survives join() for health()
 
     @property
     def in_flight(self) -> bool:
@@ -87,21 +106,51 @@ class Compactor:
 
         self.error = None
 
+        cfg = self.cfg
+        # deterministic jitter: seeded off the rebuild seed + run count so
+        # two replicas don't thundering-herd, yet a test run is reproducible
+        jit = np.random.RandomState(
+            (int(stream.build_kwargs.get("seed", 0)) + self.runs) & 0x7FFFFFFF)
+
         def run():
-            try:
-                new_base = rebuild_base(gids, rows, stream.build_kwargs)
-                stream._install_compacted(new_base)
-                self.runs += 1
-            except BaseException as e:  # noqa: BLE001 — must not wedge the stream
-                # the freeze only COPIED state and ops were applied live, so
-                # abandoning = closing the op log; writes stay intact and the
-                # next trigger retries. The error surfaces on join().
-                self.error = e
-                stream._abandon_compaction()
+            for attempt in range(cfg.max_retries + 1):
+                try:
+                    new_base = rebuild_base(gids, rows, stream.build_kwargs)
+                    stream._install_compacted(new_base)
+                    self.runs += 1
+                    return
+                except BaseException as e:  # noqa: BLE001 — must not wedge the stream
+                    self.failures += 1
+                    self.last_error = f"{type(e).__name__}: {e}"
+                    if _metrics.enabled():
+                        _metrics.counter("stream.compaction_errors").inc()
+                    if attempt < cfg.max_retries:
+                        self.retries += 1
+                        if _metrics.enabled():
+                            _metrics.counter("stream.compaction_retries").inc()
+                        delay = cfg.backoff_s * cfg.backoff_mult ** attempt
+                        time.sleep(delay * (1.0 + cfg.jitter * jit.rand()))
+                        continue
+                    # retries exhausted: the freeze only COPIED state and ops
+                    # were applied live, so abandoning = closing the op log;
+                    # writes stay intact and the next trigger retries. The
+                    # error latches and surfaces on join().
+                    self.error = e
+                    stream._abandon_compaction()
 
         self._thread = threading.Thread(target=run, name="promips-compaction",
                                         daemon=True)
         self._thread.start()
+
+    def status(self) -> dict:
+        """Snapshot for `engine.health()` / `maintenance_status()` — the
+        latched error is surfaced (not cleared; `join()` clears), and
+        ``last_error`` persists even after a successful retry so operators
+        can see a flapping rebuild."""
+        return {"in_flight": self.in_flight, "runs": self.runs,
+                "failures": self.failures, "retries": self.retries,
+                "error_latched": self.error is not None,
+                "last_error": self.last_error}
 
     def join(self, timeout: Optional[float] = None) -> None:
         """Safe under concurrent callers (e.g. two writers both waiting on a

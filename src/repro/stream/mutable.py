@@ -56,6 +56,7 @@ class MutableProMIPS:
         self._lock = threading.RLock()
         self._oplog: Optional[list] = None   # open while a rebuild is in flight
         self._defer_trigger = False          # True inside update()'s two halves
+        self._init_wal_state()
         self._delta_capacity = (int(delta_capacity) if delta_capacity
                                 else max(64, n // 2))
         self._set_base(rebuild_base(gids, x, self.build_kwargs))
@@ -129,8 +130,50 @@ class MutableProMIPS:
         self._epoch += 1
         self._snap = None
         if (self.compactor is not None and self._oplog is None
-                and not self._defer_trigger):
+                and not self._defer_trigger and not self._wal_replaying):
             self.compactor.maybe_trigger(self)
+
+    # -- durability (robust/wal.py, DESIGN.md §16) ---------------------------
+    def _init_wal_state(self) -> None:
+        self._wal = None             # attached WriteAheadLog, if any
+        self._wal_seq = 0            # seq of the last record durably logged
+        self._wal_floor = 0          # seq baked into the last snapshot
+        self._wal_suspended = False  # True while replaying the compaction
+        #                              op log (those ops were already logged
+        #                              live the first time)
+        self._wal_replaying = False  # True during crash-recovery replay:
+        #                              nothing is re-logged and auto-compaction
+        #                              must not fire (replay drives compaction
+        #                              from the recorded markers instead)
+
+    def attach_wal(self, wal) -> None:
+        """Bind a `robust.WriteAheadLog`; every subsequent acknowledged
+        mutation is logged BEFORE it is applied."""
+        with self._lock:
+            self._wal = wal
+
+    def wal_lag(self) -> int:
+        """Records logged since the snapshot this stream was restored from
+        (0 when no WAL is attached) — what replay would have to redo."""
+        with self._lock:
+            return self._wal_seq - self._wal_floor if self._wal is not None else 0
+
+    def mark_wal_floor(self) -> None:
+        """Called by checkpoint after a snapshot lands: replay skips
+        everything at or below the current seq."""
+        with self._lock:
+            self._wal_floor = self._wal_seq
+
+    def _wal_append(self, op: str, gids=None, rows=None) -> None:
+        # Log-before-apply at the exact point the mutation begins. The seq
+        # is bumped only AFTER the append succeeds, so a failed write (disk
+        # error, injected fault) rejects the op cleanly without burning a
+        # sequence number.
+        if (self._wal is None or self._wal_suspended
+                or self._wal_replaying):
+            return
+        self._wal.append(self._wal_seq + 1, op, gids, rows)
+        self._wal_seq += 1
 
     # -- writes --------------------------------------------------------------
     @staticmethod
@@ -168,6 +211,10 @@ class MutableProMIPS:
                 if not full or self._oplog is None:
                     if full:
                         self.compact()
+                    # logged AFTER any self-compaction (whose begin/commit
+                    # markers precede this record) and BEFORE the append, so
+                    # replay sees the exact live op order
+                    self._wal_append("insert", gids, rows)
                     slots = self._delta.append(gids, rows)
                     for g, s in zip(gids, slots):
                         self._slot_of[int(g)] = int(s)
@@ -209,6 +256,7 @@ class MutableProMIPS:
             for g in gids:
                 if not self._is_alive(int(g)):
                     raise KeyError(f"id {int(g)} is not alive")
+            self._wal_append("delete", gids)
             for g in gids:
                 g = int(g)
                 slot = self._slot_of.get(g)
@@ -305,6 +353,9 @@ class MutableProMIPS:
         with self._lock:
             if self._oplog is not None:
                 raise RuntimeError("compaction already in flight")
+            # the begin marker sits EXACTLY at the freeze point in the op
+            # order: replay freezes over the same live set
+            self._wal_append("compact_begin")
             gids, rows = self.alive_items()
             self._oplog = []
             return gids, rows
@@ -313,16 +364,24 @@ class MutableProMIPS:
         """Atomically swap in the rebuilt base, reset the delta, and replay
         the writes that landed while the rebuild ran."""
         with self._lock:
+            # the commit marker sits at the install point; the op-log replay
+            # below is NOT re-logged (each op already has its own record
+            # from when it was applied live, between begin and commit)
+            self._wal_append("compact_commit")
             ops, self._oplog = self._oplog, None
             self._set_base(new_base)
             self._reset_delta()
             self._epoch += 1
             self._snap = None
-            for op in ops:
-                if op[0] == "insert":
-                    self.insert(op[1], op[2])
-                else:
-                    self.delete(op[1])
+            prev, self._wal_suspended = self._wal_suspended, True
+            try:
+                for op in ops:
+                    if op[0] == "insert":
+                        self.insert(op[1], op[2])
+                    else:
+                        self.delete(op[1])
+            finally:
+                self._wal_suspended = prev
         # counted HERE (not in compact()) so the background Compactor's
         # installs land in the same counter as synchronous compactions
         if _metrics.enabled():
@@ -333,6 +392,7 @@ class MutableProMIPS:
         copied state and logged ops were ALSO applied live, so discarding the
         log loses nothing; the next trigger simply retries."""
         with self._lock:
+            self._wal_append("compact_abort")
             self._oplog = None
 
     def compact(self) -> None:
@@ -386,6 +446,7 @@ class MutableProMIPS:
                 build_kwargs=dict(self.build_kwargs),
                 delta_capacity=int(d.capacity),
                 next_id=int(self._next_id),
+                wal_seq=int(self._wal_seq),
                 auto_compact=self.compactor is not None,
                 compaction=dataclasses.asdict(
                     self.compactor.cfg if self.compactor is not None
@@ -411,6 +472,8 @@ class MutableProMIPS:
         obj._lock = threading.RLock()
         obj._oplog = None
         obj._defer_trigger = False
+        obj._init_wal_state()
+        obj._wal_seq = obj._wal_floor = int(meta.get("wal_seq", 0))
         obj._delta_capacity = int(meta["delta_capacity"])
         obj._set_base(base)
         obj._base_alive = np.asarray(arrays["base_alive"], bool).copy()

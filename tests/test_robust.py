@@ -1,0 +1,599 @@
+"""Durability + fault-injection subsystem (DESIGN.md §16): WAL crash-recovery
+bit-parity at every record boundary, checksummed atomic snapshots, compaction
+retry under injected faults, and the serve-path degradation ladder."""
+import json
+import os
+import struct
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.robust import (CorruptSnapshotError, FaultInjected, FaultInjector,
+                          WAL_MAGIC, WalCorruptError, EwmaWatchdog, fault,
+                          read_records, recover)
+from repro.robust.wal import _HDR
+from repro.stream import MutableProMIPS
+from repro.stream.compaction import CompactionConfig
+
+D = 16
+BUILD = dict(m=4)
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    fault.disarm()
+    yield
+    fault.disarm()
+
+
+def _corpus(n=240, seed=0):
+    rng = np.random.RandomState(seed)
+    return rng.randn(n, D).astype(np.float32), rng
+
+
+def _queries(rng, b=5):
+    return rng.randn(b, D).astype(np.float32)
+
+
+def _result_tuple(searcher, q, k=8):
+    res = searcher.search(q, k=k)
+    stats = dict(res.stats)
+    stats.pop("wall_time_s", None)
+    return np.asarray(res.ids), np.asarray(res.scores), stats
+
+
+def _record_boundaries(wal_path):
+    """Byte offset of every record boundary (including the magic-only 0th)."""
+    blob = open(wal_path, "rb").read()
+    offs = [len(WAL_MAGIC)]
+    off = len(WAL_MAGIC)
+    while off + _HDR.size <= len(blob):
+        length, _crc = _HDR.unpack_from(blob, off)
+        off += _HDR.size + length
+        assert off <= len(blob)
+        offs.append(off)
+    return blob, offs
+
+
+# ---------------------------------------------------------------------------
+# WAL framing
+# ---------------------------------------------------------------------------
+
+def test_wal_records_roundtrip(tmp_path):
+    x, rng = _corpus()
+    wd = str(tmp_path / "wal")
+    s = api.build(x, backend="promips-stream", seed=1, wal_dir=wd,
+                  delta_capacity=64, **BUILD)
+    s.insert([500, 501], rng.randn(2, D))
+    s.delete([0, 1])
+    s.update([10], rng.randn(1, D))
+    recs, good, clean = read_records(os.path.join(wd, "wal.log"))
+    assert clean
+    assert [r.op for r in recs] == ["insert", "delete", "delete", "insert"]
+    assert [r.seq for r in recs] == [1, 2, 3, 4]
+    assert np.array_equal(recs[0].gids, [500, 501])
+    assert recs[0].rows.shape == (2, D)
+    assert recs[0].rows.dtype == np.float32
+
+
+def test_wal_torn_tail_truncated_midlog_corruption_fatal(tmp_path):
+    x, rng = _corpus()
+    wd = str(tmp_path / "wal")
+    s = api.build(x, backend="promips-stream", seed=1, wal_dir=wd,
+                  delta_capacity=64, **BUILD)
+    s.insert([500], rng.randn(1, D))
+    s.delete([0])
+    path = os.path.join(wd, "wal.log")
+    blob, offs = _record_boundaries(path)
+
+    # torn tail: half of the final record -> truncated, not an error
+    open(path, "wb").write(blob[: (offs[1] + offs[2]) // 2])
+    recs, good, clean = read_records(path)
+    assert [r.op for r in recs] == ["insert"] and not clean
+    assert good == offs[1]
+
+    # mid-log corruption: flip a byte of record 0's payload -> fatal
+    bad = bytearray(blob)
+    bad[offs[0] + _HDR.size + 2] ^= 0xFF
+    open(path, "wb").write(bytes(bad))
+    with pytest.raises(WalCorruptError, match="mid-log"):
+        read_records(path)
+
+
+def test_wal_fsync_policy_validated(tmp_path):
+    with pytest.raises(ValueError, match="fsync"):
+        api.build(_corpus(n=120)[0], backend="promips-stream", seed=1,
+                  wal_dir=str(tmp_path / "w"), wal_fsync="sometimes", **BUILD)
+
+
+def test_wal_requires_mutable_backend(tmp_path):
+    x, _ = _corpus()
+    with pytest.raises(ValueError, match="wal_dir"):
+        api.build(x, backend="promips", seed=1,
+                  wal_dir=str(tmp_path / "w"), **BUILD)
+    # and recover() refuses a non-stream snapshot
+    s = api.build(x, backend="promips", seed=1, **BUILD)
+    s.save(str(tmp_path / "r" / "snapshot"))
+    with pytest.raises(ValueError, match="WAL-capable"):
+        recover(str(tmp_path / "r"))
+
+
+# ---------------------------------------------------------------------------
+# crash-recovery bit-parity, a crash injected at EVERY record boundary
+# ---------------------------------------------------------------------------
+
+def _op_script(rng):
+    """(op, args) script covering insert/delete/update/compact, with the
+    per-record shadow expansion each op contributes to the WAL."""
+    return [
+        ("insert", np.arange(400, 420), rng.randn(20, D).astype(np.float32)),
+        ("delete", np.arange(0, 30)),
+        ("update", np.arange(50, 60), rng.randn(10, D).astype(np.float32)),
+        ("compact",),
+        ("insert", np.arange(420, 425), rng.randn(5, D).astype(np.float32)),
+        ("delete", np.array([400, 410, 422])),
+        ("compact",),
+        ("update", np.array([50, 421]), rng.randn(2, D).astype(np.float32)),
+    ]
+
+
+def _apply(stream_or_searcher, op):
+    kind = op[0]
+    if kind == "insert":
+        stream_or_searcher.insert(op[1], op[2])
+    elif kind == "delete":
+        stream_or_searcher.delete(op[1])
+    elif kind == "update":
+        stream_or_searcher.update(op[1], op[2])
+    else:
+        stream_or_searcher.compact()
+
+
+def _shadow_steps(script):
+    """Expand the script into per-WAL-record shadow transitions: the shadow
+    state after record i must equal recovery from a crash right after
+    record i landed. update = its delete half then its insert half;
+    compact = begin (freeze+abandon: a state no-op) then commit (the whole
+    compaction)."""
+    steps = []
+    for op in script:
+        if op[0] == "update":
+            steps.append(("delete", op[1]))
+            steps.append(("insert", op[1], op[2]))
+        elif op[0] == "compact":
+            steps.append(("noop",))
+            steps.append(("compact",))
+        else:
+            steps.append(op)
+    return steps
+
+
+def test_crash_recovery_bit_parity_every_boundary(tmp_path):
+    """THE durability property: for a crash at every record boundary
+    (including a torn final record), snapshot + WAL replay reconstructs a
+    stream whose searches are bit-identical — ids, scores, and every stats
+    field — to an uncrashed stream that executed the same logical prefix."""
+    x, rng = _corpus(n=300, seed=4)
+    q = _queries(rng)
+    wd = str(tmp_path / "wal")
+    primary = api.build(x, backend="promips-stream", seed=2, wal_dir=wd,
+                        delta_capacity=128, **BUILD)
+    script = _op_script(rng)
+    for op in script:
+        _apply(primary, op)
+    path = os.path.join(wd, "wal.log")
+    blob, offs = _record_boundaries(path)
+    steps = _shadow_steps(script)
+    assert len(offs) == len(steps) + 1, "script/record accounting drifted"
+
+    # shadow: same logical ops, NO WAL — the uncrashed reference per prefix
+    shadow = MutableProMIPS(x, delta_capacity=128, **dict(BUILD, seed=2))
+    shadow_states = [_stream_result(shadow, q)]
+    for st in steps:
+        if st[0] != "noop":
+            _apply(shadow, st)
+        shadow_states.append(_stream_result(shadow, q))
+
+    for i, off in enumerate(offs):
+        open(path, "wb").write(blob[:off])
+        if i + 1 < len(offs):  # torn next record on top of a clean prefix
+            open(path, "ab").write(blob[off: (off + offs[i + 1]) // 2 + 1])
+        rec_searcher = recover(wd, attach=False)
+        got = _result_tuple(rec_searcher, q)
+        want = shadow_states[i]
+        assert np.array_equal(got[0], want[0]), f"ids diverge at boundary {i}"
+        assert np.array_equal(got[1], want[1]), f"scores diverge at boundary {i}"
+        assert got[2] == want[2], f"stats diverge at boundary {i}"
+
+
+def _stream_result(stream, q, k=8):
+    ids, scores, stats = stream.search(q, k=k)
+    sd = stats.to_dict()
+    sd.pop("wall_time_s", None)
+    return np.asarray(ids), np.asarray(scores), sd
+
+
+def test_recovery_after_checkpoint_skips_baked_records(tmp_path):
+    """Crash between checkpoint-save and WAL truncate must NOT double-apply:
+    replay skips records with seq <= the snapshot's wal_seq."""
+    x, rng = _corpus()
+    q = _queries(rng)
+    wd = str(tmp_path / "wal")
+    s = api.build(x, backend="promips-stream", seed=1, wal_dir=wd,
+                  delta_capacity=64, **BUILD)
+    s.insert([500, 501], rng.randn(2, D))
+    s.delete([0])
+    # checkpoint WITHOUT truncating the log = the torn middle state
+    s.save(os.path.join(wd, "snapshot"))
+    s.inner.mark_wal_floor()
+    s.insert([502], rng.randn(1, D))
+    ref = _result_tuple(s, q)
+    rec = recover(wd, attach=False)
+    got = _result_tuple(rec, q)
+    assert np.array_equal(ref[0], got[0])
+    assert np.array_equal(ref[1], got[1])
+    assert ref[2] == got[2]
+    assert rec.inner._wal_seq == s.inner._wal_seq
+
+
+def test_wal_append_fault_rejects_op_cleanly(tmp_path):
+    """A failed WAL append (disk error) must reject the op BEFORE any state
+    mutates — acknowledged implies logged."""
+    x, rng = _corpus()
+    wd = str(tmp_path / "wal")
+    s = api.build(x, backend="promips-stream", seed=1, wal_dir=wd,
+                  delta_capacity=64, **BUILD)
+    s.insert([500], rng.randn(1, D))
+    before = s.n
+    fault.arm("wal.append", times=1)
+    with pytest.raises(FaultInjected):
+        s.insert([501], rng.randn(1, D))
+    assert s.n == before
+    with pytest.raises(KeyError):
+        s.delete([501])  # never applied
+    s.insert([501], rng.randn(1, D))  # fault exhausted; op logs + applies
+    recs, _, _ = read_records(os.path.join(wd, "wal.log"))
+    assert [r.seq for r in recs] == [1, 2], "failed append must not burn seq"
+
+
+# ---------------------------------------------------------------------------
+# checksummed atomic snapshots
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def saved_index(tmp_path_factory):
+    x, rng = _corpus()
+    s = api.build(x, backend="promips", seed=5, **BUILD)
+    path = str(tmp_path_factory.mktemp("snap") / "idx")
+    s.save(path)
+    q = _queries(rng)
+    return path, q, _result_tuple(s, q)
+
+
+def _copy_dir(src, dst):
+    import shutil
+    shutil.copytree(src, dst)
+    return str(dst)
+
+
+def test_snapshot_manifest_written_and_verifies(saved_index):
+    path, q, _ = saved_index
+    man = json.load(open(os.path.join(path, "manifest.json")))
+    assert set(man["files"]) == {"arrays.npz", "meta.json"}
+    assert man["format"] == "repro.api-index"
+    assert "commit" in man["provenance"]
+    api.load(path)  # verifies + loads
+
+
+def test_snapshot_corruption_matrix(saved_index, tmp_path):
+    path, q, _ = saved_index
+    # truncated arrays.npz
+    p1 = _copy_dir(path, tmp_path / "trunc")
+    f = os.path.join(p1, "arrays.npz")
+    open(f, "r+b").truncate(os.path.getsize(f) // 2)
+    with pytest.raises(CorruptSnapshotError, match="arrays.npz"):
+        api.load(p1)
+    # bit-flipped meta.json
+    p2 = _copy_dir(path, tmp_path / "flip")
+    f = os.path.join(p2, "meta.json")
+    b = bytearray(open(f, "rb").read())
+    b[len(b) // 2] ^= 0x01
+    open(f, "wb").write(bytes(b))
+    with pytest.raises(CorruptSnapshotError, match="meta.json"):
+        api.load(p2)
+    # manifest-listed file missing on disk
+    p3 = _copy_dir(path, tmp_path / "missing")
+    os.remove(os.path.join(p3, "arrays.npz"))
+    with pytest.raises(CorruptSnapshotError, match="missing"):
+        api.load(p3)
+    # unreadable manifest
+    p4 = _copy_dir(path, tmp_path / "badman")
+    open(os.path.join(p4, "manifest.json"), "w").write("{not json")
+    with pytest.raises(CorruptSnapshotError, match="manifest.json"):
+        api.load(p4)
+
+
+def test_legacy_manifestless_snapshot_loads_with_warning(saved_index, tmp_path):
+    path, q, want = saved_index
+    p = _copy_dir(path, tmp_path / "legacy")
+    os.remove(os.path.join(p, "manifest.json"))
+    with pytest.warns(UserWarning, match="UNVERIFIED"):
+        s = api.load(p)
+    got = _result_tuple(s, q)
+    assert np.array_equal(got[0], want[0])
+
+
+def test_save_is_atomic_under_injected_fault(saved_index, tmp_path):
+    """A fault mid-save leaves the PREVIOUS snapshot fully intact."""
+    path, q, want = saved_index
+    p = _copy_dir(path, tmp_path / "atomic")
+    s = api.load(p)
+    fault.arm("snapshot.write", after=1, times=1)  # fail on the 2nd file
+    with pytest.raises(FaultInjected):
+        s.save(p)
+    s2 = api.load(p)  # previous snapshot still verifies + loads
+    got = _result_tuple(s2, q)
+    assert np.array_equal(got[0], want[0])
+    assert not [d for d in os.listdir(os.path.dirname(p))
+                if d.startswith(".save-tmp")], "temp dir leaked"
+
+
+# ---------------------------------------------------------------------------
+# compaction retry under injected faults
+# ---------------------------------------------------------------------------
+
+def _churn(searcher, rng, start=1000, n=120):
+    searcher.insert(np.arange(start, start + n),
+                    rng.randn(n, D).astype(np.float32))
+    searcher.delete(np.arange(start, start + n))
+
+
+def test_compaction_fail_backoff_retry_success():
+    x, rng = _corpus(n=200)
+    s = api.build(x, backend="promips-stream", seed=1, delta_capacity=256,
+                  auto_compact=True,
+                  compaction=CompactionConfig(threshold=0.3, max_retries=3,
+                                              backoff_s=0.001), **BUILD)
+    fault.arm("compaction.rebuild", times=2)
+    _churn(s, rng)  # crosses the churn threshold -> background compaction
+    s.flush()
+    st = s.maintenance_status()
+    assert st["compaction"]["runs"] == 1, "retry must eventually install"
+    assert st["compaction"]["failures"] == 2
+    assert st["compaction"]["retries"] == 2
+    assert not st["compaction"]["error_latched"]
+    assert "FaultInjected" in st["compaction"]["last_error"]
+    hits, fired = fault.counts("compaction.rebuild")
+    assert fired == 2
+
+
+def test_compaction_retries_exhausted_latches_error():
+    x, rng = _corpus(n=200)
+    s = api.build(x, backend="promips-stream", seed=1, delta_capacity=256,
+                  auto_compact=True,
+                  compaction=CompactionConfig(threshold=0.3, max_retries=1,
+                                              backoff_s=0.001), **BUILD)
+    fault.arm("compaction.rebuild")  # p=1.0, unbounded: every attempt fails
+    _churn(s, rng)
+    time.sleep(0.05)
+    st = s.maintenance_status()
+    assert st["compaction"]["error_latched"] or s.inner.compactor.in_flight
+    with pytest.raises(RuntimeError, match="compaction failed"):
+        s.flush()
+    fault.disarm()
+    # stream stays fully usable; the next trigger succeeds
+    _churn(s, rng, start=2000)
+    s.flush()
+    assert s.maintenance_status()["compaction"]["runs"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# fault injector semantics
+# ---------------------------------------------------------------------------
+
+def test_fault_injector_arming_and_counts():
+    fi = FaultInjector()
+    with pytest.raises(ValueError, match="unknown fault point"):
+        fi.arm("no.such.point")
+    fi.arm("wal.append", after=2, times=2)
+    fired = [fi.fires("wal.append") for _ in range(6)]
+    assert fired == [False, False, True, True, False, False]
+    hits, nfired = fi.counts("wal.append")
+    assert (hits, nfired) == (6, 2)
+
+
+def test_fault_injector_seeded_probability_deterministic():
+    a = FaultInjector()
+    b = FaultInjector()
+    a.arm("serve.decode", p=0.3, seed=11)
+    b.arm("serve.decode", p=0.3, seed=11)
+    fa = [a.fires("serve.decode") for _ in range(50)]
+    fb = [b.fires("serve.decode") for _ in range(50)]
+    assert fa == fb and any(fa) and not all(fa)
+
+
+def test_fault_injector_env_spec():
+    fi = FaultInjector("wal.append:1.0:2:1,snapshot.write:0.5")
+    assert fi.armed("wal.append") and fi.armed("snapshot.write")
+    fired = [fi.fires("wal.append") for _ in range(5)]
+    assert fired == [False, False, True, False, False]
+
+
+# ---------------------------------------------------------------------------
+# boundary validation (api + engine submit)
+# ---------------------------------------------------------------------------
+
+def test_search_rejects_malformed_queries():
+    x, rng = _corpus(n=120)
+    s = api.build(x, backend="promips", seed=1, **BUILD)
+    q = _queries(rng, b=2)
+    with pytest.raises(ValueError, match="non-finite"):
+        s.search(np.where(np.eye(2, D, dtype=bool), np.nan, q))
+    with pytest.raises(ValueError, match="non-finite"):
+        s.search(np.full((1, D), np.inf, np.float32))
+    with pytest.raises(ValueError, match="dimension"):
+        s.search(np.ones((2, D + 3), np.float32))
+    with pytest.raises(ValueError, match="\\(B, d\\)"):
+        s.search(np.ones((2, 2, D), np.float32))
+    with pytest.raises(ValueError, match="floating"):
+        s.search(jax.numpy.ones((2, D), jax.numpy.int32))
+    # 1-D row and int lists still pass (cast, promoted to a batch of one)
+    assert s.search(q[0]).ids.shape == (1, 8 if False else s.guarantee.k)
+
+
+def test_stream_and_baseline_validation_share_the_boundary():
+    x, rng = _corpus(n=120)
+    for backend in ("promips-stream", "exact"):
+        s = api.build(x, backend=backend, seed=1,
+                      **(BUILD if backend != "exact" else {}))
+        with pytest.raises(ValueError, match="non-finite"):
+            s.search(np.full((1, D), np.nan, np.float32))
+        with pytest.raises(ValueError, match="dimension"):
+            s.search(np.ones((1, D + 1), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# serve: degradation ladder + deadlines + health
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_model():
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(small_model, **kw):
+    from repro.serve import DecodeEngine
+    cfg, params = small_model
+    return DecodeEngine(params, cfg, batch_slots=2, max_len=64,
+                        logits_mode="promips", **kw)
+
+
+def test_degradation_ladder_steps_down_and_recovers(small_model):
+    from repro.serve import DegradationPolicy
+    pol = DegradationPolicy(tiers=(1.0, 0.5, 0.25),
+                            recall_floors=(0.95, 0.8, 0.5),
+                            queue_high=3, queue_low=1, patience=2, recovery=3)
+    eng = _engine(small_model, degradation=pol, max_queue=16)
+    assert eng._tier_budgets[0] is None
+    assert (eng._tier_budgets[1] or 0) > (eng._tier_budgets[2] or 0) > 0
+    rng = np.random.RandomState(0)
+    vocab = small_model[0].vocab
+    for _ in range(10):
+        eng.submit(rng.randint(1, vocab, size=5), max_new_tokens=6)
+    assert eng.health()["state"] == "ok"
+    seen_tiers = set()
+    while eng.queue or eng.active.any():
+        eng.step()
+        seen_tiers.add(eng.tier)
+    assert eng.stepdowns >= 1, "sustained deep queue must step down"
+    assert max(seen_tiers) >= 1
+    for _ in range(pol.recovery + 2):   # idle calm ticks step back up
+        eng.step()
+    assert eng.tier == 0 and eng.stepups >= 1
+    h = eng.health()
+    assert h["state"] == "ok" and h["tier_recall_floor"] == 0.95
+    assert set(h) >= {"step_latency_ewma_s", "compaction", "wal_lag",
+                      "stepdowns", "stepups", "shed", "deadline_drops"}
+
+
+def test_tier_budget_reduces_work(small_model):
+    """A cheaper tier touches strictly less of the index for the same
+    queries — the latency lever the ladder actually pulls."""
+    from repro.serve import DegradationPolicy
+    pol = DegradationPolicy(tiers=(1.0, 0.25), recall_floors=(1.0, 0.1),
+                            queue_high=3, queue_low=1)
+    eng = _engine(small_model, degradation=pol)
+    rng = np.random.RandomState(1)
+    q = rng.randn(3, small_model[0].d_model).astype(np.float32)
+    full = eng.index.search(q, k=4, runtime=eng.search_runtime)
+    eng.tier = 1
+    cheap = eng.index.search(q, k=4, runtime=eng._tier_runtime())
+    assert cheap.stats["pages"] < full.stats["pages"]
+
+
+def test_deadlines_drop_queued_and_terminate_active(small_model):
+    eng = _engine(small_model, max_queue=8)
+    rng = np.random.RandomState(2)
+    vocab = small_model[0].vocab
+    # expires while queued (engine never steps until after the deadline)
+    r1 = eng.submit(rng.randint(1, vocab, size=4), deadline_s=0.001)
+    # expires mid-decode
+    r2 = eng.submit(rng.randint(1, vocab, size=4), max_new_tokens=200,
+                    deadline_s=0.05)
+    time.sleep(0.002)
+    eng.run(max_steps=500)
+    assert r1.expired and not r1.out_tokens
+    assert r2.expired and r2.out_tokens, "partial tokens retained"
+    assert eng.deadline_drops == 2
+    assert not eng.active.any() and not eng.queue
+
+
+def test_submit_validates_prompts(small_model):
+    eng = _engine(small_model)
+    vocab = small_model[0].vocab
+    with pytest.raises(ValueError, match="non-empty"):
+        eng.submit(np.array([], np.int32))
+    with pytest.raises(ValueError, match="integers"):
+        eng.submit(np.array([1.5, 2.5]))
+    with pytest.raises(ValueError, match="token ids"):
+        eng.submit(np.array([0, vocab]))
+    with pytest.raises(ValueError, match="token ids"):
+        eng.submit(np.array([-1, 2]))
+    with pytest.raises(ValueError, match="1-D"):
+        eng.submit(np.ones((2, 3), np.int32))
+
+
+def test_engine_surfaces_compaction_error(small_model):
+    """Satellite 1: a latched background-compaction error is visible in
+    health() / metrics_snapshot() without waiting for the next join()."""
+    eng = _engine(small_model)
+    rng = np.random.RandomState(3)
+    fault.arm("compaction.rebuild")
+    d = small_model[0].d_model
+    n0 = eng.index.n
+    ids = np.arange(10_000, 10_000 + n0 // 2)
+    eng.index.insert(ids, rng.randn(len(ids), d).astype(np.float32))
+    eng.index.delete(ids)   # churn past the default threshold
+    deadline = time.time() + 5
+    while time.time() < deadline:
+        h = eng.health()
+        if h["compaction"] and h["compaction"]["error_latched"]:
+            break
+        time.sleep(0.01)
+    assert h["compaction"]["error_latched"]
+    assert "FaultInjected" in h["compaction"]["last_error"]
+    assert eng.metrics_snapshot()["maintenance"]["compaction"]["error_latched"]
+    fault.disarm()
+    with pytest.raises(RuntimeError):
+        eng.join_compaction()   # join still surfaces (and clears) it
+
+
+def test_serve_decode_fault_point(small_model):
+    eng = _engine(small_model)
+    fault.arm("serve.decode", times=1)
+    eng.submit(np.arange(1, 5))
+    with pytest.raises(FaultInjected):
+        eng.step()
+    eng.run(max_steps=50)   # engine survives; request completes
+    assert not eng.queue and not eng.active.any()
+
+
+# ---------------------------------------------------------------------------
+# shared watchdog
+# ---------------------------------------------------------------------------
+
+def test_watchdog_is_the_straggler_monitor():
+    from repro.distributed.fault import StragglerMonitor
+    assert StragglerMonitor is EwmaWatchdog
+    wd = EwmaWatchdog(threshold=2.0)
+    assert not wd.observe(1.0)      # seed sample never flags
+    assert not wd.observe(1.5)
+    assert wd.observe(10.0)
+    assert wd.events == 1
