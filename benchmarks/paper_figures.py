@@ -1322,3 +1322,179 @@ def bench_robust(quick: bool = True):
     with open(os.path.join(root, "BENCH_robust.json"), "w") as f:
         json.dump(rec, f, indent=1)
     return rows_out
+
+
+def bench_serve(quick: bool = True):
+    """Serve-frontend tier (DESIGN.md §17): the numbers the continuous-
+    batching engine + hot-query cache sell, each guarded by ci.sh.
+
+      ramp       open-loop Zipfian load whose arrival rate ramps up until
+                 it trips the degradation ladder and the admission cap:
+                 p50/p99 request latency + queue wait, completed queries/s,
+                 shed/expired fractions, per-tier step occupancy, cache hit
+                 rate. Guarded: p99 <= declared bound, queries/s >= floor.
+      cache      the same hot Zipfian pool replayed at saturation (arrivals
+                 due immediately, so the engine is the bottleneck) through
+                 a cache-on and a cache-off engine, alternating order per
+                 rep; rep 0 absorbs compiles and is dropped. Guarded:
+                 cache-on throughput >= cache-off.
+      cold       distinct prompts decoded cache-on and cache-off — token
+                 streams must be BIT-identical (all misses: the cache may
+                 not change what is decoded). Guarded.
+      inactive   one request on a 4-slot engine: the decode search may
+                 touch only the active row (searched_rows == decode steps;
+                 the pre-§17 engine searched all 4 and counted their
+                 pages). Guarded structurally, pages vs a 1-slot engine
+                 reported alongside.
+
+    Writes BENCH_serve.json at the repo root.
+    """
+    import json
+    import os
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serve import (DecodeEngine, DegradationPolicy, LoadgenConfig,
+                             generate, run_load)
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    pkw = dict(m=8, c=0.95, p=0.95)
+
+    def mk(**kw):
+        return DecodeEngine(params, cfg, max_len=64, logits_mode="promips",
+                            promips_kwargs=dict(pkw), **kw)
+
+    rows_out = []
+    rec = {"model": "tinyllama-1.1b(reduced)", "vocab": int(cfg.vocab),
+           "d_model": int(cfg.d_model),
+           # declared SLA bounds ci.sh guards the ramp arm against (wide
+           # margins over the measured values on this CPU box: the guard
+           # catches a serve-path collapse, not scheduler jitter)
+           # hot_speedup_floor is 0.9, not 1.0: at vocab=512 the
+           # transformer forward dominates the step, so the cache's saved
+           # search time sits inside run-to-run scheduler noise (~±5%);
+           # the guard pairs it with the STRUCTURAL check that cache-on
+           # actually searched fewer rows, which is noise-free.
+           # measured on this box: p99 4.5-8.3s, qps 1.1-1.8 across runs
+           "declared": {"latency_p99_bound_s": 15.0,
+                        "queries_per_s_floor": 0.5,
+                        "hot_speedup_floor": 0.9}}
+
+    # -- ramp: trip the ladder + the admission cap on purpose -------------
+    n_req = 48 if quick else 160
+    # recovery=3: the drain tail after the last arrival is the only calm
+    # stretch the ladder gets to climb back in before the run ends, and it
+    # is ~6-10 steps long at this request mix
+    pol = DegradationPolicy(tiers=(1.0, 0.5, 0.25),
+                            recall_floors=(0.95, 0.8, 0.5),
+                            queue_high=4, queue_low=1, patience=2,
+                            recovery=3)
+    eng = mk(batch_slots=4, degradation=pol, max_queue=8, result_cache=256)
+    # the reduced engine saturates around ~7 qps on the CPU oracle: start
+    # under capacity and ramp to ~3x over it, so the run crosses from "ok"
+    # into the ladder + shedding instead of collapsing from t=0
+    lg_ramp = LoadgenConfig(
+        rate_qps=4.0, n_requests=n_req, zipf_s=1.1, pool_size=12,
+        prompt_lens=(4, 8), max_new_tokens_choices=(4, 8),
+        deadline_mix=((None, 3.0), (1.0, 1.0)), ramp=5.0, seed=0)
+    # replay the identical schedule once UNTIMED first: every (group size,
+    # prompt length) prefill shape, every miss-row search width and every
+    # ladder tier XLA-compiles on first sight, and those multi-second
+    # stalls would otherwise be measured as queue wait / latency. The
+    # timed replay below then runs compile-free on a warm engine; ladder
+    # and cache counters are reported as deltas across it.
+    run_load(eng, generate(lg_ramp, cfg.vocab), max_wall_s=120.0)
+    sd0, su0 = eng.stepdowns, eng.stepups
+    h0, m0 = eng.qcache.hits, eng.qcache.misses
+    ramp = run_load(eng, generate(lg_ramp, cfg.vocab), max_wall_s=120.0)
+    ramp["stepdowns"] -= sd0
+    ramp["stepups"] -= su0
+    ramp["cache"] = dict(eng.qcache.stats())
+    dh, dm = eng.qcache.hits - h0, eng.qcache.misses - m0
+    ramp["cache"].update(hits=dh, misses=dm,
+                         hit_rate=dh / max(dh + dm, 1))
+    rec["ramp"] = ramp
+    rec["ramp"]["config"] = {"rate_qps": lg_ramp.rate_qps,
+                             "ramp": lg_ramp.ramp, "zipf_s": lg_ramp.zipf_s,
+                             "pool_size": lg_ramp.pool_size}
+    rows_out.append((
+        "serve/ramp_p99", ramp["latency_p99_s"] * 1e6,
+        f"p50={ramp['latency_p50_s']*1e3:.1f}ms;"
+        f"qps={ramp['queries_per_s']:.1f};shed={ramp['shed_frac']:.2f};"
+        f"expired={ramp['expired_frac']:.2f};"
+        f"hit_rate={ramp['cache']['hit_rate']:.2f};"
+        f"max_tier={ramp['max_tier']}"))
+
+    # -- cache on/off throughput at saturation ----------------------------
+    reps = 3 if quick else 5
+    lg_hot = LoadgenConfig(
+        rate_qps=1e5, n_requests=(32 if quick else 96), zipf_s=1.2,
+        pool_size=8, prompt_lens=(6, 6), max_new_tokens_choices=(6,),
+        ramp=1.0, seed=1)
+    eng_on = mk(batch_slots=4, result_cache=512)
+    eng_off = mk(batch_slots=4, result_cache=0)
+    walls = {"on": [], "off": []}
+    for r in range(reps + 1):           # rep 0 = compile warmup, dropped
+        order = (("on", eng_on), ("off", eng_off)) if r % 2 == 0 else \
+                (("off", eng_off), ("on", eng_on))
+        for label, e in order:
+            s = run_load(e, generate(lg_hot, cfg.vocab), max_wall_s=120.0)
+            if r > 0:
+                walls[label].append(s["wall_s"])
+            if label == "on":
+                hot_on = s
+            else:
+                hot_off = s
+    qps_on = lg_hot.n_requests / float(np.median(walls["on"]))
+    qps_off = lg_hot.n_requests / float(np.median(walls["off"]))
+    rec["hot"] = {
+        "cache_on_qps": qps_on, "cache_off_qps": qps_off,
+        "speedup_cache_on_vs_off": qps_on / qps_off,
+        "cache_hit_rate": eng_on.qcache.hit_rate,
+        "searched_rows_on": eng_on.searched_rows,
+        "searched_rows_off": eng_off.searched_rows,
+        "zipf_s": lg_hot.zipf_s, "pool_size": lg_hot.pool_size,
+        "reps": reps,
+    }
+    rows_out.append((
+        "serve/hot_zipf", 1e6 / qps_on,
+        f"qps_on={qps_on:.1f};qps_off={qps_off:.1f};"
+        f"speedup=x{qps_on/qps_off:.2f};"
+        f"hit_rate={eng_on.qcache.hit_rate:.2f}"))
+
+    # -- cold bit-parity --------------------------------------------------
+    prng = np.random.RandomState(5)
+    prompts = [prng.randint(1, cfg.vocab, size=6) for _ in range(6)]
+    tokens = {}
+    for cap in (0, 64):
+        e = mk(batch_slots=2, result_cache=cap)
+        reqs = [e.submit(p, max_new_tokens=5) for p in prompts]
+        e.run()
+        tokens[cap] = [r.out_tokens for r in reqs]
+    rec["cache_cold_bit_parity"] = bool(tokens[0] == tokens[64])
+    rows_out.append(("serve/cold_parity", 0.0,
+                     f"bit_parity={rec['cache_cold_bit_parity']}"))
+
+    # -- inactive-slot page accounting ------------------------------------
+    prompt = prng.randint(1, cfg.vocab, size=6)
+    pages = {}
+    for b in (1, 4):
+        e = mk(batch_slots=b, result_cache=0)
+        r = e.submit(prompt, max_new_tokens=6)
+        e.run()
+        pages[b] = (e.pages, e.searched_rows, len(r.out_tokens) - 1)
+    rec["inactive_slot_pages_zero"] = bool(pages[4][1] == pages[4][2])
+    rec["pages_single_req_4slots"] = int(pages[4][0])
+    rec["pages_single_req_1slot"] = int(pages[1][0])
+    rows_out.append((
+        "serve/inactive_pages", 0.0,
+        f"zero_inactive={rec['inactive_slot_pages_zero']};"
+        f"pages_4slot={pages[4][0]};pages_1slot={pages[1][0]}"))
+
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    with open(os.path.join(root, "BENCH_serve.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rows_out

@@ -36,7 +36,7 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 # BENCH_*.json numbers gain a trajectory instead of being overwritten.
 BENCH_FILES = ("BENCH_search.json", "BENCH_stream.json", "BENCH_api.json",
                "BENCH_sharded.json", "BENCH_obs.json", "BENCH_tune.json",
-               "BENCH_robust.json")
+               "BENCH_robust.json", "BENCH_serve.json")
 
 
 @functools.lru_cache(maxsize=1)
@@ -84,6 +84,7 @@ BENCHES = [
     ("obs_breakdown", lambda: F.bench_obs(quick=False)),
     ("tune_autotuner", lambda: F.bench_tune(smoke=True)),
     ("robust_durability", lambda: F.bench_robust(quick=False)),
+    ("serve_frontend", lambda: F.bench_serve(quick=False)),
 ]
 
 
@@ -126,6 +127,14 @@ def main() -> None:
                          "ladder under open-loop overload with per-tier "
                          "p50/p99 + recall vs declared floors (writes "
                          "BENCH_robust.json)")
+    ap.add_argument("--serve", action="store_true",
+                    help="serve-frontend smoke: open-loop Zipfian ramp "
+                         "through the degradation ladder (p50/p99 latency, "
+                         "queue wait, qps, shed/expired fractions, cache "
+                         "hit rate, tier occupancy), cache-on vs cache-off "
+                         "throughput at saturation, cold-traffic cache "
+                         "bit-parity and the inactive-slot page-accounting "
+                         "check (writes BENCH_serve.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="with --tune: smallest cutout + tightest budget "
                          "(the ci.sh tune tier)")
@@ -145,6 +154,8 @@ def main() -> None:
         benches = [("tune_autotuner", lambda: F.bench_tune(smoke=args.smoke))]
     elif args.robust:
         benches = [("robust_durability", lambda: F.bench_robust(quick=True))]
+    elif args.serve:
+        benches = [("serve_frontend", lambda: F.bench_serve(quick=True))]
     else:
         benches = BENCHES
     os.makedirs(args.out, exist_ok=True)

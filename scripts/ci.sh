@@ -260,6 +260,76 @@ print(f"robust guard: bit_parity={rec.get('recovery_bit_parity')} "
 sys.exit(0 if ok else 1)
 PY
 
+echo "== serve tier (continuous batching + hot-query cache + loadgen) =="
+# tests/test_serve.py also ran in tier-1 above; re-running it here keeps the
+# tier self-contained (it is the regression net for the §17 engine bugs)
+python -m pytest -q tests/test_serve.py tests/test_loadgen.py
+
+echo "== serve smoke (Zipf ramp through the ladder + cache arms) =="
+python -m benchmarks.run --serve --out results/bench
+
+echo "== serve guard (SLA bounds, cache >= no-cache, parity, page accounting) =="
+python - <<'PY'
+import json, sys
+rec = json.load(open("BENCH_serve.json"))
+ok = True
+dec = rec["declared"]
+ramp = rec["ramp"]
+p99 = ramp["latency_p99_s"]
+if p99 > dec["latency_p99_bound_s"]:
+    print(f"SERVE GUARD FAIL: ramp p99 latency {p99:.2f}s exceeds the "
+          f"declared bound {dec['latency_p99_bound_s']}s")
+    ok = False
+qps = ramp["queries_per_s"]
+if qps < dec["queries_per_s_floor"]:
+    print(f"SERVE GUARD FAIL: ramp completed-queries/s {qps:.2f} below the "
+          f"declared floor {dec['queries_per_s_floor']}")
+    ok = False
+if ramp["stepdowns"] < 1 or ramp["max_tier"] < 1:
+    print(f"SERVE GUARD FAIL: the ramp never tripped the degradation "
+          f"ladder (stepdowns={ramp['stepdowns']}, "
+          f"max_tier={ramp['max_tier']})")
+    ok = False
+if ramp["final_state"] != "ok":
+    print(f"SERVE GUARD FAIL: engine did not recover to 'ok' after the "
+          f"ramp drained (final_state={ramp['final_state']!r})")
+    ok = False
+hot = rec["hot"]
+spd = hot["speedup_cache_on_vs_off"]
+if spd < dec["hot_speedup_floor"]:
+    print(f"SERVE GUARD FAIL: cache-on throughput regressed below "
+          f"cache-off on the Zipfian load (x{spd:.2f} < "
+          f"x{dec['hot_speedup_floor']:.2f})")
+    ok = False
+elif spd < 1.0:
+    print(f"SERVE GUARD WARN: cache-on vs cache-off x{spd:.2f} < x1.00 — "
+          "within wall-clock noise at this vocab (the forward pass "
+          "dominates the step; see BENCH_serve.json declared comment)")
+if hot["searched_rows_on"] >= hot["searched_rows_off"]:
+    print(f"SERVE GUARD FAIL: the hot-query cache did not cut searched "
+          f"rows ({hot['searched_rows_on']} on vs "
+          f"{hot['searched_rows_off']} off at hit_rate="
+          f"{hot['cache_hit_rate']:.2f})")
+    ok = False
+if not rec["cache_cold_bit_parity"]:
+    print("SERVE GUARD FAIL: cache-on decode is NOT bit-identical to "
+          "cache-off on cold traffic (the cache changed what was decoded)")
+    ok = False
+if not rec["inactive_slot_pages_zero"]:
+    print("SERVE GUARD FAIL: pages were attributed to inactive decode "
+          "slots (searched rows != decode steps for a single request on "
+          "a 4-slot engine)")
+    ok = False
+print(f"serve guard: ramp_p99={p99:.2f}s qps={qps:.2f} "
+      f"shed={ramp['shed_frac']:.2f} expired={ramp['expired_frac']:.2f} "
+      f"hit_rate={ramp['cache']['hit_rate']:.2f} "
+      f"max_tier={ramp['max_tier']} "
+      f"cache_on_vs_off=x{spd:.2f} "
+      f"cold_parity={rec['cache_cold_bit_parity']} "
+      f"inactive_pages_zero={rec['inactive_slot_pages_zero']}")
+sys.exit(0 if ok else 1)
+PY
+
 echo "== stream smoke (insert throughput + latency vs delta fraction) =="
 python -m benchmarks.run --stream --out results/bench
 
@@ -286,3 +356,6 @@ cat BENCH_tune.json
 
 echo "== BENCH_robust.json =="
 cat BENCH_robust.json
+
+echo "== BENCH_serve.json =="
+cat BENCH_serve.json

@@ -101,6 +101,13 @@ GLOSSARY: Dict[str, tuple] = {
     "serve.decode_steps": ("counter", "engine decode steps"),
     "serve.pages": ("counter", "index pages touched by decode searches"),
     "serve.queue_wait_us": ("histogram", "submit -> slot admission µs"),
+    # hot-query result cache (serve/qcache.py, DESIGN.md §17)
+    "serve.cache_hits": ("counter", "decode searches served from the "
+                                    "hot-query result cache"),
+    "serve.cache_misses": ("counter", "decode searches that went to the "
+                                      "index (cache cold/absent rows)"),
+    "serve.cache_evictions": ("counter", "LRU evictions from the hot-query "
+                                         "result cache"),
     "serve.request_us": ("histogram", "submit -> completion µs"),
     "serve.step_us": ("histogram", "one engine step µs"),
     "serve.slot_occupancy": ("gauge", "active slots / batch slots"),

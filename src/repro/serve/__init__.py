@@ -1,3 +1,6 @@
 from .engine import DecodeEngine, DegradationPolicy, Request
+from .loadgen import Arrival, LoadgenConfig, generate, run_load
+from .qcache import HotQueryCache
 
-__all__ = ["DecodeEngine", "DegradationPolicy", "Request"]
+__all__ = ["DecodeEngine", "DegradationPolicy", "Request", "HotQueryCache",
+           "Arrival", "LoadgenConfig", "generate", "run_load"]

@@ -8,9 +8,19 @@ c-k-AMIP search over an index built on the embedding rows — probability-
 guaranteed approximate greedy decoding whose page/FLOP savings mirror the
 paper's Fig. 7/8. `logits_mode="exact"` is the baseline.
 
-Continuous batching: fixed B slots; finished sequences free their slot and
-a queued request is admitted with a single-request prefill scattered into
-the batch cache at the slot index.
+Continuous batching (DESIGN.md §17): fixed B slots, refilled from the
+admission queue on EVERY step. All requests admitted in one step are
+prefilled together — one `model_lib.prefill` call per distinct prompt
+length, scattered into the batch cache at their slot indices along the
+batch axis (located once per cache leaf by an `eval_shape` probe, so the
+scatter never guesses which axis is the batch). The decode-time search runs
+only over the ACTIVE slots (inactive rows are compacted out before the
+index is queried, so their stale hidden states cost zero pages), and a
+`HotQueryCache` — an LRU of (ids, scores) rows keyed on a quantized
+hidden-state fingerprint (serve/qcache.py) — short-circuits the two-phase
+search entirely for repeated/hot queries. Batch width, cache capacity and
+per-step refill limit resolve from the autotuner's shape-keyed cache
+(tune/space.py "serve" section) when not given explicitly.
 
 The embedding index is any MUTABLE `repro.api.Searcher` (DESIGN.md §9) —
 the engine is no longer hard-wired to one stream type. By default it builds
@@ -50,7 +60,9 @@ class Request:
     t_submit: float = 0.0
     t_admit: float = 0.0
     t_done: float = 0.0
-    deadline: float = 0.0             # absolute perf_counter s; 0.0 = none
+    # absolute perf_counter deadline; None is the ONLY no-deadline sentinel
+    # (0.0 is a real, already-passed deadline — it expires at admission)
+    deadline: Optional[float] = None
     expired: bool = False             # dropped/terminated past its deadline
 
 
@@ -106,7 +118,9 @@ class DecodeEngine:
                  index: Optional[api.Searcher] = None,
                  obs: bool = False, max_queue: Optional[int] = None,
                  degradation: Optional[DegradationPolicy] = None,
-                 default_deadline_s: Optional[float] = None):
+                 default_deadline_s: Optional[float] = None,
+                 result_cache: Optional[int] = None,
+                 max_refill: Optional[int] = None):
         if index is not None:
             # validated before any allocation: any MUTABLE Searcher works,
             # gated by capability rather than by concrete stream type
@@ -123,14 +137,24 @@ class DecodeEngine:
                     "promips_kwargs only tunes the default-built index; "
                     "with index= they would be silently ignored — configure "
                     "the injected searcher at its own build() instead")
-        if batch_slots is None:
-            # tuned default keyed on the logit-index shape (vocab, d_model);
-            # hand-picked fallback is 4 when the tuning cache has no entry
+        if batch_slots is None or result_cache is None or max_refill is None:
+            # tuned defaults keyed on the logit-index shape (vocab, d_model);
+            # hand-picked fallbacks (tune/space.py HAND_PICKED["serve"])
+            # apply when the tuning cache has no entry. Explicit kwargs win.
             from ..tune import cache as _tune_cache
-            batch_slots = int(_tune_cache.resolved(
-                "serve", cfg.vocab, cfg.d_model)["decode_batch_slots"])
+            tuned = _tune_cache.resolved("serve", cfg.vocab, cfg.d_model)
+            if batch_slots is None:
+                batch_slots = int(tuned["decode_batch_slots"])
+            if result_cache is None:
+                result_cache = int(tuned["result_cache_size"])
+            if max_refill is None:
+                max_refill = tuned["max_refill_per_step"]
         self.params, self.cfg = params, cfg
         self.b, self.max_len = batch_slots, max_len
+        if max_refill is not None and int(max_refill) < 1:
+            raise ValueError(f"max_refill must be >= 1 or None (= all free "
+                             f"slots), got {max_refill!r}")
+        self.max_refill = None if max_refill is None else int(max_refill)
         self.logits_mode = logits_mode
         self.eos_id = eos_id
         # serve-path telemetry (DESIGN.md §14): counters/histograms in the
@@ -140,11 +164,23 @@ class DecodeEngine:
         self.max_queue = max_queue
         self.cache = model_lib.init_cache(cfg, batch_slots, max_len,
                                           params["embed"].dtype)
+        # per-leaf batch axis of the decode cache, located structurally: the
+        # one axis whose extent tracks the batch size between two eval_shape
+        # probes (no guessing "the axis that happens to equal B", which
+        # breaks when n_layers or kv_len collide with the slot count)
+        probe = [jax.eval_shape(lambda b=b: model_lib.init_cache(
+            cfg, b, max_len, params["embed"].dtype)) for b in (1, 2)]
+        self._batch_axes = jax.tree.map(
+            lambda a, c: next((ax for ax in range(len(a.shape))
+                               if a.shape[ax] != c.shape[ax]), None),
+            probe[0], probe[1])
         self.active = np.zeros(batch_slots, bool)
         self.requests: List[Optional[Request]] = [None] * batch_slots
         self.queue: List[Request] = []
         self.steps = 0
         self.pages = 0
+        self.searched_rows = 0          # hidden rows actually sent to the
+        self.prefill_calls = 0          # index (active, cache-miss only)
         # degradation ladder + deadlines (DESIGN.md §16)
         self.policy = degradation
         self.default_deadline_s = default_deadline_s
@@ -163,6 +199,7 @@ class DecodeEngine:
             lambda p, c, t: model_lib.decode_step(p, cfg, c, t))
         self._decode_hidden = jax.jit(
             lambda p, c, t: model_lib.decode_step(p, cfg, c, t, return_hidden=True))
+        self.qcache = None
         if logits_mode == "promips":
             if index is not None:
                 self.index = index
@@ -197,6 +234,11 @@ class DecodeEngine:
                     mode="two_phase", verification="batched",
                     norm_adaptive=True, cs_prune=True, budget=promips_budget)
             self.search_runtime = dataclasses.replace(search_runtime, k=4)
+            # LRU hot-query result cache (serve/qcache.py): capacity 0
+            # disables; entries keyed (tier, f16-fingerprint) so a result
+            # computed at one budget tier is never replayed at another
+            from .qcache import HotQueryCache
+            self.qcache = HotQueryCache(int(result_cache))
         self._tier_budgets = (self._resolve_tier_budgets()
                               if degradation is not None else (None,))
 
@@ -288,6 +330,8 @@ class DecodeEngine:
             # index first: it validates aliveness, so a rejected refresh
             # (e.g. of a retired id) leaves the embed table untouched
             self.index.update(ids, rows)
+            # cached results may predate the refreshed rows — drop them all
+            self.qcache.clear()
         self.params = dict(self.params)
         self.params["embed"] = self.params["embed"].at[ids].set(
             rows.astype(self.params["embed"].dtype))
@@ -301,6 +345,9 @@ class DecodeEngine:
         ids = np.atleast_1d(np.asarray(ids, np.int64))
         self.index.delete(ids)
         self._retired[ids] = True  # admission prefill masks these too
+        # a cached result row may still name a retired id; invalidate so
+        # "never decoded again" survives the cache
+        self.qcache.clear()
         if self.obs:
             _metrics.counter("serve.tombstones").inc(len(ids))
 
@@ -335,9 +382,13 @@ class DecodeEngine:
         now = time.perf_counter()
         if deadline_s is None:
             deadline_s = self.default_deadline_s
+        # None is the only no-deadline sentinel: deadline_s=0.0 means
+        # "already expired" (dropped at admission, deadline_drops counted),
+        # not "no deadline"
         req = Request(prompt=prompt, max_new_tokens=max_new_tokens,
                       out_tokens=[], t_submit=now,
-                      deadline=now + deadline_s if deadline_s else 0.0)
+                      deadline=(now + deadline_s if deadline_s is not None
+                                else None))
         self.queue.append(req)
         if self.obs:
             _metrics.counter("serve.requests_submitted").inc()
@@ -365,58 +416,147 @@ class DecodeEngine:
             _metrics.counter("serve.deadline_expired").inc()
 
     def _admit(self):
-        for slot in range(self.b):
-            if self.active[slot] or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            # a request whose deadline passed while queued is dead on
-            # arrival: admitting it would burn a prefill + decode steps on
-            # an answer nobody is waiting for
-            while req.deadline and time.perf_counter() > req.deadline:
-                self._expire(req)
-                if not self.queue:
-                    return
-                req = self.queue.pop(0)
+        """Refill free slots from the queue (continuous batching): pop up to
+        ``max_refill`` live requests (expired ones are dropped at this
+        boundary — admitting them would burn a prefill + decode steps on an
+        answer nobody is waiting for), then prefill all of them TOGETHER —
+        one `model_lib.prefill` call per distinct prompt length, each
+        group's cache rows scattered into the batch cache at their slot
+        indices along the probe-located batch axis."""
+        admitted: List[Request] = []
+        free = [s for s in range(self.b) if not self.active[s]]
+        limit = len(free) if self.max_refill is None else \
+            min(len(free), self.max_refill)
+        for slot in free[:limit]:
+            req = None
+            while self.queue:
+                cand = self.queue.pop(0)
+                if (cand.deadline is not None
+                        and time.perf_counter() > cand.deadline):
+                    self._expire(cand)   # dead on arrival
+                    continue
+                req = cand
+                break
+            if req is None:
+                break
             req.slot = slot
-            batch = {"tokens": jnp.asarray(req.prompt[None, :])}
-            if self.cfg.frontend == "vision":
-                batch["patches"] = jnp.zeros(
-                    (1, self.cfg.frontend_len, self.cfg.d_model),
-                    self.params["embed"].dtype)
-            if self.cfg.frontend == "audio":
-                batch["frames"] = jnp.zeros(
-                    (1, self.cfg.frontend_len, self.cfg.d_model),
-                    self.params["embed"].dtype)
-            cache1, logits = model_lib.prefill(self.params, self.cfg, batch,
-                                               self.max_len)
+            admitted.append(req)
+        if not admitted:
+            return
+        by_len: dict = {}
+        for req in admitted:
+            by_len.setdefault(len(req.prompt), []).append(req)
+        for group in by_len.values():
+            self._prefill_group(group)
 
-            def insert(full, one):
-                if one.ndim == 0:
-                    return full
-                for ax in range(one.ndim):
-                    if full.shape[ax] == self.b and one.shape[ax] == 1:
-                        idx = [slice(None)] * one.ndim
-                        idx[ax] = slice(slot, slot + 1)
-                        return full.at[tuple(idx)].set(one.astype(full.dtype))
+    def _prefill_group(self, group: List[Request]) -> None:
+        """One batched prefill over same-length prompts; scatter each row
+        into its request's slot."""
+        g = len(group)
+        tokens = np.stack([r.prompt for r in group])
+        batch = {"tokens": jnp.asarray(tokens)}
+        if self.cfg.frontend == "vision":
+            batch["patches"] = jnp.zeros(
+                (g, self.cfg.frontend_len, self.cfg.d_model),
+                self.params["embed"].dtype)
+        if self.cfg.frontend == "audio":
+            batch["frames"] = jnp.zeros(
+                (g, self.cfg.frontend_len, self.cfg.d_model),
+                self.params["embed"].dtype)
+        cache_g, logits = model_lib.prefill(self.params, self.cfg, batch,
+                                            self.max_len)
+        self.prefill_calls += 1
+        slots = jnp.asarray(np.array([r.slot for r in group], np.int32))
+
+        def insert(full, one, ax):
+            if ax is None:        # leaf has no batch axis (static scalar)
                 return full
+            idx = [slice(None)] * len(full.shape)
+            idx[ax] = slots       # one advanced index keeps its axis slot
+            return full.at[tuple(idx)].set(one.astype(full.dtype))
 
-            self.cache = jax.tree.map(insert, self.cache, cache1)
-            lg = np.array(logits[0], np.float32)  # copy: jax buffers are RO
-            lg[self.cfg.vocab:] = -np.inf  # logits cover vocab_padded rows;
-            # the argmax must only land on a real vocab id
-            if self.logits_mode == "promips":
-                # retired vocab ids are tombstoned in the index; keep the
-                # dense prefill argmax consistent with the decode path
-                lg[: self.cfg.vocab][self._retired] = -np.inf
-            req.out_tokens.append(int(np.argmax(lg)))
-            req.t_admit = time.perf_counter()
+        self.cache = jax.tree.map(insert, self.cache, cache_g,
+                                  self._batch_axes)
+        lg = np.array(logits, np.float32)  # copy: jax buffers are RO
+        lg[:, self.cfg.vocab:] = -np.inf   # logits cover vocab_padded rows;
+        # the argmax must only land on a real vocab id
+        if self.logits_mode == "promips":
+            # retired vocab ids are tombstoned in the index; keep the
+            # dense prefill argmax consistent with the decode path
+            lg[:, : self.cfg.vocab][:, self._retired] = -np.inf
+        now = time.perf_counter()
+        for i, req in enumerate(group):
+            req.out_tokens.append(int(np.argmax(lg[i])))
+            req.t_admit = now
             if self.obs:
                 _metrics.histogram("serve.queue_wait_us").observe(
                     (req.t_admit - req.t_submit) * 1e6)
-            self.active[slot] = True
-            self.requests[slot] = req
+            self.active[req.slot] = True
+            self.requests[req.slot] = req
 
     # -- main loop -----------------------------------------------------------
+    def _promips_next_tokens(self, hidden) -> np.ndarray:
+        """Decode-search over the ACTIVE slots only, with the hot-query
+        cache in front of the index.
+
+        Inactive slots carry stale last-tokens whose hidden rows are junk —
+        searching them (the pre-§17 behavior) inflated `self.pages`, the
+        `serve.pages` counter and every per-query page figure a serve
+        benchmark would report. Active rows are compacted out of the batch
+        before the index is queried, so pages are attributed ONLY to slots
+        that decoded a real token; per-query results are unchanged by the
+        compaction because the batched verification backend is bit-identical
+        to the per-query scan (DESIGN.md §4).
+
+        Cache-hit rows skip the two-phase search entirely; misses are
+        searched as one compacted sub-batch and their (ids, scores) rows
+        inserted under the (tier, fingerprint) key."""
+        rt = self._tier_runtime()
+        active_idx = np.flatnonzero(self.active)
+        nxt = np.full(self.b, self.eos_id, np.int64)
+        cache_on = self.qcache.capacity > 0
+        miss_rows: List[int] = []
+        if cache_on:
+            h_np = np.asarray(hidden, np.float32)
+            keys = {}
+            for s in active_idx:
+                key = (self.tier, self.qcache.fingerprint(h_np[s]))
+                keys[s] = key
+                hit = self.qcache.get(key)
+                if hit is None:
+                    miss_rows.append(int(s))
+                else:
+                    nxt[s] = hit[0][0]
+            if self.obs:
+                _metrics.counter("serve.cache_hits").inc(
+                    len(active_idx) - len(miss_rows))
+                _metrics.counter("serve.cache_misses").inc(len(miss_rows))
+        else:
+            miss_rows = [int(s) for s in active_idx]
+        if miss_rows:
+            # compact to the searched rows on device (all-active full-width
+            # batches skip the gather: the common full-load fast path)
+            if len(miss_rows) == self.b:
+                queries = hidden
+            else:
+                queries = jnp.take(hidden, jnp.asarray(miss_rows), axis=0)
+            res = self.index.search(queries, k=rt.k, runtime=rt)
+            self.pages += res.stats["pages"]
+            self.searched_rows += len(miss_rows)
+            if self.obs:
+                _metrics.counter("serve.pages").inc(res.stats["pages"])
+            ev0 = self.qcache.evictions
+            for i, s in enumerate(miss_rows):
+                nxt[s] = res.ids[i, 0]
+                if cache_on:
+                    self.qcache.put(keys[s], res.ids[i], res.scores[i])
+            if self.obs and self.qcache.evictions > ev0:
+                _metrics.counter("serve.cache_evictions").inc(
+                    self.qcache.evictions - ev0)
+        # a slot starved by a finite promips_budget (stats.exhausted)
+        # returns id -1; end that sequence instead of decoding token -1
+        return np.where(nxt >= 0, nxt, self.eos_id)
+
     def step(self) -> bool:
         """One engine step: admit, decode one token for all active slots.
         Every step feeds the degradation ladder (when a policy is set): step
@@ -438,15 +578,7 @@ class DecodeEngine:
         if self.logits_mode == "promips":
             hidden, self.cache = self._decode_hidden(
                 self.params, self.cache, jnp.asarray(tokens))
-            rt = self._tier_runtime()
-            res = self.index.search(hidden, k=rt.k, runtime=rt)
-            self.pages += res.stats["pages"]
-            if self.obs:
-                _metrics.counter("serve.pages").inc(res.stats["pages"])
-            nxt = res.ids[:, 0]
-            # a slot starved by a finite promips_budget (stats.exhausted)
-            # returns id -1; end that sequence instead of decoding token -1
-            nxt = np.where(nxt >= 0, nxt, self.eos_id)
+            nxt = self._promips_next_tokens(hidden)
         else:
             logits, self.cache = self._decode(self.params, self.cache,
                                               jnp.asarray(tokens))
@@ -462,9 +594,13 @@ class DecodeEngine:
                 continue
             req = self.requests[slot]
             req.out_tokens.append(int(nxt[slot]))
-            done = (len(req.out_tokens) >= req.max_new_tokens
+            # contract: max_new_tokens counts DECODED tokens, i.e. tokens
+            # emitted after the prefill argmax (out_tokens[0]). The old
+            # `len(out_tokens) >= max_new_tokens` check silently handed a
+            # request asking for N new tokens only N-1 decode steps.
+            done = (len(req.out_tokens) - 1 >= req.max_new_tokens
                     or int(nxt[slot]) == self.eos_id)
-            past_deadline = bool(req.deadline) and now > req.deadline
+            past_deadline = req.deadline is not None and now > req.deadline
             if done or past_deadline:
                 self.active[slot] = False
                 self.requests[slot] = None
@@ -540,9 +676,13 @@ class DecodeEngine:
         rides along so a latched background-compaction error is visible on
         every scrape."""
         snap = {"steps": self.steps, "pages": self.pages,
+                "searched_rows": self.searched_rows,
+                "prefill_calls": self.prefill_calls,
                 "queue_depth": len(self.queue),
                 "active_slots": int(self.active.sum()),
                 "tier": self.tier,
+                "result_cache": (self.qcache.stats()
+                                 if self.qcache is not None else None),
                 "maintenance": self._maintenance()}
         snap.update({name: val for name, val in _metrics.snapshot().items()
                      if name.startswith("serve.")})

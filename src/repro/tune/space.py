@@ -73,6 +73,14 @@ KNOBS: Tuple[Knob, ...] = (
          "a valid point — but weakens r0; requires rebuild)"),
     Knob("decode_batch_slots", "serve", 4, (2, 4, 8),
          "serve-engine decode batch slots (continuous-batching width)"),
+    Knob("result_cache_size", "serve", 256, (0, 64, 256, 1024),
+         "LRU hot-query result-cache capacity for the decode search "
+         "(serve/qcache.py; 0 disables — cold traffic is bit-identical "
+         "either way, so the knob only trades memory for Zipfian hit rate)"),
+    Knob("max_refill_per_step", "serve", None, (1, 2, 4),
+         "cap on requests admitted per engine step (None = refill every "
+         "free slot; lower bounds the per-step prefill burst at the cost "
+         "of queue wait)"),
 )
 
 # The pre-tuner defaults, by cache section: `tune.cache.resolved` overlays a
@@ -83,7 +91,8 @@ HAND_PICKED = {
     "runtime": {"verification": "fused", "dense_frac": 0.9, "tile_cap": None,
                 "prefilter_eps": 1.0},
     "build": {"page_bytes": 4096, "max_probe_groups": None},
-    "serve": {"decode_batch_slots": 4},
+    "serve": {"decode_batch_slots": 4, "result_cache_size": 256,
+              "max_refill_per_step": None},
 }
 
 

@@ -1,0 +1,148 @@
+"""Open-loop Zipfian load generator (serve/loadgen.py, DESIGN.md §17)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serve import DecodeEngine, LoadgenConfig, generate, run_load
+from repro.serve.engine import DegradationPolicy
+from repro.serve.loadgen import zipf_probs
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_zipf_probs_properties():
+    p = zipf_probs(16, 1.1)
+    assert p.shape == (16,)
+    assert np.isclose(p.sum(), 1.0)
+    assert np.all(np.diff(p) < 0)          # strictly hotter head
+    u = zipf_probs(8, 0.0)                 # s=0 degenerates to uniform
+    assert np.allclose(u, 1.0 / 8)
+
+
+def test_generate_is_deterministic_and_in_range():
+    cfg = LoadgenConfig(rate_qps=100.0, n_requests=40, zipf_s=1.2,
+                        pool_size=6, prompt_lens=(3, 9),
+                        max_new_tokens_choices=(2, 5),
+                        deadline_mix=((None, 1.0), (0.25, 1.0)), seed=3)
+    a1, a2 = generate(cfg, vocab=512), generate(cfg, vocab=512)
+    assert len(a1) == 40
+    assert [x.t for x in a1] == [x.t for x in a2]
+    assert [x.pool_id for x in a1] == [x.pool_id for x in a2]
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a1, a2))
+    pool = {}
+    for x in a1:
+        assert x.t > 0 and 0 <= x.pool_id < 6
+        assert 3 <= len(x.prompt) <= 9
+        assert np.all((x.prompt >= 1) & (x.prompt < 512))
+        assert x.max_new_tokens in (2, 5)
+        assert x.deadline_s in (None, 0.25)
+        # same pool_id => same prompt object contents every arrival
+        if x.pool_id in pool:
+            assert np.array_equal(pool[x.pool_id], x.prompt)
+        pool[x.pool_id] = x.prompt
+    assert sorted(x.t for x in a1) == [x.t for x in a1]  # monotone schedule
+
+
+def test_zipf_skew_concentrates_on_head():
+    cfg = LoadgenConfig(rate_qps=100.0, n_requests=400, zipf_s=1.5,
+                        pool_size=16, seed=0)
+    picks = np.bincount([a.pool_id for a in generate(cfg, 512)], minlength=16)
+    assert picks[0] == picks.max()
+    assert picks[0] > 400 / 16 * 2          # far above the uniform share
+
+
+def test_ramp_compresses_late_gaps():
+    base = dict(rate_qps=50.0, n_requests=200, pool_size=4, seed=7)
+    flat = generate(LoadgenConfig(ramp=1.0, **base), 512)
+    ramped = generate(LoadgenConfig(ramp=10.0, **base), 512)
+    # a 10x ramp makes the BACK half of the schedule much denser than the
+    # front half; the flat schedule has no such asymmetry on average
+    def half_span(arr, lo, hi):
+        return arr[hi].t - arr[lo].t
+    r_front = half_span(ramped, 0, 99)
+    r_back = half_span(ramped, 100, 199)
+    assert r_back < r_front / 2
+    assert ramped[-1].t < flat[-1].t
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        LoadgenConfig(rate_qps=0.0)
+    with pytest.raises(ValueError):
+        LoadgenConfig(n_requests=0)
+    with pytest.raises(ValueError):
+        LoadgenConfig(zipf_s=-0.1)
+    with pytest.raises(ValueError):
+        LoadgenConfig(ramp=0.0)
+    with pytest.raises(ValueError):
+        LoadgenConfig(prompt_lens=(5, 3))
+    with pytest.raises(ValueError):
+        LoadgenConfig(max_new_tokens_choices=())
+    with pytest.raises(ValueError):
+        LoadgenConfig(deadline_mix=())
+
+
+def test_run_load_completes_and_summarizes(small_model):
+    cfg, params = small_model
+    eng = DecodeEngine(params, cfg, batch_slots=2, max_len=64)
+    lg = LoadgenConfig(rate_qps=200.0, n_requests=8, pool_size=3,
+                       prompt_lens=(4, 6), max_new_tokens_choices=(3,),
+                       seed=1)
+    arrivals = generate(lg, cfg.vocab)
+    s = run_load(eng, arrivals, max_wall_s=60.0)
+    assert s["requests"] == 8 and s["completed"] == 8
+    assert s["shed_frac"] == 0.0 and s["expired_frac"] == 0.0
+    assert s["decoded_tokens"] == 8 * 3
+    assert s["queries_per_s"] > 0 and s["wall_s"] > 0
+    assert s["latency_p99_s"] >= s["latency_p50_s"] > 0
+    assert s["final_state"] == "ok"
+    occ = s["tier_occupancy"]
+    assert occ and abs(sum(occ.values()) - 1.0) < 1e-9
+    # every arrival was annotated with its live Request
+    assert all(a.request is not None and not a.shed for a in arrivals)
+    assert all(len(a.request.out_tokens) == 4 for a in arrivals)
+
+
+def test_run_load_accounts_shed_and_expired(small_model):
+    """Saturating arrivals against a tiny engine with max_queue=1 must shed
+    some requests at admission; a 0-second deadline mix must expire the
+    rest of the queued ones — and the two fractions must reconcile with
+    completed counts."""
+    cfg, params = small_model
+    eng = DecodeEngine(params, cfg, batch_slots=1, max_len=64, max_queue=1)
+    lg = LoadgenConfig(rate_qps=1e4, n_requests=10, pool_size=2,
+                       prompt_lens=(4, 4), max_new_tokens_choices=(2,),
+                       deadline_mix=((0.0, 1.0),), seed=2)
+    arrivals = generate(lg, cfg.vocab)
+    s = run_load(eng, arrivals, max_wall_s=60.0)
+    assert s["shed_frac"] > 0
+    n_shed = sum(a.shed for a in arrivals)
+    n_expired = sum(a.request.expired for a in arrivals if a.request)
+    assert n_shed + n_expired + s["completed"] == 10
+    assert s["expired_frac"] == n_expired / 10
+    assert not eng.queue and not eng.active.any()
+
+
+def test_run_load_trips_degradation_ladder(small_model):
+    cfg, params = small_model
+    pol = DegradationPolicy(tiers=(1.0, 0.5), recall_floors=(0.95, 0.8),
+                            queue_high=2, queue_low=0, patience=1,
+                            recovery=1000)
+    eng = DecodeEngine(params, cfg, batch_slots=1, max_len=64,
+                       logits_mode="promips",
+                       promips_kwargs=dict(m=8, c=0.95, p=0.95),
+                       degradation=pol)
+    lg = LoadgenConfig(rate_qps=1e4, n_requests=8, pool_size=2,
+                       prompt_lens=(4, 4), max_new_tokens_choices=(4,),
+                       seed=4)
+    s = run_load(eng, generate(lg, cfg.vocab), max_wall_s=120.0)
+    assert s["stepdowns"] >= 1 and s["max_tier"] >= 1
+    assert "1" in s["tier_occupancy"] and s["tier_occupancy"]["1"] > 0
+    assert "cache" in s            # promips engine reports qcache stats

@@ -162,7 +162,8 @@ def test_page_accounting_multi_request(small_model):
             break
         expected += per_step(active)
     assert eng.pages == expected and eng.pages > 0
-    assert all(len(r.out_tokens) == 4 for r in reqs)
+    # max_new_tokens=4 DECODED tokens + the prefill argmax = 5 total
+    assert all(len(r.out_tokens) == 5 for r in reqs)
 
 
 def test_engine_delete_retires_vocab_ids(small_model):
@@ -243,3 +244,268 @@ def test_engine_update_refreshes_embeddings(small_model):
     eng.join_compaction()
     assert boosted in r2.out_tokens, \
         "refreshed delta row must be searchable from the next decode step"
+
+
+def _scripted_hidden(eng, d, seed=7):
+    """Replace the jit'd hidden-state decode with a deterministic per-token
+    map (token id -> fixed random vector): each slot's query row depends
+    ONLY on its own last token, never on the batch composition, so search
+    results and page counts are exactly comparable across engines with
+    different slot counts."""
+    def fake(params, cache, tokens):
+        toks = np.asarray(tokens)[:, 0]
+        rows = np.stack([np.random.RandomState(seed + int(t)).randn(d)
+                         for t in toks]).astype(np.float32)
+        return jnp.asarray(rows), cache
+    eng._decode_hidden = fake
+
+
+def _promips_engine(small_model, **kw):
+    cfg, params = small_model
+    kw.setdefault("promips_kwargs", dict(m=8, c=0.95, p=0.95))
+    return DecodeEngine(params, cfg, max_len=64, logits_mode="promips", **kw)
+
+
+# -- decode-loop bug regressions (all three fail on the pre-§17 engine) ------
+
+def test_inactive_slots_cost_zero_pages(small_model):
+    """Regression: the promips decode search must not touch (or account)
+    pages for inactive slots. A single request on a 4-slot engine costs
+    exactly what it costs on a 1-slot engine, and decodes the same
+    tokens."""
+    cfg, params = small_model
+    prompt = np.arange(1, 7).astype(np.int32)
+    runs = {}
+    for b in (1, 4):
+        eng = _promips_engine(small_model, batch_slots=b, result_cache=0)
+        _scripted_hidden(eng, cfg.d_model)
+        r = eng.submit(prompt, max_new_tokens=5)
+        eng.run()
+        runs[b] = (r.out_tokens, eng.pages, eng.searched_rows)
+    assert runs[4][0] == runs[1][0], "tokens must not depend on slot count"
+    assert runs[4][1] == runs[1][1] > 0, \
+        "pages attributed to inactive slots must be zero"
+    assert runs[4][2] == runs[1][2], "only active rows may be searched"
+
+
+def test_max_new_tokens_counts_decoded_tokens(small_model):
+    """Regression: a request asking for N new tokens gets N decode steps
+    (the prefill argmax in out_tokens[0] does not count against N)."""
+    cfg, params = small_model
+    eng = DecodeEngine(params, cfg, batch_slots=1, max_len=64)
+    _scripted_decode(eng, cfg.vocab)  # token 5 forever, never EOS
+    rng = np.random.RandomState(0)
+    r = eng.submit(rng.randint(1, cfg.vocab, size=6), max_new_tokens=3)
+    eng.run()
+    assert len(r.out_tokens) == 1 + 3, \
+        "N decoded tokens after the prefill argmax"
+    assert r.out_tokens[1:] == [5, 5, 5]
+
+
+def test_zero_deadline_expires_at_admission(small_model):
+    """Regression: deadline_s=0.0 means 'already expired', not 'no
+    deadline' (None is the only no-deadline sentinel). Also covers the
+    all-queued-requests-expired admission path: _admit must expire every
+    one and drain cleanly."""
+    cfg, params = small_model
+    eng = DecodeEngine(params, cfg, batch_slots=2, max_len=64)
+    rng = np.random.RandomState(1)
+    reqs = [eng.submit(rng.randint(1, cfg.vocab, size=6), max_new_tokens=4,
+                       deadline_s=0.0) for _ in range(3)]
+    assert all(r is not None and r.deadline is not None for r in reqs)
+    stepped = eng.step()
+    assert stepped is False, "nothing was admitted, nothing decoded"
+    assert all(r.expired and not r.out_tokens for r in reqs)
+    assert eng.deadline_drops == 3
+    assert not eng.active.any() and not eng.queue
+
+
+# -- admission/expiry path coverage ------------------------------------------
+
+def test_deadline_crossing_between_admit_and_first_step(small_model):
+    """A deadline crossed after admission but before the first decode step
+    terminates the request at that step, with partial tokens retained."""
+    import time
+    cfg, params = small_model
+    eng = DecodeEngine(params, cfg, batch_slots=1, max_len=64)
+    _scripted_decode(eng, cfg.vocab)
+    rng = np.random.RandomState(2)
+    r = eng.submit(rng.randint(1, cfg.vocab, size=6), max_new_tokens=50,
+                   deadline_s=30.0)
+    eng._admit()
+    assert r.slot == 0 and len(r.out_tokens) == 1  # prefill argmax landed
+    r.deadline = time.perf_counter()               # cross it before step 1
+    eng.step()
+    assert r.expired and len(r.out_tokens) == 2, "partial tokens retained"
+    assert not eng.active.any() and eng.requests[0] is None
+    assert eng.deadline_drops == 1
+
+
+def test_health_shedding_exactly_while_backlog_at_cap(small_model):
+    cfg, params = small_model
+    eng = DecodeEngine(params, cfg, batch_slots=1, max_len=64,
+                       max_queue=2)
+    _scripted_decode(eng, cfg.vocab)
+    rng = np.random.RandomState(3)
+    sub = lambda: eng.submit(rng.randint(1, cfg.vocab, size=6),
+                             max_new_tokens=50)
+    assert eng.health()["state"] == "ok"
+    assert sub() is not None and eng.health()["state"] == "ok"
+    assert sub() is not None
+    assert eng.health()["state"] == "shedding", "backlog at max_queue"
+    assert sub() is None and eng.shed == 1      # cap enforced
+    eng.step()                                   # one admitted off the queue
+    assert len(eng.queue) == 1
+    assert eng.health()["state"] == "ok", "below the cap: no longer shedding"
+
+
+# -- continuous batching (batched prefill + refill knob) ---------------------
+
+def test_batched_prefill_one_call_per_length_group(small_model):
+    """All requests admitted in one step prefill together: one
+    model_lib.prefill call per distinct prompt length, and the emitted
+    prefill tokens match the one-request-at-a-time path."""
+    cfg, params = small_model
+    rng = np.random.RandomState(4)
+    prompts = [rng.randint(1, cfg.vocab, size=s) for s in (6, 6, 8, 6)]
+
+    eng = DecodeEngine(params, cfg, batch_slots=4, max_len=64)
+    _scripted_decode(eng, cfg.vocab)
+    reqs = [eng.submit(p, max_new_tokens=2) for p in prompts]
+    eng.step()
+    assert eng.prefill_calls == 2, "len-6 group (3 reqs) + len-8 group"
+    assert eng.active.sum() == 4 and [r.slot for r in reqs] == [0, 1, 2, 3]
+
+    # sequential reference: one engine, one slot, one prefill per request
+    ref_tokens = []
+    for p in prompts:
+        e1 = DecodeEngine(params, cfg, batch_slots=1, max_len=64)
+        _scripted_decode(e1, cfg.vocab)
+        r = e1.submit(p, max_new_tokens=2)
+        e1.step()
+        ref_tokens.append(r.out_tokens[0])
+    assert [r.out_tokens[0] for r in reqs] == ref_tokens
+
+
+def test_max_refill_caps_admissions_per_step(small_model):
+    cfg, params = small_model
+    eng = DecodeEngine(params, cfg, batch_slots=4, max_len=64,
+                       max_refill=1)
+    _scripted_decode(eng, cfg.vocab)
+    rng = np.random.RandomState(5)
+    for _ in range(3):
+        eng.submit(rng.randint(1, cfg.vocab, size=6), max_new_tokens=50)
+    for expect in (1, 2, 3):
+        eng.step()
+        assert int(eng.active.sum()) == expect
+    with pytest.raises(ValueError, match="max_refill"):
+        DecodeEngine(params, cfg, batch_slots=2, max_len=64, max_refill=0)
+
+
+def test_refill_happens_every_step_under_turnover(small_model):
+    """A freed slot is refilled from the queue on the very next step even
+    while other slots keep decoding (continuous batching, not fixed
+    admission rounds)."""
+    cfg, params = small_model
+    eng = DecodeEngine(params, cfg, batch_slots=2, max_len=64)
+    _scripted_decode(eng, cfg.vocab, eos_for={0: 1})
+    rng = np.random.RandomState(6)
+    reqs = [eng.submit(rng.randint(1, cfg.vocab, size=6), max_new_tokens=50)
+            for _ in range(3)]
+    eng.step()                       # both admitted
+    eng.step()                       # slot 0 EOSes
+    assert eng.active.tolist() == [False, True]
+    eng.step()                       # freed slot refilled immediately
+    assert eng.active.tolist() == [True, True]
+    assert reqs[2].slot == 0
+
+
+# -- hot-query result cache --------------------------------------------------
+
+def test_cache_bit_parity_on_cold_traffic(small_model):
+    """Cache-on decoding is bit-identical to cache-off on cold (all
+    distinct) traffic — the cache's correctness contract."""
+    cfg, params = small_model
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(1, cfg.vocab, size=6) for _ in range(4)]
+    outs = {}
+    for rc in (0, 64):
+        eng = _promips_engine(small_model, batch_slots=2, result_cache=rc)
+        reqs = [eng.submit(p, max_new_tokens=4) for p in prompts]
+        eng.run()
+        outs[rc] = [r.out_tokens for r in reqs]
+        if rc:
+            st = eng.qcache.stats()
+            assert st["misses"] == eng.searched_rows
+            assert st["hits"] + st["misses"] >= eng.searched_rows
+    assert outs[64] == outs[0]
+
+
+def test_cache_hits_on_repeated_prompt(small_model):
+    """A repeated prompt drives bit-identical hidden states through the
+    decode loop: the second pass is served from the cache (searches
+    skipped) and decodes the identical token stream."""
+    cfg, params = small_model
+    rng = np.random.RandomState(8)
+    prompt = rng.randint(1, cfg.vocab, size=6)
+    eng = _promips_engine(small_model, batch_slots=1, result_cache=256)
+    r1 = eng.submit(prompt, max_new_tokens=5)
+    eng.run()
+    searched_cold = eng.searched_rows
+    assert eng.qcache.hits == 0
+    r2 = eng.submit(prompt, max_new_tokens=5)
+    eng.run()
+    assert r2.out_tokens == r1.out_tokens
+    assert eng.qcache.hits > 0, "hot prompt must hit the result cache"
+    assert eng.searched_rows < 2 * searched_cold, "hits skip the search"
+
+
+def test_cache_eviction_and_mutation_invalidation(small_model):
+    cfg, params = small_model
+    rng = np.random.RandomState(9)
+    eng = _promips_engine(small_model, batch_slots=1, result_cache=2)
+    for _ in range(3):
+        eng.submit(rng.randint(1, cfg.vocab, size=6), max_new_tokens=4)
+    eng.run()
+    assert eng.qcache.evictions > 0, "capacity 2 must evict under churn"
+    assert len(eng.qcache) == 2
+    hits, misses = eng.qcache.hits, eng.qcache.misses
+    # mutation wholesale-invalidates (a cached row may name a stale id)
+    eng.delete([1])
+    assert len(eng.qcache) == 0
+    assert (eng.qcache.hits, eng.qcache.misses) == (hits, misses), \
+        "invalidation is not an eviction and touches no counters"
+    d = cfg.d_model
+    eng.update([2], np.ones((1, d), np.float32))
+    assert len(eng.qcache) == 0
+
+
+def test_cache_counters_in_metrics_snapshot(small_model):
+    from repro.obs import metrics
+    cfg, params = small_model
+    metrics.reset()
+    rng = np.random.RandomState(10)
+    prompt = rng.randint(1, cfg.vocab, size=6)
+    eng = _promips_engine(small_model, batch_slots=1, result_cache=64,
+                          obs=True)
+    for _ in range(2):
+        eng.submit(prompt, max_new_tokens=4)
+    eng.run()
+    snap = eng.metrics_snapshot()
+    assert snap["serve.cache_hits"] == eng.qcache.hits > 0
+    assert snap["serve.cache_misses"] == eng.qcache.misses > 0
+    assert snap["result_cache"]["hit_rate"] == eng.qcache.hit_rate
+    assert snap["searched_rows"] == eng.searched_rows
+    metrics.reset()
+
+
+def test_result_cache_resolves_from_tune_space_defaults(small_model):
+    """result_cache/max_refill default from the autotuner's serve section
+    (hand-picked values when the cache has no entry for this shape)."""
+    from repro.tune import space
+    eng = _promips_engine(small_model, batch_slots=2)
+    assert eng.qcache.capacity == \
+        space.HAND_PICKED["serve"]["result_cache_size"]
+    assert eng.max_refill == space.HAND_PICKED["serve"]["max_refill_per_step"]
+    eng2 = _promips_engine(small_model, batch_slots=2, result_cache=0)
+    assert eng2.qcache.capacity == 0
